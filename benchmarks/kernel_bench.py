@@ -1,0 +1,108 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (not
+representative of TPU), so wall-clock timings are taken on the jnp
+REFERENCE paths (the computation the kernels implement) and the derived
+column reports the analytic TPU-roofline time for the same op — the
+number the BlockSpec tiling is designed against.
+
+CSV: name,us_per_call,derived
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def bench_fedavg():
+    from repro.kernels import ref
+    C, N = 16, 2_000_000
+    stacked = jax.random.normal(jax.random.PRNGKey(0), (C, N))
+    w = jnp.full((C,), 1.0 / C)
+    f = jax.jit(ref.fedavg_agg_ref)
+    us = _time(f, stacked, w)
+    hbm_bytes = (C * N + N) * 4
+    derived = f"tpu_roofline_us={hbm_bytes / HBM_BW * 1e6:.1f}"
+    return [("fedavg_agg_C16_N2M", us, derived)]
+
+
+def bench_attention():
+    from repro.kernels import ref
+    rows = []
+    for S in (512, 1024):
+        BH, d = 8, 128
+        q = jax.random.normal(jax.random.PRNGKey(0), (BH, S, d), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(1), (BH, S, d), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(2), (BH, S, d), jnp.float32)
+        f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+        us = _time(f, q, k, v)
+        flops = 4 * BH * S * S * d
+        derived = f"tpu_roofline_us={flops / PEAK_FLOPS * 1e6:.1f}"
+        rows.append((f"flash_attention_S{S}_d{d}", us, derived))
+    return rows
+
+
+def bench_ssm():
+    from repro.models.ssm import ssd_chunked
+    B, S, H, dh, N = 2, 2048, 8, 64, 64
+    xh = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, dh))
+    a = -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, H)))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(2), (B, S, H)))
+    Bm = jax.random.normal(jax.random.PRNGKey(3), (B, S, N))
+    Cm = jax.random.normal(jax.random.PRNGKey(4), (B, S, N))
+    f = jax.jit(lambda *a_: ssd_chunked(*a_, chunk=128))
+    us = _time(f, xh, a, dt, Bm, Cm)
+    Q = 128
+    flops = B * H * (S // Q) * (2 * Q * Q * N + 2 * Q * Q * dh
+                                + 4 * Q * N * dh)
+    derived = f"tpu_roofline_us={flops / PEAK_FLOPS * 1e6:.2f}"
+    return [(f"ssm_scan_S{S}_H{H}_N{N}", us, derived)]
+
+
+def bench_aggregation_strategies():
+    """Host-level aggregation operators at CNN scale (paper's hot ops)."""
+    from repro.core import strategies, topology
+    from repro.models.cnn import init_cnn
+    clients = [init_cnn(jax.random.PRNGKey(i)) for i in range(10)]
+    groups = topology.hierarchical_groups(10, 2)
+    nbrs = topology.ring_neighbors(10, 2)
+    rows = []
+    for name, fn in [
+        ("fedavg_10c", lambda: strategies.fedavg(clients)),
+        ("hfl_two_tier_10c", lambda: strategies.hfl_aggregate(clients, groups)),
+        ("gossip_round_10c", lambda: strategies.gossip_round(clients, nbrs)),
+        ("cfl_merge", lambda: strategies.cfl_merge(clients[0], clients[1], 0.5)),
+    ]:
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            out = fn()
+            jax.tree.leaves(out)[0].block_until_ready()
+        rows.append((name, (time.perf_counter() - t0) / 10 * 1e6,
+                     "host_level"))
+    return rows
+
+
+def main():
+    rows = (bench_fedavg() + bench_attention() + bench_ssm()
+            + bench_aggregation_strategies())
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

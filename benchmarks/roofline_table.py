@@ -1,0 +1,45 @@
+"""Render the roofline table from the dry-run JSON cache
+(experiments/dryrun/*.json) — one row per (arch x shape x mesh)."""
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_results(dryrun_dir=DRYRUN_DIR):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r):
+    if not r.get("ok"):
+        return (f"{r.get('arch','?')},{r.get('shape', r.get('fl_strategy','?'))},"
+                f"{r.get('mesh','?')},FAILED,,,,,,")
+    ro = r["roofline"]
+    name = r.get("shape") or f"fl_{r.get('fl_strategy')}"
+    return (f"{r['arch']},{name},{r['mesh']},"
+            f"{ro['compute_s']*1e3:.2f},{ro['memory_s']*1e3:.2f},"
+            f"{ro['collective_s']*1e3:.2f},{ro['dominant']},"
+            f"{r['memory']['peak_bytes']/1e9:.2f},"
+            f"{r.get('useful_flops_ratio', 0):.2f},"
+            f"{r.get('opts','')}")
+
+
+def main():
+    rows = load_results()
+    print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,dominant,"
+          "hbm_peak_gb,useful_flops_ratio,opts")
+    for r in rows:
+        print(fmt_row(r))
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    print(f"# {n_ok}/{len(rows)} combos compiled OK")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Checkpointing: flatten a params/opt-state pytree to a .npz + JSON
+metadata (paths, shapes, dtypes, step counter). Dependency-free and
+restart-safe (write to tmp then rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":      # npz has no native bf16
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra_meta: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    meta = {
+        "step": step,
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        **(extra_meta or {}),
+    }
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    with open(path.replace(".npz", ".json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return path
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(p for p in os.listdir(directory)
+                   if p.startswith("ckpt_") and p.endswith(".npz"))
+    return os.path.join(directory, ckpts[-1]) if ckpts else None
+
+
+def restore_checkpoint(path: str, template: Any) -> Any:
+    """Restore into the structure of `template` (shape-checked)."""
+    data = np.load(path)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in p)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, [l for _, l in
+                                                  zip(flat_t, leaves)])
+
+
+def checkpoint_step(path: str) -> int:
+    with open(path.replace(".npz", ".json")) as f:
+        return json.load(f)["step"]

@@ -1,0 +1,60 @@
+"""Federated-learning configuration types."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+STRATEGIES = ("hfl", "afl", "cfl")
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    """Configuration for one federated training run.
+
+    strategy:
+      hfl — Centralized Hierarchical FL: clients -> group servers -> global
+            server, two-tier FedAvg (paper §2.1).
+      afl — Decentralized Aggregated FL: a sampled subset of peers trains
+            locally then aggregates directly (paper §2.2). `afl_mode`
+            selects the aggregation mechanism: "fedavg" (masked weighted
+            average over participants) or "gossip" (ring neighbor
+            averaging via collective-permute — the scalable decentralized
+            variant; see DESIGN.md §2).
+      cfl — Decentralized Continual FL: local models updated continually,
+            merged into the evolving global parameters (paper §2.3). At
+            host scale this is the sequential client-to-client pass; at
+            pod scale it is the EMA-style continual merge (adaptation
+            noted in DESIGN.md).
+    """
+    strategy: str = "afl"
+    num_clients: int = 8
+    # hfl
+    num_groups: int = 2
+    hfl_global_every: int = 2      # rounds between GLOBAL-tier aggregations
+                                   # (groups refine locally in between —
+                                   # the hierarchy's dissemination lag)
+    # afl
+    participation: float = 0.5     # fraction of clients sampled per round
+    afl_mode: str = "fedavg"       # fedavg | gossip
+    gossip_neighbors: int = 2      # ring degree for gossip mode
+    # cfl
+    merge_alpha: float = 0.5       # continual-merge rate
+    # local optimization
+    local_epochs: int = 1
+    local_batch_size: int = 32
+    lr: float = 0.05
+    momentum: float = 0.9
+    rounds: int = 20
+    seed: int = 0
+    # pod-scale trainer
+    local_steps: int = 4           # K local steps between aggregation events
+    aggregate_every: int = 1       # rounds between aggregation events
+
+    def __post_init__(self):
+        assert self.strategy in STRATEGIES, self.strategy
+        assert self.num_clients % self.num_groups == 0, \
+            "clients must divide evenly into groups"
+
+    @property
+    def clients_per_group(self) -> int:
+        return self.num_clients // self.num_groups

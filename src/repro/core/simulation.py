@@ -1,0 +1,298 @@
+"""Host-level federated-learning simulation — the paper-faithful driver.
+
+Runs the paper's CNN under HFL / AFL / CFL on client-partitioned data and
+reports exactly the paper's measurement suite (Tables 1-2): training /
+testing accuracy, build time, classification time, precision, recall, F1,
+balanced accuracy, confusion matrix, and per-round accuracy/loss curves
+(Figures 9/11).
+
+Timing protocol (paper §1.2.6-§1.2.7, interpretation noted in DESIGN.md):
+* Build time — wall-clock of the full federated training procedure.
+* Classification time — wall-clock to produce test-set predictions from
+  the *served* model. For centralized HFL the served model must first be
+  materialized at the global server (final two-tier aggregation +
+  dissemination); for AFL an aggregate over the last participant set; for
+  CFL the continually-merged model is already serving-ready. This mirrors
+  the paper's definition where DFL classifies with on-device models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import strategies, topology
+from repro.core.fl_types import FLConfig
+from repro.core.metrics import Timer, classification_metrics
+from repro.data.partition import iid_partition
+from repro.models import cnn as cnn_mod
+from repro.optim import optimizers
+
+
+@dataclasses.dataclass
+class FLResult:
+    strategy: str
+    dataset: str
+    train_accuracy: float
+    test_accuracy: float
+    build_time_s: float
+    classification_time_s: float
+    precision: float
+    recall: float
+    f1: float
+    balanced_accuracy: float
+    confusion: np.ndarray
+    round_train_acc: List[float]
+    round_train_loss: List[float]
+    round_test_acc: List[float]
+
+    def row(self) -> Dict[str, float]:
+        return {k: getattr(self, k) for k in
+                ("strategy", "dataset", "train_accuracy", "test_accuracy",
+                 "build_time_s", "classification_time_s", "precision",
+                 "recall", "f1", "balanced_accuracy")}
+
+
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _sgd_epoch(params, opt_state, data, lr_momentum):
+    """One local epoch over pre-batched data: (nb, B, 28,28,1)/(nb, B)."""
+    lr, momentum = lr_momentum
+    opt = optimizers.sgd(lr, momentum=momentum)
+
+    def step(carry, batch):
+        params, opt_state = carry
+        (loss, acc), grads = jax.value_and_grad(
+            cnn_mod.cnn_loss, has_aux=True)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optimizers.apply_updates(params, updates)
+        return (params, opt_state), (loss, acc)
+
+    (params, opt_state), (losses, accs) = jax.lax.scan(
+        step, (params, opt_state), data)
+    return params, opt_state, jnp.mean(losses), jnp.mean(accs)
+
+
+@jax.jit
+def _predict(params, images):
+    return jnp.argmax(cnn_mod.cnn_apply(params, images), axis=-1)
+
+
+def _batched(x, y, batch_size, rng):
+    order = rng.permutation(len(x))
+    nb = len(x) // batch_size
+    sel = order[: nb * batch_size]
+    return {"image": jnp.asarray(x[sel].reshape(nb, batch_size, *x.shape[1:])),
+            "label": jnp.asarray(y[sel].reshape(nb, batch_size))}
+
+
+class FederatedSimulation:
+    """Python-level multi-client FL simulation on a single host."""
+
+    def __init__(self, fl: FLConfig, dataset: Dict[str, Any],
+                 model_init=None):
+        self.fl = fl
+        self.dataset = dataset
+        self.rng = np.random.default_rng(fl.seed)
+        key = jax.random.PRNGKey(fl.seed)
+        self.init_params = (model_init or cnn_mod.init_cnn)(key)
+        xtr, ytr = dataset["train"]
+        self.parts = iid_partition(ytr, fl.num_clients, seed=fl.seed)
+        self.client_data = [(xtr[p], ytr[p]) for p in self.parts]
+        self.weights = [len(p) for p in self.parts]
+        self.opt = optimizers.sgd(fl.lr, momentum=fl.momentum)
+
+    # -- local work ---------------------------------------------------------
+    def _local_train(self, params, cid):
+        """Returns (params, last-epoch loss, POST-training local accuracy).
+
+        "Training accuracy" follows the paper's protocol: the client's
+        local model evaluated on its own shard after local training — this
+        is what makes HFL's train/test gap visible (local models fit local
+        data; the aggregated global model generalizes worse)."""
+        x, y = self.client_data[cid]
+        opt_state = self.opt.init(params)
+        loss = 0.0
+        for _ in range(self.fl.local_epochs):
+            data = _batched(x, y, self.fl.local_batch_size, self.rng)
+            params, opt_state, loss, _ = _sgd_epoch(
+                params, opt_state, data, (self.fl.lr, self.fl.momentum))
+        n_eval = min(len(x), 512)
+        preds = np.asarray(_predict(params, jnp.asarray(x[:n_eval])))
+        acc = float(np.mean(preds == y[:n_eval]))
+        return params, float(loss), acc
+
+    def _eval(self, params, split="test", batch=500):
+        x, y = self.dataset[split]
+        preds = []
+        for i in range(0, len(x), batch):
+            preds.append(np.asarray(_predict(params, jnp.asarray(x[i:i + batch]))))
+        return np.concatenate(preds)
+
+    # -- strategies ---------------------------------------------------------
+    def _warmup(self):
+        """Compile the train/predict jits outside the measured windows so
+        build/classification timers compare strategies, not XLA caching."""
+        x, y = self.client_data[0]
+        data = _batched(x[: 2 * self.fl.local_batch_size],
+                        y[: 2 * self.fl.local_batch_size],
+                        self.fl.local_batch_size, np.random.default_rng(0))
+        _sgd_epoch(self.init_params, self.opt.init(self.init_params), data,
+                   (self.fl.lr, self.fl.momentum))
+        x_test = self.dataset["test"][0]
+        _predict(self.init_params, jnp.asarray(x_test[:500]))
+        _predict(self.init_params, jnp.asarray(x_test))             # full
+        shard = -(-len(x_test) // self.fl.num_clients)
+        _predict(self.init_params, jnp.asarray(x_test[:shard]))     # shard
+        # local-shard train-accuracy eval shape
+        n_eval = min(len(x), 512)
+        _predict(self.init_params, jnp.asarray(x[:n_eval]))
+
+    def run(self) -> FLResult:
+        fl = self.fl
+        curves = {"train_acc": [], "train_loss": [], "test_acc": []}
+        self._warmup()
+        build_timer = Timer()
+
+        with build_timer:
+            if fl.strategy == "hfl":
+                served_fn, train_acc = self._run_hfl(curves)
+            elif fl.strategy == "afl":
+                served_fn, train_acc = self._run_afl(curves)
+            else:
+                served_fn, train_acc = self._run_cfl(curves)
+
+        # classification time (paper §1.2.7): centralized HFL serves the
+        # full test set at the global server (after materializing the
+        # served model); decentralized AFL/CFL classify on-device — every
+        # client scores its own 1/N test shard in parallel, so measured
+        # wall time is one shard pass (+ AFL's pre-serving aggregation;
+        # CFL's continual model is already serving-ready).
+        x_test, y_true = self.dataset["test"]
+        shard = (len(x_test) if fl.strategy == "hfl"
+                 else -(-len(x_test) // fl.num_clients))
+        xs = jnp.asarray(x_test[:shard])
+        best = None
+        for _ in range(3):          # min-of-3: immune to scheduler noise
+            t = Timer()
+            with t:
+                served = served_fn()
+                pred_head = np.asarray(_predict(served, xs))
+            best = t.elapsed if best is None else min(best, t.elapsed)
+        class_timer = Timer()
+        class_timer.elapsed = best
+        pred_tail = (self._eval(served)[shard:] if shard < len(x_test)
+                     else np.empty((0,), pred_head.dtype))
+        y_pred = np.concatenate([pred_head, pred_tail])
+        m = classification_metrics(y_true, y_pred, 10)
+
+        return FLResult(
+            strategy=fl.strategy, dataset=self.dataset["name"],
+            train_accuracy=train_acc, test_accuracy=m["accuracy"],
+            build_time_s=build_timer.elapsed,
+            classification_time_s=class_timer.elapsed,
+            precision=m["precision"], recall=m["recall"], f1=m["f1"],
+            balanced_accuracy=m["balanced_accuracy"], confusion=m["confusion"],
+            round_train_acc=curves["train_acc"],
+            round_train_loss=curves["train_loss"],
+            round_test_acc=curves["test_acc"],
+        )
+
+    def _track(self, curves, accs, losses, model_for_eval):
+        curves["train_acc"].append(float(np.mean(accs)))
+        curves["train_loss"].append(float(np.mean(losses)))
+        preds = self._eval(model_for_eval)
+        curves["test_acc"].append(
+            float(np.mean(preds == self.dataset["test"][1])))
+
+    def _run_hfl(self, curves):
+        """Paper §2.1: per round every client refines the group model; group
+        servers aggregate; the global server aggregates group models and
+        disseminates back to groups."""
+        fl = self.fl
+        groups = topology.hierarchical_groups(fl.num_clients, fl.num_groups)
+        group_models = [self.init_params] * fl.num_groups
+        global_model = self.init_params
+        train_acc = 0.0
+        for rnd in range(fl.rounds):
+            clients = [None] * fl.num_clients
+            accs, losses = [], []
+            for gi, g in enumerate(groups):
+                for c in g:
+                    clients[c], loss, acc = self._local_train(group_models[gi], c)
+                    accs.append(acc)
+                    losses.append(loss)
+            # tier 1 every round: group servers aggregate their clients
+            group_models = [
+                strategies.fedavg([clients[c] for c in g],
+                                  weights=[self.weights[c] for c in g])
+                for g in groups]
+            # tier 2 with dissemination lag: the global server aggregates
+            # and pushes back only every `hfl_global_every` rounds (groups
+            # refine independently in between — paper Fig. 1's hierarchy)
+            if (rnd + 1) % fl.hfl_global_every == 0 or rnd == fl.rounds - 1:
+                global_model = strategies.hfl_aggregate(clients, groups,
+                                                        self.weights)
+                group_models = [global_model] * fl.num_groups
+            train_acc = float(np.mean(accs))
+            self._track(curves, accs, losses, global_model)
+        # served model: global server re-aggregates at classification time
+        final_clients = clients
+        served = lambda: strategies.hfl_aggregate(final_clients, groups,
+                                                  self.weights)
+        return served, train_acc
+
+    def _run_afl(self, curves):
+        """Paper §2.2: sample a client subset, train locally for E epochs,
+        aggregate directly (peer-to-peer FedAvg / gossip)."""
+        fl = self.fl
+        global_model = self.init_params
+        train_acc = 0.0
+        participants = list(range(fl.num_clients))
+        for rnd in range(fl.rounds):
+            participants = topology.sample_participants(
+                self.rng, fl.num_clients, fl.participation)
+            locals_, accs, losses = [], [], []
+            for c in participants:
+                p, loss, acc = self._local_train(global_model, c)
+                locals_.append(p)
+                accs.append(acc)
+                losses.append(loss)
+            if fl.afl_mode == "gossip":
+                nbrs = topology.ring_neighbors(len(locals_),
+                                               fl.gossip_neighbors)
+                locals_ = strategies.gossip_round(locals_, nbrs)
+            global_model = strategies.fedavg(
+                locals_, weights=[self.weights[c] for c in participants])
+            train_acc = float(np.mean(accs))
+            self._track(curves, accs, losses, global_model)
+        last_locals = locals_
+        last_parts = participants
+        served = lambda: strategies.fedavg(
+            last_locals, weights=[self.weights[c] for c in last_parts])
+        return served, train_acc
+
+    def _run_cfl(self, curves):
+        """Paper §2.3: continual — the model passes client to client; each
+        local update is merged into the evolving global parameters."""
+        fl = self.fl
+        model = self.init_params
+        train_acc = 0.0
+        for rnd in range(fl.rounds):
+            order = self.rng.permutation(fl.num_clients)
+            accs, losses = [], []
+            for c in order:
+                local, loss, acc = self._local_train(model, c)
+                model = strategies.cfl_merge(model, local, fl.merge_alpha)
+                accs.append(acc)
+                losses.append(loss)
+            train_acc = float(np.mean(accs))
+            self._track(curves, accs, losses, model)
+        final = model
+        served = lambda: final     # continually-merged model already serves
+        return served, train_acc

@@ -1,0 +1,192 @@
+"""Aggregation strategies — the paper's contribution as composable ops.
+
+Two implementations of the same math, validated against each other in
+tests:
+
+* HOST level — operates on a *list* of client parameter pytrees (the
+  paper-faithful simulation on CPU; arbitrary client counts).
+* MESH level — operates inside `shard_map` where the leading "clients"
+  axis of every parameter is sharded over a mesh axis; aggregation
+  lowers to `jax.lax` collectives (psum / collective_permute), which is
+  what the multi-pod dry-run compiles and the roofline's collective
+  term measures:
+
+      HFL  -> two psums (axis_index_groups tier, then global tier)
+              [multi-pod: psum over "data" then psum over "pod"]
+      AFL  -> masked weighted psum (fedavg mode)
+              ring collective_permute exchange (gossip mode)
+      CFL  -> psum + EMA continual merge (see DESIGN.md §2 adaptation)
+
+All operators implement Eq. (5): theta_g = sum_c (n_c / N) theta_c,
+generalized with per-client weights / participation masks.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+
+Params = Any
+
+
+# ===========================================================================
+# host-level (list-of-pytrees) operators — used by the paper simulation
+# ===========================================================================
+
+def fedavg(client_params: List[Params],
+           weights: Optional[Sequence[float]] = None,
+           use_kernel: bool = False) -> Params:
+    """Weighted parameter average over clients (Eq. 5)."""
+    n = len(client_params)
+    w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
+    w = (w / w.sum()).astype(np.float32)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.fedavg_aggregate_tree(client_params, jnp.asarray(w))
+    return jax.tree.map(
+        lambda *leaves: sum(wi * l for wi, l in zip(w, leaves)),
+        *client_params)
+
+
+def hfl_aggregate(client_params: List[Params], groups: List[List[int]],
+                  weights: Optional[Sequence[float]] = None) -> Params:
+    """Two-tier FedAvg: per-group aggregate, then global over group models,
+    weighted by group sample counts."""
+    w = (np.ones(len(client_params)) if weights is None
+         else np.asarray(weights, np.float64))
+    group_models, group_w = [], []
+    for g in groups:
+        group_models.append(fedavg([client_params[c] for c in g],
+                                   weights=[w[c] for c in g]))
+        group_w.append(sum(w[c] for c in g))
+    return fedavg(group_models, weights=group_w)
+
+
+def afl_aggregate(client_params: List[Params], participants: Sequence[int],
+                  weights: Optional[Sequence[float]] = None) -> Params:
+    """FedAvg over the sampled participant subset (paper's AFL round)."""
+    w = (np.ones(len(client_params)) if weights is None
+         else np.asarray(weights, np.float64))
+    return fedavg([client_params[c] for c in participants],
+                  weights=[w[c] for c in participants])
+
+
+def gossip_round(client_params: List[Params],
+                 neighbors: List[List[int]]) -> List[Params]:
+    """One synchronous gossip exchange: every client averages with its
+    ring neighbors. Returns the new per-client model list."""
+    out = []
+    for c, nbrs in enumerate(neighbors):
+        members = [client_params[c]] + [client_params[j] for j in nbrs]
+        out.append(fedavg(members))
+    return out
+
+
+def cfl_merge(global_params: Params, client_params: Params,
+              alpha: float) -> Params:
+    """Continual merge: theta_g <- (1-alpha) theta_g + alpha theta_c."""
+    return jax.tree.map(
+        lambda g, c: ((1.0 - alpha) * g.astype(jnp.float32)
+                      + alpha * c.astype(jnp.float32)).astype(g.dtype),
+        global_params, client_params)
+
+
+# ===========================================================================
+# mesh-level (inside shard_map) operators — pod-scale FL
+# ===========================================================================
+
+def _wavg_psum(params, weight, axes):
+    """Weighted mean over mesh axes: psum(w*theta)/psum(w)."""
+    total_w = jax.lax.psum(weight, axes)
+    return jax.tree.map(
+        lambda p: (jax.lax.psum(p.astype(jnp.float32) * weight, axes)
+                   / total_w).astype(p.dtype),
+        params)
+
+
+def mesh_hfl(params, weight, *, client_axis="data",
+             num_groups: int = 2, pod_axis: Optional[str] = None):
+    """Two-tier hierarchical aggregation.
+
+    Single-pod: tier 1 over `axis_index_groups` partitions of the client
+    axis, tier 2 over the full client axis. Multi-pod: tier 1 over the
+    intra-pod client axis, tier 2 over the pod axis — the exact
+    clients -> group-server -> global-server schedule of paper Fig. 1.
+    """
+    if pod_axis is not None:
+        group = _wavg_psum(params, weight, client_axis)          # tier 1
+        gw = jax.lax.psum(weight, client_axis)
+        return jax.tree.map(                                      # tier 2
+            lambda p: (jax.lax.psum(p.astype(jnp.float32) * gw, pod_axis)
+                       / jax.lax.psum(gw, pod_axis)).astype(p.dtype),
+            group)
+
+    axis_size = jax.lax.axis_size(client_axis)
+    groups = topology.mesh_axis_groups(axis_size, num_groups)
+    # tier 1: group-server aggregate
+    gw = jax.lax.psum(weight, client_axis, axis_index_groups=groups)
+    group = jax.tree.map(
+        lambda p: (jax.lax.psum(p.astype(jnp.float32) * weight, client_axis,
+                                axis_index_groups=groups) / gw).astype(p.dtype),
+        params)
+    # tier 2: global-server aggregate over group models (each group model is
+    # replicated within its group, so the global mean needs 1/group_size).
+    per = axis_size // num_groups
+    return jax.tree.map(
+        lambda p: (jax.lax.psum(p.astype(jnp.float32) * gw, client_axis)
+                   / jax.lax.psum(gw, client_axis) ).astype(p.dtype),
+        group)
+
+
+def mesh_afl_fedavg(params, weight, participate, *, client_axis="data",
+                    pod_axis: Optional[str] = None):
+    """Masked FedAvg over sampled participants. Non-participants keep the
+    aggregate too (they would fetch it lazily in a real deployment; at pod
+    scale every device holds the consensus model after the collective)."""
+    axes = (client_axis,) if pod_axis is None else (client_axis, pod_axis)
+    m = participate.astype(jnp.float32) * weight
+    return _wavg_psum(params, m, axes)
+
+
+def mesh_afl_gossip(params, *, client_axis="data", steps: int = 1):
+    """Ring gossip: each client averages with its +-1 ring neighbors via
+    collective_permute — O(2 * |params|) link traffic per step, no global
+    collective. Iterating converges to the consensus mean."""
+    n = jax.lax.axis_size(client_axis)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+
+    def one_step(p):
+        def mix(x):
+            x32 = x.astype(jnp.float32)
+            left = jax.lax.ppermute(x32, client_axis, perm=fwd)
+            right = jax.lax.ppermute(x32, client_axis, perm=bwd)
+            return ((x32 + left + right) / 3.0).astype(x.dtype)
+        return jax.tree.map(mix, p)
+
+    for _ in range(steps):
+        params = one_step(params)
+    return params
+
+
+def mesh_cfl(params, global_params, weight, alpha, *, client_axis="data",
+             pod_axis: Optional[str] = None):
+    """Continual merge at pod scale: the federation mean is folded into
+    each client's evolving model with rate alpha (EMA of the consensus),
+    and the running global model is updated likewise. Returns
+    (new_client_params, new_global_params)."""
+    axes = (client_axis,) if pod_axis is None else (client_axis, pod_axis)
+    mean = _wavg_psum(params, weight, axes)
+    new_global = jax.tree.map(
+        lambda g, m: ((1 - alpha) * g.astype(jnp.float32)
+                      + alpha * m.astype(jnp.float32)).astype(g.dtype),
+        global_params, mean)
+    new_client = jax.tree.map(
+        lambda c, g: ((1 - alpha) * c.astype(jnp.float32)
+                      + alpha * g.astype(jnp.float32)).astype(c.dtype),
+        params, new_global)
+    return new_client, new_global

@@ -1,0 +1,239 @@
+"""Pod-scale federated trainer: the paper's aggregation strategies as a
+first-class feature of the distributed runtime.
+
+Clients are slices of the mesh's client axis ("data"; plus "pod" groups in
+the multi-pod mesh). Every parameter carries a leading `num_clients` dim
+sharded over that axis; within a client, tensors are tensor-parallel over
+"model". Local training is `vmap`ed over the client dim; aggregation
+events are array ops over that dim, which XLA lowers to the strategy's
+collective signature:
+
+    HFL  reshape (pods, per_pod) + two-stage mean  -> hierarchical all-reduce
+    AFL  masked weighted mean                      -> all-reduce
+         jnp.roll over the sharded client dim      -> collective-permute ring
+    CFL  mean + EMA merge                          -> all-reduce + fused axpy
+
+`fl_train_step` is a single jitted SPMD program: K local optimizer steps
+followed by one aggregation event — the object the multi-pod dry-run
+lowers and the roofline's collective term measures per strategy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.fl_types import FLConfig
+from repro.optim import optimizers
+from repro.sharding import specs as sh
+
+
+# ---------------------------------------------------------------------------
+# FL sharding: prepend the client axis, drop FSDP from per-client dims
+# ---------------------------------------------------------------------------
+
+def fl_client_axes(mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fl_param_spec(path: str, shape, mesh) -> P:
+    """Spec for a client-stacked parameter leaf (C, *base_shape); scanned
+    layer stacks are (C, L, *per_layer) — both leading dims are skipped
+    for the per-layer rules."""
+    if sh._STACKED_RE.search(path) and len(shape) >= 3:
+        inner = sh.spec_for_param(path, shape[2:], mesh)
+        base = P(None, *inner)
+    else:
+        base = sh.spec_for_param(path, shape[1:], mesh)
+    entries = [None if e is None else e for e in base]
+    # the client axis owns pod+data; per-client dims keep only "model"
+    cleaned = []
+    for e in entries:
+        if e == "model":
+            cleaned.append("model")
+        else:
+            cleaned.append(None)
+    ca = fl_client_axes(mesh)
+    spec = P(ca if len(ca) > 1 else ca[0], *cleaned)
+    return sh.fit_spec(shape, spec, mesh)
+
+
+def fl_tree_shardings(client_params, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(client_params)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append(NamedSharding(mesh, fl_param_spec(pstr, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+
+class FederatedTrainer:
+    """Builds the jitted `fl_train_step` for (model, FLConfig, mesh)."""
+
+    def __init__(self, model, fl: FLConfig, mesh=None,
+                 optimizer: Optional[optimizers.Optimizer] = None):
+        self.model = model
+        self.fl = fl
+        self.mesh = mesh
+        self.opt = optimizer or optimizers.sgd(fl.lr, momentum=fl.momentum)
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self, key) -> Dict[str, Any]:
+        C = self.fl.num_clients
+        keys = jax.random.split(key, C)
+        client_params = jax.vmap(self.model.init)(keys)
+        opt_states = jax.vmap(self.opt.init)(client_params)
+        state = {"client_params": client_params, "opt": opt_states,
+                 "round": jnp.zeros((), jnp.int32)}
+        if self.fl.strategy == "cfl":
+            state["global_params"] = self.model.init(key)
+        return state
+
+    def state_shardings(self, state):
+        assert self.mesh is not None
+        shardings = {
+            "client_params": fl_tree_shardings(state["client_params"],
+                                               self.mesh),
+            "opt": fl_tree_shardings_opt(state["opt"], self.mesh),
+            "round": NamedSharding(self.mesh, P()),
+        }
+        if "global_params" in state:
+            shardings["global_params"] = sh.tree_shardings(
+                state["global_params"], self.mesh)
+        return shardings
+
+    # -- local phase ---------------------------------------------------------
+
+    def _local_steps(self, params, opt_state, client_batch):
+        """K local optimizer steps on this client's microbatches.
+        client_batch leaves: (K, B_local, ...)."""
+
+        def one(carry, mb):
+            params, opt_state = carry
+            (loss, aux), grads = jax.value_and_grad(
+                self.model.loss, has_aux=True)(params, mb)
+            updates, opt_state = self.opt.update(grads, opt_state, params)
+            params = optimizers.apply_updates(params, updates)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            one, (params, opt_state), client_batch)
+        return params, opt_state, jnp.mean(losses)
+
+    # -- aggregation events (client-dim array ops -> collectives) ------------
+
+    def _aggregate(self, client_params, weights, participate, global_params):
+        fl = self.fl
+        C = fl.num_clients
+        w = weights.astype(jnp.float32)
+
+        def wmean(p, wv):
+            wn = (wv / jnp.sum(wv)).astype(jnp.float32)
+            return jax.tree.map(
+                lambda x: jnp.einsum(
+                    "c,c...->...", wn, x.astype(jnp.float32)).astype(x.dtype),
+                p)
+
+        def broadcast(p):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), p)
+
+        if fl.strategy == "hfl":
+            G = fl.num_groups
+            per = C // G
+            # tier 1: group-server aggregates (weighted within group)
+            wg = w.reshape(G, per)
+            def tier(x):
+                xg = x.astype(jnp.float32).reshape((G, per) + x.shape[1:])
+                wn = wg / jnp.sum(wg, axis=1, keepdims=True)
+                gmodel = jnp.einsum("gc,gc...->g...", wn, xg)
+                # tier 2: global server over group models
+                gw = jnp.sum(wg, axis=1) / jnp.sum(wg)
+                glob = jnp.einsum("g,g...->...", gw, gmodel)
+                return jnp.broadcast_to(glob[None], (C,) + x.shape[1:]
+                                        ).astype(x.dtype)
+            return jax.tree.map(tier, client_params), global_params
+
+        if fl.strategy == "afl":
+            if fl.afl_mode == "gossip":
+                def mix(x):
+                    x32 = x.astype(jnp.float32)
+                    out = (x32 + jnp.roll(x32, 1, axis=0)
+                           + jnp.roll(x32, -1, axis=0)) / 3.0
+                    return out.astype(x.dtype)
+                return jax.tree.map(mix, client_params), global_params
+            m = participate.astype(jnp.float32) * w
+            agg = wmean(client_params, m)
+            return broadcast(agg), global_params
+
+        # cfl: continual EMA merge
+        a = fl.merge_alpha
+        mean = wmean(client_params, w)
+        new_global = jax.tree.map(
+            lambda g, m_: ((1 - a) * g.astype(jnp.float32)
+                           + a * m_.astype(jnp.float32)).astype(g.dtype),
+            global_params, mean)
+        new_clients = jax.tree.map(
+            lambda c, g: ((1 - a) * c.astype(jnp.float32)
+                          + a * g.astype(jnp.float32)[None]).astype(c.dtype),
+            client_params, new_global)
+        return new_clients, new_global
+
+    # -- the step -------------------------------------------------------------
+
+    def fl_train_step(self, state, batch, weights, participate):
+        """One federated round as a single SPMD program.
+
+        batch leaves: (C, K, B_local, ...) — per-client microbatches.
+        weights: (C,) sample counts (n_c). participate: (C,) bool (AFL).
+        """
+        params, opt_state, losses = jax.vmap(self._local_steps)(
+            state["client_params"], state["opt"], batch)
+        params, new_global = self._aggregate(
+            params, weights, participate, state.get("global_params"))
+        new_state = dict(state)
+        new_state["client_params"] = params
+        new_state["opt"] = opt_state
+        new_state["round"] = state["round"] + 1
+        if new_global is not None and "global_params" in state:
+            new_state["global_params"] = new_global
+        return new_state, {"loss": jnp.mean(losses)}
+
+    # -- batch specs for dry-run ---------------------------------------------
+
+    def fl_batch_specs(self, seq_len, per_client_batch):
+        C, K = self.fl.num_clients, self.fl.local_steps
+        base = self.model.train_batch_specs(per_client_batch, seq_len)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((C, K) + s.shape, s.dtype), base)
+
+    def served_model(self, state):
+        """Consensus model for evaluation/serving (mean of client models,
+        or the continual global model for CFL)."""
+        if self.fl.strategy == "cfl":
+            return state["global_params"]
+        return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), 0
+                                               ).astype(x.dtype),
+                            state["client_params"])
+
+
+def fl_tree_shardings_opt(opt_state, mesh):
+    """Optimizer state mirrors parameter sharding; scalars replicated."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if leaf.ndim <= 1:
+            out.append(NamedSharding(mesh, P()))
+        else:
+            out.append(NamedSharding(mesh, fl_param_spec(pstr, leaf.shape,
+                                                         mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention.
+
+Causal + sliding-window masks; fp32 accumulators. The quadratic S*T score
+matrix is never materialized in HBM — each grid step streams one
+(BLOCK_K, d) key/value tile through VMEM against a resident (BLOCK_Q, d)
+query tile, maintaining the running (max, sum, acc) online-softmax state
+in VMEM scratch. This is the standard TPU adaptation of the GPU flash
+algorithm: tiles sized for the ~16 MiB VMEM and 128-aligned for the MXU
+(vs. CUDA's SRAM/warp-level formulation).
+
+Grid: (BH, n_q, n_k), k innermost so the scratch carries across k-steps
+for a fixed query tile. Causal/window masking is positional; fully-masked
+k-tiles are skipped via `pl.when` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *,
+                  block_q, block_k, n_k, causal, window, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # skip tiles that are fully masked (above the diagonal / out of window)
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window and window > 0:
+        run = jnp.logical_and(run, k_start + block_k - 1
+                              > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)        # (BQ, d)
+        k = k_ref[...].astype(jnp.float32)        # (BK, d)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window and window > 0:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=128, block_k=128, interpret=False):
+    """q: (BH, S, d); k, v: (BH, T, d). Returns (BH, S, d).
+
+    S must be a multiple of block_q, T of block_k (callers pad or fall
+    back to the reference path otherwise).
+    """
+    BH, S, d = q.shape
+    T = k.shape[1]
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    n_q, n_k = S // block_q, T // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kern = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, n_k=n_k,
+        causal=causal, window=window, scale=scale)
+
+    return pl.pallas_call(
+        kern,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

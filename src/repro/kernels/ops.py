@@ -1,0 +1,78 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the pallas_call path runs natively; on CPU (this container) the
+wrappers run the kernels in interpret mode (tests) or fall back to the
+pure-jnp reference (production CPU paths), so every caller is portable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fedavg_agg as _fa
+from repro.kernels import flash_attention as _fl
+from repro.kernels import ssm_scan as _ss
+from repro.kernels import ref
+
+
+@functools.cache
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# -- fedavg ------------------------------------------------------------------
+
+def fedavg_aggregate(stacked, weights, *, interpret=None):
+    interpret = on_cpu() if interpret is None else interpret
+    return _fa.fedavg_agg(stacked, weights, interpret=interpret)
+
+
+def fedavg_aggregate_tree(client_params, weights, *, interpret=None):
+    """FedAvg a list of pytrees through the fused kernel: flatten each
+    client's params to one vector, aggregate, unflatten."""
+    flats = []
+    for p in client_params:
+        leaves = jax.tree.leaves(p)
+        flats.append(jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                                      for l in leaves]))
+    agg = fedavg_aggregate(jnp.stack(flats), weights, interpret=interpret)
+    template = client_params[0]
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        out.append(agg[off:off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# -- flash attention -----------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, window=0, interpret=None,
+                    block_q=128, block_k=128):
+    """q: (B,S,H,d); k/v: (B,T,Hk,d) — GQA folded by repeating KV heads.
+
+    Returns (B,S,H,d)."""
+    interpret = on_cpu() if interpret is None else interpret
+    B, S, H, d = q.shape
+    Hk = k.shape[2]
+    if H != Hk:
+        rep = H // Hk
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, -1, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, -1, d)
+    of = _fl.flash_attention(qf, kf, vf, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return jnp.moveaxis(of.reshape(B, H, S, d), 1, 2)
+
+
+# -- ssm scan ------------------------------------------------------------------
+
+def ssm_scan(xh, a_log, dt, Bm, Cm, *, chunk=128, interpret=None):
+    interpret = on_cpu() if interpret is None else interpret
+    return _ss.ssm_scan(xh, a_log, dt, Bm, Cm, chunk=chunk,
+                        interpret=interpret)

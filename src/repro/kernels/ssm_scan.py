@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: chunked Mamba2/SSD scan (zamba2's hot loop).
+
+The SSD decomposition: within a CHUNK-long tile the token-mixing is a
+masked quadratic form (MXU matmuls: (C B^T) * decay-mask @ x); across
+chunks only the (dh, N) per-head state is carried — held in VMEM scratch
+that persists across the sequential chunk grid dimension. This maps the
+GPU Mamba scan (warp-parallel prefix scan) onto the TPU's strength:
+systolic matmuls within tiles + a tiny sequential carry, instead of a
+fine-grained elementwise scan.
+
+Grid: (B*H, n_chunks); chunk dim is innermost/sequential. Per grid step:
+x tile (Q, dh), gate/dt tiles (Q, 1), B/C tiles (Q, N) — all VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (Q, dh)
+    a = a_ref[...][:, 0].astype(jnp.float32)      # (Q,)  log-decay
+    dt = dt_ref[...][:, 0].astype(jnp.float32)    # (Q,)
+    Bm = b_ref[...].astype(jnp.float32)           # (Q, N)
+    Cm = c_ref[...].astype(jnp.float32)           # (Q, N)
+
+    cs = jnp.cumsum(a)                            # (Q,)
+    # intra-chunk: masked quadratic form
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    L = cs[:, None] - cs[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(iota_i >= iota_j, jnp.exp(L), 0.0)
+    W = G * L * dt[None, :]
+    y_intra = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())))
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                         # (dh, N)
+    y_inter = jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())))       # (Q, dh)
+
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: decay old state to chunk end, add this chunk's outer sum
+    decay_end = jnp.exp(cs[-1] - cs)               # (Q,)
+    contrib = jax.lax.dot_general(
+        x * (decay_end * dt)[:, None], Bm, (((0,), (0,)), ((), ())))  # (dh,N)
+    state_ref[...] = jnp.exp(cs[-1]) * state + contrib
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(xh, a_log, dt, Bm, Cm, *, chunk=128, interpret=False):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,dh)  a_log/dt: (B,S,H)  Bm/Cm: (B,S,N) (shared across heads).
+    Returns (y: (B,S,H,dh), None). S must be a chunk multiple.
+    """
+    B, S, H, dh = xh.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    # fold heads into the batch grid dim; broadcast B/C over heads
+    x_bh = jnp.moveaxis(xh, 2, 1).reshape(B * H, S, dh)
+    a_bh = jnp.moveaxis(a_log, 2, 1).reshape(B * H, S, 1)
+    dt_bh = jnp.moveaxis(dt, 2, 1).reshape(B * H, S, 1)
+    B_bh = jnp.repeat(Bm, H, axis=0).reshape(B, H, S, N).reshape(B * H, S, N) \
+        if False else jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    C_bh = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kern,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, dh), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), xh.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, N), jnp.float32)],
+        interpret=interpret,
+    )(x_bh, a_bh, dt_bh, B_bh, C_bh)
+
+    y = jnp.moveaxis(y.reshape(B, H, S, dh), 1, 2)
+    return y, None

@@ -1,0 +1,42 @@
+"""Production mesh factories.
+
+Functions, not module-level constants — importing this module never
+touches jax device state. The dry-run entry point sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+import; everything else sees the real (single) CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Target: TPU v5e pod(s). 16x16 = 256 chips single-pod;
+    (pod=2, 16, 16) = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_fl_mesh(*, clients: int = 16, model: int = 16,
+                 multi_pod: bool = False):
+    """Mesh for pod-scale federated runs: the "data" axis hosts FL clients
+    (one client per slice), "model" is tensor-parallel within a client,
+    and the "pod" axis carries HFL's hierarchy tier in multi-pod runs."""
+    auto = jax.sharding.AxisType.Auto
+    if multi_pod:
+        return jax.make_mesh((2, clients, model), ("pod", "data", "model"),
+                             axis_types=(auto,) * 3)
+    return jax.make_mesh((clients, model), ("data", "model"),
+                         axis_types=(auto,) * 2)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,73 @@
+"""Serving: prefill + batched single-token decode steps, with the
+decode-state sharding rules used by the decode_32k / long_500k dry-runs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding import specs as sh
+
+
+def make_prefill_step(model):
+    def prefill(params, batch):
+        logits, _ = model.apply(params, batch)
+        return logits
+    return prefill
+
+
+def make_serve_step(model):
+    def serve_step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+    return serve_step
+
+
+def decode_state_shardings(state_shape, mesh, cfg):
+    """Sharding rules for decode-state leaves.
+
+    (B, cap, Hk, dh) KV caches: batch over the FSDP axis when divisible;
+    heads over "model" when divisible, else the cache *sequence* dim over
+    "model" (sequence-parallel attention — essential for long_500k where
+    batch=1 and head counts don't divide the axis). Recurrent SSM/xLSTM
+    states: batch over FSDP, heads over "model" when divisible.
+    """
+    fa = sh.fsdp_axes(mesh)
+    ba = fa if len(fa) > 1 else fa[0]
+    msize = mesh.shape["model"]
+
+    def rule(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if leaf.ndim == 4:                       # (B, cap|H, ... )
+            B, d1, d2, d3 = leaf.shape
+            spec = [None] * 4
+            if B % sh.axis_size(mesh, ba) == 0:
+                spec[0] = ba
+            if d2 % msize == 0:                  # heads over model
+                spec[2] = "model"
+            elif d1 % msize == 0 and d1 > 1024:  # cache seq over model
+                spec[1] = "model"
+            return NamedSharding(mesh, sh.fit_spec(leaf.shape, P(*spec), mesh))
+        if leaf.ndim == 3:                       # (B, W-1, conv_ch) etc
+            spec = [None] * 3
+            if leaf.shape[0] % sh.axis_size(mesh, ba) == 0:
+                spec[0] = ba
+            if leaf.shape[2] % msize == 0:
+                spec[2] = "model"
+            return NamedSharding(mesh, sh.fit_spec(leaf.shape, P(*spec), mesh))
+        spec = [None] * leaf.ndim
+        if leaf.shape and leaf.shape[0] % sh.axis_size(mesh, ba) == 0:
+            spec[0] = ba
+        return NamedSharding(mesh, sh.fit_spec(leaf.shape, P(*spec), mesh))
+
+    return jax.tree.map(rule, state_shape)
+
+
+def token_shardings(token_spec, mesh):
+    fa = sh.fsdp_axes(mesh)
+    ba = fa if len(fa) > 1 else fa[0]
+    return NamedSharding(mesh,
+                         sh.fit_spec(token_spec.shape, P(ba), mesh))

@@ -1,0 +1,147 @@
+"""Standard (non-federated) distributed training step + CLI driver.
+
+FSDP over ("pod","data") x tensor-parallel over "model" — the degenerate
+single-client case of the FL runtime, and the program the 40-combo
+dry-run lowers for the `train_4k` shape.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.optim import optimizers
+from repro.sharding import specs as sh
+
+
+def make_train_step(model, opt, clip_norm: float = 1.0):
+    """One optimizer step. cfg.grad_accum > 1 scans over microbatches
+    (splitting the global batch), accumulating grads in fp32 — the
+    standard activation-memory lever when per-device batch is forced
+    high (e.g. multi-pod MoE where batch < chips)."""
+    accum = getattr(model.cfg, "grad_accum", 1)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+
+            def one(carry, mb):
+                gsum, lsum = carry
+                (loss, aux), g = grads_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), aux
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), auxs = jax.lax.scan(
+                one, (gzero, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            aux = jax.tree.map(lambda a: jnp.mean(a, 0), auxs)
+        else:
+            (loss, aux), grads = grads_of(params, batch)
+        if clip_norm:
+            grads, gnorm = optimizers.clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = optimizers.global_norm(grads)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optimizers.apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        return params, opt_state, metrics
+    return train_step
+
+
+def batch_shardings(batch_specs, mesh):
+    ba = sh.batch_axes(mesh)
+    ba = ba if len(ba) > 1 else ba[0]
+    sa = sh.seq_axis(mesh)
+
+    def one(s):
+        spec = P(ba, sa) if len(s.shape) >= 2 else P(ba)
+        return NamedSharding(mesh, sh.fit_spec(s.shape, spec, mesh))
+    return jax.tree.map(one, batch_specs)
+
+
+def train_state_shardings(params_shape, opt_shape, mesh):
+    p_sh = sh.tree_shardings(params_shape, mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shape)
+    o_leaves = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if leaf.ndim == 0:
+            o_leaves.append(NamedSharding(mesh, P()))
+        else:
+            # m/<param path> and v/<param path> mirror the param sharding
+            clean = re.sub(r"^(m|v|mu)/", "", pstr)
+            if sh._STACKED_RE.search(clean) and leaf.ndim >= 2:
+                inner = sh.spec_for_param(clean, leaf.shape[1:], mesh)
+                spec = sh.fit_spec(leaf.shape, P(None, *inner), mesh)
+            else:
+                spec = sh.spec_for_param(clean, leaf.shape, mesh)
+            o_leaves.append(NamedSharding(mesh, spec))
+    o_sh = jax.tree_util.tree_unflatten(treedef, o_leaves)
+    return p_sh, o_sh
+
+
+# ---------------------------------------------------------------------------
+# small-scale CPU training driver (examples / integration tests)
+# ---------------------------------------------------------------------------
+
+def train_loop(model, steps=50, batch=8, seq_len=128, lr=3e-3, seed=0,
+               log_every=10, data=None):
+    from repro.data.pipeline import MarkovLM
+
+    cfg = model.cfg
+    opt = optimizers.adamw(lr, weight_decay=0.01)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt))
+
+    lm = MarkovLM(cfg.vocab_size, seed=seed)
+    it = data or lm.batches(batch, seq_len, steps, seed=seed)
+    history = []
+    t0 = time.perf_counter()
+    for i, b in enumerate(it):
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt_state, m = step_fn(params, opt_state, b)
+        if i % log_every == 0 or i == steps - 1:
+            history.append((i, float(m["loss"])))
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"({time.perf_counter()-t0:.1f}s)")
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_config
+    from repro.models.model import build_model
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    train_loop(model, steps=args.steps, batch=args.batch,
+               seq_len=args.seq_len)
+
+
+if __name__ == "__main__":
+    main()

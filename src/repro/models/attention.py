@@ -1,0 +1,208 @@
+"""Grouped-query attention with causal / sliding-window masks, qk-norm, RoPE.
+
+Weights are stored fused 2-D — wq: (d, H*dh) — so tensor-parallel sharding
+works for any head count (heads that don't divide the model axis still
+shard on the fused dim). The head split happens after the projection.
+
+Two execution paths:
+* `attn_impl="einsum"` — reference jnp path (always correct, used on CPU).
+* `attn_impl="flash"`  — Pallas blockwise kernel (TPU target; interpret-mode
+  validated in tests). Falls back to einsum when shapes don't tile.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import dense, init_dense, apply_rope
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, H, Hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_dense(ks[0], d, H * dh, dtype=dtype),
+        "wk": init_dense(ks[1], d, Hk * dh, dtype=dtype),
+        "wv": init_dense(ks[2], d, Hk * dh, dtype=dtype),
+        "wo": init_dense(ks[3], H * dh, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(dh, dtype)
+        p["k_norm"] = layers.init_rmsnorm(dh, dtype)
+    return p
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def _merge_heads(x):
+    return x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
+
+
+def make_attention_mask(q_len, kv_len, *, causal=True, window=0,
+                        q_offset=0, dtype=jnp.float32):
+    """(q_len, kv_len) additive mask. `q_offset` = absolute position of q[0]."""
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    ok = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window and window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def gqa_attention(q, k, v, mask=None, *, scale=None):
+    """q: (B,S,H,dh)  k,v: (B,T,Hk,dh)  mask: (S,T) or (B,1,S,T) additive."""
+    B, S, H, dh = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, S, Hk, G, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        m = mask if mask.ndim == 2 else mask.reshape(B, 1, 1, *mask.shape[-2:])
+        logits = logits + m
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, chunk=512,
+                      scale=None):
+    """Online-softmax attention, scanned over KV chunks — the pure-jnp
+    equivalent of the Pallas flash kernel. Never materializes the (S, T)
+    score matrix: memory is O(S * chunk), which is what makes the 32k/4k
+    shapes fit HBM in the dry-run (XLA does not rewrite softmax(QK^T)V
+    into an online form by itself).
+
+    q: (B,S,H,dh); k,v: (B,T,Hk,dh). Exact (not an approximation).
+    """
+    B, S, H, dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    nk = T // chunk
+
+    dv = v.shape[-1]                       # v head dim may differ (MLA)
+    qg = q.reshape(B, S, Hk, G, dh).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(B, nk, chunk, Hk, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, chunk, Hk, dv), 1, 0)
+    qpos = jnp.arange(S)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        ci, kt, vt = inp
+        kpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kt.astype(jnp.float32)) * scale
+        ok = jnp.ones((S, chunk), bool)
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        # window may be a traced per-layer scalar (gemma3 local/global scan)
+        win = jnp.asarray(window, jnp.int32)
+        ok &= jnp.where(win > 0, kpos[None, :] > qpos[:, None] - win, True)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = (acc * alpha[..., None]
+               + jnp.einsum("bkgst,btkd->bkgsd", p, vt.astype(jnp.float32)))
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((B, Hk, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Hk, G, S, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, dv)
+    return out.astype(q.dtype)
+
+
+def _maybe_flash(cfg, q, k, v, *, causal, window, q_offset):
+    """Use the Pallas flash kernel when enabled and tiling-compatible."""
+    if cfg.attn_impl != "flash":
+        return None
+    from repro.kernels import ops as kops
+    S, T, dh = q.shape[1], k.shape[1], q.shape[-1]
+    if S < 128 or T < 128 or S % 128 or T % 128 or dh % 8 or q_offset:
+        return None
+    return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                interpret=kops.on_cpu())
+
+
+def attention(params, cfg, x, *, positions, mask=None, cache_kv=None,
+              cache_index=None, window=0, causal=True, rope_theta=None,
+              kv_override=None):
+    """Full attention block (projections + SDPA + output projection).
+
+    Train/prefill: cache_kv=None, x: (B,S,D).
+    Decode: x: (B,1,D), cache_kv=(ck, cv) with ck: (B,cap,Hk,dh),
+            cache_index = number of tokens already in the cache.
+            Returns (out, (new_ck, new_cv)).
+    Cross-attention: kv_override=(k, v) precomputed from encoder output.
+    """
+    H, Hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+
+    q = _split_heads(dense(params["wq"], x), H, dh)
+    if kv_override is None:
+        k = _split_heads(dense(params["wk"], x), Hk, dh)
+        v = _split_heads(dense(params["wv"], x), Hk, dh)
+    else:
+        k, v = kv_override
+
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        if kv_override is None:
+            k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+
+    use_rope = cfg.use_rope and kv_override is None
+    if use_rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+
+    new_cache = None
+    if cache_kv is not None:
+        from repro.models import kvcache as kvc
+        ck, cv = cache_kv
+        cap = ck.shape[1]
+        ck, cv = kvc.update_layer(ck, cv, cache_index, k, v, window=window)
+        new_cache = (ck, cv)
+        valid = kvc.valid_mask(cache_index, cap, window=window)
+        amask = jnp.where(valid[None, :], 0.0, NEG_INF)[None, None, :, :]
+        amask = jnp.broadcast_to(amask, (x.shape[0], 1, q.shape[1], cap))
+        out = gqa_attention(q, ck, cv, amask)
+    elif kv_override is not None:
+        if cfg.attn_impl == "chunked":
+            out = chunked_attention(q, k, v, causal=False,
+                                    chunk=cfg.attn_chunk)
+        else:
+            out = gqa_attention(q, k, v, mask)
+    elif cfg.attn_impl == "chunked":
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                chunk=cfg.attn_chunk)
+    else:
+        f = _maybe_flash(cfg, q, k, v, causal=causal, window=window, q_offset=0)
+        if f is not None:
+            out = f
+        else:
+            if mask is None:
+                mask = make_attention_mask(q.shape[1], k.shape[1],
+                                           causal=causal, window=window)
+            out = gqa_attention(q, k, v, mask)
+
+    out = dense(params["wo"], _merge_heads(out))
+    return (out, new_cache) if cache_kv is not None else out

@@ -1,0 +1,74 @@
+"""The paper's CNN (§2.4): three conv layers (16, 12, 10 filters, 3x3),
+two max-pool layers, ReLU hidden activations — for 28x28 grayscale inputs
+(MNIST / Fashion-MNIST), 10 classes.
+
+Layout (faithful to Figure 7):
+  conv1 16@3x3 -> ReLU -> maxpool 2x2
+  conv2 12@3x3 -> ReLU -> maxpool 2x2
+  conv3 10@3x3 -> ReLU -> flatten -> dense 10 (logits)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, dense
+
+
+def _init_conv(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    return {"kernel": (jax.random.normal(key, (kh, kw, cin, cout))
+                       / math.sqrt(fan_in)).astype(dtype),
+            "bias": jnp.zeros((cout,), dtype)}
+
+
+def _conv(params, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, params["kernel"].astype(x.dtype),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["bias"].astype(x.dtype)
+
+
+def _maxpool(x, window=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, window, window, 1), (1, window, window, 1), "VALID")
+
+
+def init_cnn(key, num_classes=10, in_channels=1, image_size=28,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "conv1": _init_conv(ks[0], 3, 3, in_channels, 16, dtype),
+        "conv2": _init_conv(ks[1], 3, 3, 16, 12, dtype),
+        "conv3": _init_conv(ks[2], 3, 3, 12, 10, dtype),
+    }
+    feat = image_size // 4              # two 2x2 pools
+    p["head"] = init_dense(ks[3], feat * feat * 10, num_classes,
+                           use_bias=True, dtype=dtype)
+    return p
+
+
+def cnn_apply(params, images):
+    """images: (B, 28, 28, 1) float -> logits (B, 10)."""
+    x = images
+    x = jax.nn.relu(_conv(params["conv1"], x))
+    x = _maxpool(x)
+    x = jax.nn.relu(_conv(params["conv2"], x))
+    x = _maxpool(x)
+    x = jax.nn.relu(_conv(params["conv3"], x))
+    x = x.reshape(x.shape[0], -1)
+    return dense(params["head"], x).astype(jnp.float32)
+
+
+def cnn_loss(params, batch):
+    """batch: {'image': (B,28,28,1), 'label': (B,)} -> (loss, accuracy)."""
+    logits = cnn_apply(params, batch["image"])
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return nll, acc

@@ -1,0 +1,192 @@
+"""Autoregressive decode: per-layer state, one-token step.
+
+`serve_step` consumes ONE new token against a pre-filled cache of
+`seq_len` (the decode_32k / long_500k dry-run shapes). Decode is an
+unrolled loop over layers so per-layer state shapes may differ:
+full KV, sliding-window ring KV, MLA latent cache, Mamba2 recurrent
+state, or xLSTM (C, n, m) — whatever the layer kind requires.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers, mla, ssm, xlstm
+from repro.models.layers import apply_norm, dense, embed, unembed
+
+
+def _layer_state(cfg, kind, batch, capacity, window, dtype):
+    Hk, dh = cfg.num_kv_heads, cfg.head_dim
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            return {
+                "ckv": jnp.zeros((batch, capacity, 1, cfg.kv_lora_rank), dtype),
+                "kpe": jnp.zeros((batch, capacity, 1, cfg.qk_rope_dim), dtype),
+            }
+        cap = min(window, capacity) if window else capacity
+        return {"k": jnp.zeros((batch, cap, Hk, dh), dtype),
+                "v": jnp.zeros((batch, cap, Hk, dh), dtype)}
+    if kind == "mamba":
+        H = ssm.ssm_heads(cfg)
+        return {"conv": jnp.zeros((batch, cfg.conv_dim - 1,
+                                   ssm.conv_channels(cfg)), dtype),
+                "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                                 jnp.float32)}
+    if kind == "mlstm":
+        return xlstm.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg, batch, capacity, prefill_len=0) -> Dict[str, Any]:
+    """Build the (empty or stand-in) decode state pytree."""
+    dtype = cfg.activation_dtype
+    kinds = cfg.layer_kinds()
+    state: Dict[str, Any] = {
+        "index": jnp.asarray(prefill_len, jnp.int32),
+        "layers": [
+            _layer_state(cfg, kind, batch, capacity,
+                         _decode_window(cfg, i), dtype)
+            for i, kind in enumerate(kinds)
+        ],
+    }
+    if cfg.shared_attn_every:
+        n_inv = sum(1 for i in range(cfg.num_layers)
+                    if i > 0 and i % cfg.shared_attn_every == 0)
+        state["shared"] = [
+            {"k": jnp.zeros((batch, capacity, cfg.num_kv_heads,
+                             cfg.head_dim), dtype),
+             "v": jnp.zeros((batch, capacity, cfg.num_kv_heads,
+                             cfg.head_dim), dtype)}
+            for _ in range(n_inv)
+        ]
+    if cfg.encoder_layers:
+        # cross-attention K/V computed once from the encoder at prefill
+        F = cfg.num_frames or 128
+        state["cross"] = [
+            {"k": jnp.zeros((batch, F, cfg.num_kv_heads, cfg.head_dim), dtype),
+             "v": jnp.zeros((batch, F, cfg.num_kv_heads, cfg.head_dim), dtype)}
+            for _ in range(cfg.num_layers)
+        ]
+    return state
+
+
+def _decode_window(cfg, layer_idx):
+    if cfg.sliding_window and cfg.global_every:
+        is_global = (layer_idx + 1) % cfg.global_every == 0
+        return 0 if is_global else cfg.sliding_window
+    return cfg.sliding_window
+
+
+def _attn_decode(lp, cfg, x, st, index, window, cross_kv=None):
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    h = apply_norm(cfg.norm_type, lp["attn_norm"], x, cfg.norm_eps)
+    if cfg.attention_kind == "mla":
+        a, ckv, kpe = mla.mla_decode(lp["attn"], cfg, h, positions=positions,
+                                     c_kv_cache=st["ckv"],
+                                     k_pe_cache=st["kpe"], cache_index=index)
+        st = {"ckv": ckv, "kpe": kpe}
+    else:
+        a, (ck, cv) = attn_mod.attention(
+            lp["attn"], cfg, h, positions=positions,
+            cache_kv=(st["k"], st["v"]), cache_index=index, window=window)
+        st = {"k": ck, "v": cv}
+    x = x + a
+    if cross_kv is not None:
+        h = apply_norm(cfg.norm_type, lp["cross_norm"], x, cfg.norm_eps)
+        c = attn_mod.attention(lp["cross_attn"], cfg, h, positions=positions,
+                               mask=None, causal=False,
+                               kv_override=(cross_kv["k"], cross_kv["v"]))
+        x = x + c
+    if "mlp" in lp:
+        h = apply_norm(cfg.norm_type, lp["mlp_norm"], x, cfg.norm_eps)
+        if cfg.moe:
+            from repro.models import moe as moe_mod
+            y, _ = moe_mod.moe_ffn(lp["mlp"], cfg, h)
+        elif cfg.norm_type == "layernorm":
+            y = layers.gelu_mlp(lp["mlp"], h)
+        else:
+            y = layers.swiglu_mlp(lp["mlp"], h)
+        x = x + y
+    return x, st
+
+
+def _get_layer_params(params, cfg, i):
+    if params.get("blocks") is not None:
+        return params["blocks"][i]
+    return jax.tree.map(lambda a: a[i], params["layers"])
+
+
+def decode_step(params, cfg, state, tokens):
+    """tokens: (B, 1) -> (logits (B,1,V), new_state)."""
+    adt = cfg.activation_dtype
+    index = state["index"]
+    x = embed(params["embed"], tokens, adt)
+    kinds = cfg.layer_kinds()
+    new_layer_states: List[Any] = []
+    new_shared = list(state.get("shared", []))
+    shared_i = 0
+
+    for i, kind in enumerate(kinds):
+        lp = _get_layer_params(params, cfg, i)
+        st = state["layers"][i]
+        if (cfg.shared_attn_every and i > 0
+                and i % cfg.shared_attn_every == 0):
+            sst = state["shared"][shared_i]
+            x, sst = _attn_decode(params["shared_attn"], cfg, x, sst,
+                                  index, 0)
+            new_shared[shared_i] = sst
+            shared_i += 1
+        if kind == "attn":
+            cross_kv = state["cross"][i] if cfg.encoder_layers else None
+            x, st = _attn_decode(lp, cfg, x, st, index,
+                                 _decode_window(cfg, i), cross_kv)
+        elif kind == "mamba":
+            h = apply_norm(cfg.norm_type, lp["norm"], x, cfg.norm_eps)
+            y, conv, s = ssm.mamba2_step(lp["mamba"], cfg, h,
+                                         st["conv"], st["ssm"])
+            x, st = x + y, {"conv": conv, "ssm": s}
+        elif kind == "mlstm":
+            h = apply_norm(cfg.norm_type, lp["norm"], x, cfg.norm_eps)
+            y, st = xlstm.mlstm_step(lp["mlstm"], cfg, h, st)
+            x = x + y
+        elif kind == "slstm":
+            h = apply_norm(cfg.norm_type, lp["norm"], x, cfg.norm_eps)
+            y, st = xlstm.slstm_step(lp["slstm"], cfg, h, st)
+            x = x + y
+        new_layer_states.append(st)
+
+    x = apply_norm(cfg.norm_type, params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["unembed"], x).astype(jnp.float32)
+
+    new_state = dict(state)
+    new_state["index"] = index + 1
+    new_state["layers"] = new_layer_states
+    if cfg.shared_attn_every:
+        new_state["shared"] = new_shared
+    return logits, new_state
+
+
+def greedy_generate(params, cfg, prompt_tokens, num_steps, capacity=None):
+    """Small-scale generation helper (examples / tests). prompt: (B, S0)."""
+    B, S0 = prompt_tokens.shape
+    capacity = capacity or (S0 + num_steps)
+    state = init_decode_state(cfg, B, capacity)
+    # prefill token-by-token (simple; fine at example scale)
+    tok = prompt_tokens[:, :1]
+    out = [tok]
+    for t in range(S0 + num_steps - 1):
+        logits, state = decode_step(params, cfg, state, tok)
+        if t + 1 < S0:
+            tok = prompt_tokens[:, t + 1:t + 2]
+        else:
+            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,64 @@
+"""Dense KV caches for autoregressive decode.
+
+Two variants:
+* full cache     — (B, S_max, Hk, dh) per layer; for full/global attention.
+* window cache   — (B, W, Hk, dh) ring buffer; for sliding-window layers
+                   (gemma3 local layers): O(W) memory regardless of context.
+
+Caches are plain pytrees so they flow through jit / pjit and are shardable
+(batch over the FSDP axis, heads over "model" when divisible).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (L, B, S_cap, Hk, dh)  stacked over layers
+    v: jnp.ndarray          # (L, B, S_cap, Hk, dh)
+    index: jnp.ndarray      # scalar int32 — next write position (== tokens so far)
+    window: int = 0         # 0 => full cache; >0 => ring buffer of this size
+
+    @property
+    def capacity(self):
+        return self.k.shape[2]
+
+
+def init_cache(num_layers, batch, capacity, num_kv_heads, head_dim,
+               dtype=jnp.bfloat16, window=0, prefill_len=0):
+    shape = (num_layers, batch, capacity, num_kv_heads, head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        index=jnp.asarray(prefill_len, jnp.int32),
+        window=window,
+    )
+
+
+def cache_layer(cache: KVCache, layer: int):
+    return cache.k[layer], cache.v[layer]
+
+
+def update_layer(cache_k, cache_v, index, new_k, new_v, window=0):
+    """Write one decode step (new_k/new_v: (B, 1, Hk, dh)) at `index`.
+
+    Returns updated (cache_k, cache_v). For window caches the write position
+    wraps (ring buffer).
+    """
+    cap = cache_k.shape[1]
+    pos = jnp.where(window > 0, index % cap, index)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, new_k, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, new_v, pos, axis=1)
+    return cache_k, cache_v
+
+
+def valid_mask(index, capacity, window=0):
+    """(capacity,) bool — which cache slots hold valid, attendable entries."""
+    slots = jnp.arange(capacity)
+    if window > 0:
+        n_valid = jnp.minimum(index + 1, capacity)
+        return slots < n_valid            # ring buffer: everything written
+    return slots <= index                 # linear cache: prefix

@@ -1,0 +1,178 @@
+"""Foundational neural-net layers in pure JAX (pytree params, no flax).
+
+Every layer is a pair of functions:
+    init_<layer>(key, ...) -> params (nested dict of jnp arrays)
+    <layer>(params, x, ...) -> output
+
+Parameter dicts use conventional key names ("kernel", "embed", "wq", ...)
+that `repro.sharding.specs` pattern-matches to build PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def lecun_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / math.sqrt(max(1, fan_in))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_norm(kind, d, dtype=jnp.float32):
+    return init_layernorm(d, dtype) if kind == "layernorm" else init_rmsnorm(d, dtype)
+
+
+def apply_norm(kind, params, x, eps=1e-6):
+    return layernorm(params, x, eps) if kind == "layernorm" else rmsnorm(params, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d, dtype=jnp.float32):
+    return {"embed": normal_init(key, (vocab, d), stddev=1.0 / math.sqrt(d), dtype=dtype)}
+
+
+def embed(params, tokens, dtype=jnp.bfloat16):
+    return jnp.take(params["embed"].astype(dtype), tokens, axis=0)
+
+
+def unembed(params, x):
+    # logits in fp32 for a stable softmax-xent
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      params["embed"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta=1e4):
+    d2 = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(d2, dtype=jnp.float32) / d2))
+
+
+def apply_rope(x, positions, theta=1e4):
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., S, 1, dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in, d_out, use_bias=False, dtype=jnp.float32):
+    p = {"kernel": lecun_init(key, (d_in, d_out), dtype=dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = jnp.einsum("...d,df->...f", x, params["kernel"].astype(x.dtype))
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+def init_swiglu_mlp(key, d, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": lecun_init(k1, (d, d_ff), dtype=dtype),
+        "wi_up": lecun_init(k2, (d, d_ff), dtype=dtype),
+        "wo": lecun_init(k3, (d_ff, d), fan_in=d_ff, dtype=dtype),
+    }
+
+
+def swiglu_mlp(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, params["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))
+
+
+def init_gelu_mlp(key, d, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": init_dense(k1, d, d_ff, use_bias=True, dtype=dtype),
+        "wo": init_dense(k2, d_ff, d, use_bias=True, dtype=dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    return dense(params["wo"], jax.nn.gelu(dense(params["wi"], x)))
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding helper (no-op off-mesh)
+# ---------------------------------------------------------------------------
+
+def shard_activation(x, spec, remap=True):
+    """Apply with_sharding_constraint iff we are under a mesh context.
+    remap=False keeps the spec literal regardless of sharding profile
+    (used for the loss-region vocab sharding, which must stay
+    model-sharded even under batch-everywhere profiles)."""
+    try:
+        env_mesh = jax.sharding.get_abstract_mesh()
+        if env_mesh is None or env_mesh.empty:  # not under a mesh
+            return x
+        # translate for the active sharding profile; drop non-dividing axes
+        from repro.sharding.specs import fit_spec, remap_act_spec
+        if remap:
+            spec = remap_act_spec(spec, env_mesh)
+        return jax.lax.with_sharding_constraint(
+            x, fit_spec(x.shape, spec, env_mesh))
+    except Exception:
+        return x

@@ -1,0 +1,133 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — compressed KV cache.
+
+The KV path is low-rank: tokens are projected to a `kv_lora_rank`-dim latent
+`c_kv` (plus a small shared rotary key `k_pe`); per-head keys/values are
+expanded from the latent. Only (c_kv, k_pe) is cached at decode —
+r + rope_dim = 512 + 64 floats/token vs H*(dh_k+dh_v) = 16*256 = 4096 for
+vanilla MHA: a ~7x cache compression.
+
+Decode uses the *absorbed* form: w_uk is folded into the query
+(q_lat = q_nope @ w_uk) so scores are taken directly against the latent
+cache, and the attention output stays in latent space until w_uv — no
+per-step re-expansion of the full K/V tensors.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, apply_rope
+
+NEG_INF = -2.0e38
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.num_heads
+    r, rope, nope, vdim = (cfg.kv_lora_rank, cfg.qk_rope_dim,
+                           cfg.qk_nope_dim, cfg.v_head_dim)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init_dense(ks[0], d, H * (nope + rope), dtype=dtype),
+        "w_dkv": init_dense(ks[1], d, r, dtype=dtype),
+        "w_kpe": init_dense(ks[2], d, rope, dtype=dtype),
+        "w_uk": init_dense(ks[3], r, H * nope, dtype=dtype),
+        "w_uv": init_dense(ks[4], r, H * vdim, dtype=dtype),
+        "wo": init_dense(ks[5], H * vdim, d, dtype=dtype),
+    }
+
+
+def _q_proj(params, cfg, x, positions):
+    H = cfg.num_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = dense(params["wq"], x).reshape(*x.shape[:-1], H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(params, cfg, x, *, positions, mask=None):
+    """Train/prefill path (expanded K/V). x: (B,S,D).
+
+    MLA scores decompose as concat(q_nope, q_rope)·concat(k_nope, k_pe),
+    so the online-softmax chunked path (attn_impl="chunked") reuses the
+    shared `chunked_attention` on the concatenated heads — no (S,S)
+    score tensor at 32k prefill.
+    """
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, vdim, rope = cfg.qk_nope_dim, cfg.v_head_dim, cfg.qk_rope_dim
+
+    q_nope, q_rope = _q_proj(params, cfg, x, positions)
+    c_kv = dense(params["w_dkv"], x)                                # (B,S,r)
+    k_pe = apply_rope(dense(params["w_kpe"], x)[..., None, :],
+                      positions, cfg.rope_theta)                    # (B,S,1,rope)
+    k_nope = dense(params["w_uk"], c_kv).reshape(B, S, H, nope)
+    v = dense(params["w_uv"], c_kv).reshape(B, S, H, vdim)
+
+    if cfg.attn_impl == "chunked":
+        from repro.models.attention import chunked_attention
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe, (B, S, H, rope))], axis=-1)
+        out = chunked_attention(q_cat, k_cat, v, causal=True,
+                                chunk=cfg.attn_chunk)
+        out = out.reshape(B, S, H * vdim)
+        return dense(params["wo"], out)
+
+    scale = 1.0 / math.sqrt(nope + rope)
+    logits = (jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum("bshd,btxd->bhst", q_rope.astype(jnp.float32),
+                           k_pe.astype(jnp.float32))) * scale
+    if mask is None:
+        from repro.models.attention import make_attention_mask
+        mask = make_attention_mask(S, S, causal=True)
+    logits = logits + mask
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+    out = out.reshape(B, S, H * vdim).astype(x.dtype)
+    return dense(params["wo"], out)
+
+
+def mla_decode(params, cfg, x, *, positions, c_kv_cache, k_pe_cache,
+               cache_index):
+    """Absorbed decode. x: (B,1,D); caches: (B,cap,1,r)/(B,cap,1,rope).
+
+    Returns (out, new_c_kv_cache, new_k_pe_cache).
+    """
+    B = x.shape[0]
+    H = cfg.num_heads
+    r, nope, vdim, rope = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                           cfg.v_head_dim, cfg.qk_rope_dim)
+    cap = c_kv_cache.shape[1]
+
+    q_nope, q_rope = _q_proj(params, cfg, x, positions)        # (B,1,H,·)
+    c_kv = dense(params["w_dkv"], x)[..., None, :]             # (B,1,1,r)
+    k_pe = apply_rope(dense(params["w_kpe"], x)[..., None, :],
+                      positions, cfg.rope_theta)               # (B,1,1,rope)
+
+    from repro.models import kvcache as kvc
+    c_kv_cache, k_pe_cache = kvc.update_layer(
+        c_kv_cache, k_pe_cache, cache_index, c_kv, k_pe)
+    valid = kvc.valid_mask(cache_index, cap)
+
+    # absorb w_uk into the query: (B,1,H,nope) x (r -> H,nope) => (B,1,H,r)
+    w_uk = params["w_uk"]["kernel"].reshape(r, H, nope)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+
+    scale = 1.0 / math.sqrt(nope + rope)
+    lat = c_kv_cache[:, :, 0, :].astype(jnp.float32)           # (B,cap,r)
+    pe = k_pe_cache[:, :, 0, :].astype(jnp.float32)            # (B,cap,rope)
+    logits = (jnp.einsum("bshr,btr->bhst", q_lat, lat)
+              + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32), pe))
+    logits = logits * scale + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    w = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, lat)               # (B,1,H,r)
+
+    w_uv = params["w_uv"]["kernel"].reshape(r, H, vdim)
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * vdim).astype(x.dtype)
+    return dense(params["wo"], out), c_kv_cache, k_pe_cache

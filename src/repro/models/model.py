@@ -1,0 +1,86 @@
+"""Public model API: build, init, loss, train/prefill/decode entry points,
+and `input_specs` — ShapeDtypeStruct stand-ins for the AOT dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as decode_mod
+from repro.models import transformer
+
+
+class Model:
+    """Thin functional wrapper around the unified transformer."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        return transformer.init_transformer(key, self.cfg)
+
+    def apply(self, params, batch):
+        return transformer.forward(params, self.cfg, batch)
+
+    def loss(self, params, batch):
+        return transformer.loss_fn(params, self.cfg, batch)
+
+    def init_decode_state(self, batch, capacity, prefill_len=0):
+        return decode_mod.init_decode_state(self.cfg, batch, capacity,
+                                            prefill_len)
+
+    def decode_step(self, params, state, tokens):
+        return decode_mod.decode_step(params, self.cfg, state, tokens)
+
+    def param_count(self, params) -> int:
+        return sum(p.size for p in jax.tree.leaves(params))
+
+    # ------------------------------------------------------------------
+    # dry-run input specs (no allocation)
+    # ------------------------------------------------------------------
+
+    def train_batch_specs(self, global_batch, seq_len) -> Dict[str, Any]:
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        specs = {
+            "tokens": sds((global_batch, seq_len), jnp.int32),
+            "labels": sds((global_batch, seq_len), jnp.int32),
+        }
+        if cfg.modality == "vision":
+            specs["vision_embeds"] = sds(
+                (global_batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.encoder_layers:
+            specs["audio_frames"] = sds(
+                (global_batch, cfg.num_frames, cfg.d_model), jnp.bfloat16)
+        return specs
+
+    def decode_state_specs(self, batch, capacity) -> Any:
+        state = jax.eval_shape(
+            lambda: decode_mod.init_decode_state(self.cfg, batch, capacity,
+                                                 prefill_len=capacity - 1))
+        return state
+
+    def decode_token_specs(self, batch):
+        return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)
+
+
+def synthetic_train_batch(key, cfg, batch, seq_len) -> Dict[str, Any]:
+    """Concrete random batch (smoke tests / examples)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab_size)
+    b = {"tokens": tokens,
+         "labels": jnp.concatenate([tokens[:, 1:],
+                                    jnp.full((batch, 1), -1, jnp.int32)], 1)}
+    if cfg.modality == "vision":
+        b["vision_embeds"] = jax.random.normal(
+            k2, (batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder_layers:
+        b["audio_frames"] = jax.random.normal(
+            k3, (batch, cfg.num_frames, cfg.d_model), jnp.bfloat16)
+    return b

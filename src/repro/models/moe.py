@@ -1,0 +1,119 @@
+"""Mixture-of-Experts layer — GShard-style grouped dispatch/combine einsums.
+
+Tokens are reshaped into groups of `moe_group_size`; each group routes its
+tokens into per-expert capacity buffers via one-hot dispatch einsums.  This
+is the TPU-native MoE formulation: the dispatched tensor (e, g, c, d) is
+sharded experts-over-"model" and groups-over-"data", so under pjit the
+dispatch/combine einsums lower to the expert-parallel all-to-all pattern.
+
+Top-k routing with normalized gates, capacity-factor token dropping, and
+the standard load-balance auxiliary loss. Optional always-on shared experts
+(DeepSeek-V2 style).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import lecun_init, init_dense, dense, shard_activation
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init_dense(ks[0], d, E, dtype=jnp.float32),  # router in fp32
+        "experts_gate": lecun_init(ks[1], (E, d, f), fan_in=d, dtype=dtype),
+        "experts_up": lecun_init(ks[2], (E, d, f), fan_in=d, dtype=dtype),
+        "experts_down": lecun_init(ks[3], (E, f, d), fan_in=f, dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.init_swiglu_mlp(
+            ks[4], d, cfg.num_shared_experts * f, dtype=dtype)
+    return p
+
+
+def _capacity(tokens_per_group, top_k, num_experts, capacity_factor):
+    c = int(math.ceil(tokens_per_group * top_k / num_experts * capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def route(router_params, x_groups, num_experts, top_k):
+    """x_groups: (G, S, D) -> gates (G,S,K), experts (G,S,K), raw gates (G,S,E)."""
+    logits = dense(router_params, x_groups.astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)
+    top_vals = top_vals / (jnp.sum(top_vals, -1, keepdims=True) + 1e-9)
+    return top_vals, top_idx, gates
+
+
+def dispatch_combine_masks(top_vals, top_idx, num_experts, capacity):
+    """Build the (G,S,E,C) combine tensor (and boolean dispatch mask).
+
+    Priority is k-major (all primary assignments beat secondary ones),
+    s-minor, matching GShard. Overflowing tokens are dropped.
+    """
+    G, S, K = top_idx.shape
+    oh = jax.nn.one_hot(top_idx, num_experts, dtype=jnp.float32)   # (G,S,K,E)
+    ohk = jnp.swapaxes(oh, 1, 2).reshape(G, K * S, num_experts)    # k-major
+    pos = jnp.cumsum(ohk, axis=1) - ohk                            # pos in expert
+    keep = (pos < capacity).astype(jnp.float32) * ohk
+    pos_k = jnp.sum(pos * keep, axis=-1)                           # (G,K*S)
+    kept_k = jnp.sum(keep, axis=-1)                                # (G,K*S)
+    pos_k = jnp.swapaxes(pos_k.reshape(G, K, S), 1, 2)             # (G,S,K)
+    kept_k = jnp.swapaxes(kept_k.reshape(G, K, S), 1, 2)
+    oh_kept = oh * kept_k[..., None]
+    pos_oh = jax.nn.one_hot(pos_k, capacity, dtype=jnp.float32)    # (G,S,K,C)
+    combine = jnp.einsum("gsk,gske,gskc->gsec", top_vals.astype(jnp.float32),
+                         oh_kept, pos_oh)
+    return combine
+
+
+def load_balance_loss(gates, top_idx, num_experts):
+    """Switch/GShard aux loss: E * sum_e f_e * p_e."""
+    oh = jax.nn.one_hot(top_idx[..., 0], num_experts, dtype=jnp.float32)
+    f_e = jnp.mean(oh, axis=(0, 1))           # fraction routed (primary)
+    p_e = jnp.mean(gates, axis=(0, 1))        # mean router prob
+    return num_experts * jnp.sum(f_e * p_e)
+
+
+def moe_ffn(params, cfg, x):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    tokens = B * S
+    gsz = min(cfg.moe_group_size, tokens)
+    while tokens % gsz:
+        gsz -= 1
+    G = tokens // gsz
+    xg = x.reshape(G, gsz, D)
+    xg = shard_activation(xg, P(("pod", "data"), None, None))
+
+    top_vals, top_idx, gates = route(params["router"], xg, E, K)
+    C = _capacity(gsz, K, E, cfg.capacity_factor)
+    combine = dispatch_combine_masks(top_vals, top_idx, E, C)
+    combine = shard_activation(combine, P(("pod", "data"), None, "model", None))
+    dispatch = (combine > 0).astype(x.dtype)
+
+    # dispatch -> (E, G, C, D): the expert-parallel all-to-all boundary
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    xe = shard_activation(xe, P("model", ("pod", "data"), None, None))
+    g = jnp.einsum("egcd,edf->egcf", xe, params["experts_gate"].astype(x.dtype))
+    u = jnp.einsum("egcd,edf->egcf", xe, params["experts_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("egcf,efd->egcd", h, params["experts_down"].astype(x.dtype))
+    ye = shard_activation(ye, P("model", ("pod", "data"), None, None))
+
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), ye)
+    out = out.reshape(B, S, D)
+
+    if cfg.num_shared_experts:
+        out = out + layers.swiglu_mlp(params["shared"], x)
+
+    aux = load_balance_loss(gates, top_idx, E)
+    return out, aux

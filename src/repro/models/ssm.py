@@ -1,0 +1,197 @@
+"""Mamba2 (SSD) block — chunked scan for train/prefill, O(1) state decode.
+
+Scalar-per-head A (the SSD restriction), n_groups=1 shared B/C.  The
+train-time path uses the chunked state-space-dual algorithm: quadratic
+attention-like compute *within* chunks of length Q, a `lax.scan` carrying
+the (H, dh, N) state *across* chunks — sub-quadratic in sequence length,
+which is what makes the `long_500k` shape feasible for zamba2.
+
+Decode keeps a recurrent state (B,H,dh,N) + a (W-1)-deep conv ring — O(1)
+memory per generated token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, dense, init_rmsnorm, rmsnorm
+
+
+def d_inner(cfg):
+    return cfg.mamba_expand * cfg.d_model
+
+
+def ssm_heads(cfg):
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def conv_channels(cfg):
+    return d_inner(cfg) + 2 * cfg.ssm_state
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di, N, H = d_inner(cfg), cfg.ssm_state, ssm_heads(cfg)
+    W = cfg.conv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        # z (gate), x, B, C, dt
+        "in_proj": init_dense(ks[0], d, 2 * di + 2 * N + H, dtype=dtype),
+        "conv1d": (jax.random.normal(ks[1], (W, conv_channels(cfg)))
+                   / math.sqrt(W)).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(dtype),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": init_dense(ks[3], di, d, dtype=dtype),
+    }
+    return p
+
+
+def _causal_depthwise_conv(x, w):
+    """x: (B,S,C), w: (W,C) — causal depthwise conv.
+
+    Expressed as W shifted multiply-adds rather than
+    lax.conv_general_dilated: the grouped-conv backward trips XLA SPMD's
+    "involuntary full rematerialization" under batch-everywhere sharding
+    (a full (global_B, S, C) fp32 all-gather — 200+ GB/step at train_4k);
+    the shift form lowers to elementwise ops that shard trivially.
+    """
+    W = w.shape[0]
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    out = xf * wf[W - 1]
+    for j in range(W - 1):
+        shift = W - 1 - j                       # how far back in time
+        shifted = jnp.pad(xf, ((0, 0), (shift, 0), (0, 0)))[:, :-shift]
+        out = out + shifted * wf[j]
+    return out.astype(x.dtype)
+
+
+def _split_proj(cfg, proj):
+    di, N, H = d_inner(cfg), cfg.ssm_state, ssm_heads(cfg)
+    z = proj[..., :di]
+    xs = proj[..., di:2 * di]
+    Bm = proj[..., 2 * di:2 * di + N]
+    Cm = proj[..., 2 * di + N:2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N:]
+    return z, xs, Bm, Cm, dt
+
+
+def ssd_chunked(xh, a_log, dt, Bm, Cm, chunk=128, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,dh)  a_log: (B,S,H) = A*dt (negative)  dt: (B,S,H)
+    Bm, Cm: (B,S,N).  Returns y: (B,S,H,dh), final state (B,H,dh,N).
+    """
+    Bsz, S, H, dh = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    f32 = jnp.float32
+    xc = xh.reshape(Bsz, nc, Q, H, dh).astype(f32)
+    ac = a_log.reshape(Bsz, nc, Q, H).astype(f32)
+    dc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(f32)
+
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+
+    # one lax.scan over chunks: intra-chunk quadratic form AND the
+    # inter-chunk state recurrence both live inside the scan body, so peak
+    # memory is ONE chunk's (B,Q,Q,H) decay tensor — not all nc of them.
+    def step(h, inp):
+        x_c, a_c, d_c, B_c, C_c = inp                # (B,Q,...)
+        cs = jnp.cumsum(a_c, axis=1)                 # (B,Q,H)
+        G = jnp.einsum("bin,bjn->bij", C_c, B_c)     # (B,Q,Q)
+        L = cs[:, :, None, :] - cs[:, None, :, :]    # (B,Q,Q,H)
+        L = jnp.where(mask[None, :, :, None], jnp.exp(L), 0.0)
+        y_intra = jnp.einsum("bij,bijh,bjh,bjhd->bihd", G, L, d_c, x_c)
+        y_inter = jnp.einsum("bqn,bqh,bhdn->bqhd", C_c, jnp.exp(cs), h)
+        decay_end = jnp.exp(cs[:, -1:, :] - cs)      # (B,Q,H)
+        S_c = jnp.einsum("bqh,bqh,bqn,bqhd->bhdn", decay_end, d_c, B_c, x_c)
+        h_new = jnp.exp(cs[:, -1, :])[:, :, None, None] * h + S_c
+        return h_new, y_intra + y_inter
+
+    init = (jnp.zeros((Bsz, H, dh, N), f32) if h0 is None
+            else h0.astype(f32))
+    chunked = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, ac, dc, Bc, Cc))
+    hT, ys = jax.lax.scan(step, init, chunked)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, dh)
+    return y.astype(xh.dtype), hT
+
+
+def mamba2_forward(params, cfg, x, *, use_kernel=False):
+    """Train/prefill. x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    di, N, H = d_inner(cfg), cfg.ssm_state, ssm_heads(cfg)
+    dh = cfg.ssm_head_dim
+
+    proj = dense(params["in_proj"], x)
+    z, xs, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    xbc = _causal_depthwise_conv(
+        jnp.concatenate([xs, Bm, Cm], -1), params["conv1d"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (H,)
+    a_log = A[None, None, :] * dt                                   # (B,S,H)
+
+    xh = xs.reshape(B, S, H, dh)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, _ = kops.ssm_scan(xh, a_log, dt, Bm, Cm, interpret=kops.on_cpu())
+    else:
+        y, _ = ssd_chunked(xh, a_log, dt, Bm, Cm, chunk=cfg.ssm_chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return dense(params["out_proj"], y)
+
+
+def mamba2_step(params, cfg, x, conv_state, ssm_state):
+    """Decode one token. x: (B,1,D); conv_state: (B,W-1,Cc);
+    ssm_state: (B,H,dh,N). Returns (y, conv_state, ssm_state)."""
+    B = x.shape[0]
+    di, N, H = d_inner(cfg), cfg.ssm_state, ssm_heads(cfg)
+    dh = cfg.ssm_head_dim
+    W = cfg.conv_dim
+
+    proj = dense(params["in_proj"], x)
+    z, xs, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    xbc_new = jnp.concatenate([xs, Bm, Cm], -1)                  # (B,1,Cc)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)      # (B,W,Cc)
+    conv_state = window[:, 1:]
+    w = params["conv1d"].astype(jnp.float32)                     # (W,Cc)
+    xbc = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w)[:, None, :]
+    xbc = jax.nn.silu(xbc).astype(x.dtype)
+    xs, Bm, Cm = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(A[None, :] * dt)                                  # (B,H)
+
+    xh = xs[:, 0].reshape(B, H, dh).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)                             # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bh,bn,bhd->bhdn", dt, Bv, xh)
+    ssm_state = a[:, :, None, None] * ssm_state + upd
+    y = jnp.einsum("bn,bhdn->bhd", Cv, ssm_state)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return dense(params["out_proj"], y), conv_state, ssm_state

@@ -1,0 +1,368 @@
+"""Unified transformer stack covering all assigned architecture families.
+
+Layer kinds (per-position, from `cfg.layer_kinds()` / `cfg.block_pattern`):
+  attn   — GQA or MLA attention + (dense | MoE) FFN
+  mamba  — Mamba2 SSD block (zamba2)
+  mlstm / slstm — xLSTM blocks
+Plus: zamba2's *shared* attention block (one parameter set invoked every
+`shared_attn_every` mamba layers), gemma3's local/global attention pattern,
+and seamless' encoder-decoder with cross-attention.
+
+Homogeneous stacks are `lax.scan`ned over stacked layer parameters
+(MaxText-style: keeps HLO size and compile time O(1) in depth; remat
+applied to the scan body). Heterogeneous stacks (xlstm's 12 mixed blocks)
+are unrolled Python loops. Decode is always an unrolled loop so per-layer
+cache shapes may differ (window vs full KV).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_mod
+from repro.models import layers, mla, moe, ssm, xlstm
+from repro.models.layers import (apply_norm, dense, embed, init_dense,
+                                 init_embedding, init_norm, shard_activation,
+                                 unembed)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(key, cfg, cross=False, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    p = {
+        "attn_norm": init_norm(cfg.norm_type, cfg.d_model, dtype),
+        "mlp_norm": init_norm(cfg.norm_type, cfg.d_model, dtype),
+    }
+    if cfg.attention_kind == "mla":
+        p["attn"] = mla.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, dtype)
+    if cross:
+        p["cross_norm"] = init_norm(cfg.norm_type, cfg.d_model, dtype)
+        p["cross_attn"] = attn_mod.init_attention(ks[1], cfg, dtype)
+    if cfg.moe:
+        p["mlp"] = moe.init_moe(ks[2], cfg, dtype)
+    elif cfg.d_ff > 0:
+        if cfg.norm_type == "layernorm":   # seamless-style gelu FFN
+            p["mlp"] = layers.init_gelu_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["mlp"] = layers.init_swiglu_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_layer_of_kind(key, cfg, kind, dtype=jnp.float32):
+    if kind == "attn":
+        return _init_attn_layer(key, cfg, dtype=dtype)
+    if kind == "mamba":
+        return {"norm": init_norm(cfg.norm_type, cfg.d_model, dtype),
+                "mamba": ssm.init_mamba2(key, cfg, dtype)}
+    if kind == "mlstm":
+        return {"norm": init_norm(cfg.norm_type, cfg.d_model, dtype),
+                "mlstm": xlstm.init_mlstm(key, cfg, dtype)}
+    if kind == "slstm":
+        return {"norm": init_norm(cfg.norm_type, cfg.d_model, dtype),
+                "slstm": xlstm.init_slstm(key, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def _stack_init(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def is_homogeneous(cfg) -> bool:
+    kinds = set(cfg.layer_kinds())
+    return kinds == {"attn"} or kinds == {"mamba"}
+
+
+def init_transformer(key, cfg) -> Params:
+    dtype = cfg.parameter_dtype
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"embed": init_embedding(ks[0], cfg.vocab_size,
+                                                 cfg.d_model, dtype)}
+    kinds = cfg.layer_kinds()
+
+    if is_homogeneous(cfg) and cfg.scan_layers:
+        init_one = functools.partial(
+            _init_layer_of_kind, cfg=cfg, kind=kinds[0], dtype=dtype)
+        p["layers"] = _stack_init(lambda k: init_one(k), ks[1], cfg.num_layers)
+    else:
+        p["blocks"] = [
+            _init_layer_of_kind(k, cfg, kind, dtype)
+            for k, kind in zip(jax.random.split(ks[1], cfg.num_layers), kinds)
+        ]
+
+    if cfg.shared_attn_every:       # zamba2's shared block
+        shared_cfg = cfg.with_updates(moe=False)
+        p["shared_attn"] = _init_attn_layer(ks[2], shared_cfg, dtype=dtype)
+
+    p["final_norm"] = init_norm(cfg.norm_type, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_dense(ks[3], cfg.d_model, cfg.vocab_size,
+                                  dtype=dtype)
+
+    if cfg.modality == "vision":
+        p["vision_proj"] = init_dense(ks[4], cfg.d_model, cfg.d_model,
+                                      dtype=dtype)
+    if cfg.encoder_layers:          # encoder-decoder (seamless)
+        enc_cfg = cfg.with_updates(moe=False)
+        ek = jax.random.split(ks[5], 3)
+        p["encoder"] = {
+            "input_proj": init_dense(ek[0], cfg.d_model, cfg.d_model,
+                                     use_bias=True, dtype=dtype),
+            "layers": _stack_init(
+                lambda k: _init_attn_layer(k, enc_cfg, dtype=dtype),
+                ek[1], cfg.encoder_layers),
+            "final_norm": init_norm(cfg.norm_type, cfg.d_model, dtype),
+        }
+        # decoder layers get cross-attention
+        p["blocks"] = None
+        p["layers"] = _stack_init(
+            lambda k: _init_attn_layer(k, cfg, cross=True, dtype=dtype),
+            ks[6], cfg.num_layers)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_window(cfg, layer_idx):
+    """Static window size for a layer (gemma3 local/global pattern)."""
+    if cfg.sliding_window and cfg.global_every:
+        is_global = (layer_idx + 1) % cfg.global_every == 0
+        return 0 if is_global else cfg.sliding_window
+    return cfg.sliding_window
+
+
+def _apply_attn_layer(lp, cfg, x, *, positions, mask, enc_out=None,
+                      window=0):
+    h = apply_norm(cfg.norm_type, lp["attn_norm"], x, cfg.norm_eps)
+    if cfg.attention_kind == "mla":
+        a = mla.mla_attention(lp["attn"], cfg, h, positions=positions,
+                              mask=mask)
+    else:
+        a = attn_mod.attention(lp["attn"], cfg, h, positions=positions,
+                               mask=mask, window=window)
+    x = x + a
+    aux = jnp.zeros((), jnp.float32)
+    if enc_out is not None:
+        h = apply_norm(cfg.norm_type, lp["cross_norm"], x, cfg.norm_eps)
+        Hk, dh = cfg.num_kv_heads, cfg.head_dim
+        k = dense(lp["cross_attn"]["wk"], enc_out)
+        v = dense(lp["cross_attn"]["wv"], enc_out)
+        k = k.reshape(*k.shape[:-1], Hk, dh)
+        v = v.reshape(*v.shape[:-1], Hk, dh)
+        c = attn_mod.attention(lp["cross_attn"], cfg, h, positions=positions,
+                               mask=None, causal=False, kv_override=(k, v))
+        x = x + c
+    if "mlp" in lp:
+        h = apply_norm(cfg.norm_type, lp["mlp_norm"], x, cfg.norm_eps)
+        if cfg.moe:
+            y, aux = moe.moe_ffn(lp["mlp"], cfg, h)
+        elif cfg.norm_type == "layernorm":
+            y = layers.gelu_mlp(lp["mlp"], h)
+        else:
+            y = layers.swiglu_mlp(lp["mlp"], h)
+        x = x + y
+    return x, aux
+
+
+def _apply_kind(lp, cfg, kind, x, *, positions, mask, enc_out=None,
+                window=0):
+    if kind == "attn":
+        return _apply_attn_layer(lp, cfg, x, positions=positions, mask=mask,
+                                 enc_out=enc_out, window=window)
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm_type, lp["norm"], x, cfg.norm_eps)
+    if kind == "mamba":
+        return x + ssm.mamba2_forward(lp["mamba"], cfg, h), aux
+    if kind == "mlstm":
+        return x + xlstm.mlstm_block(lp["mlstm"], cfg, h), aux
+    if kind == "slstm":
+        y, _ = xlstm.slstm_forward(lp["slstm"], cfg, h)
+        return x + y, aux
+    raise ValueError(kind)
+
+
+def _scan_stack(stacked, cfg, x, *, positions, masks, enc_out=None,
+                kind="attn", shared_attn=None, shared_flags=None,
+                window_flags=None):
+    """Scan homogeneous layers. masks: dict of precomputed additive masks."""
+    act_spec = P("data", None, None)
+
+    def body(carry, inp):
+        x, aux_sum = carry
+        window = 0
+        if window_flags is not None:
+            lp, is_global = inp[0], inp[1]
+            if masks.get("local") is not None:
+                mask = jnp.where(is_global, masks["global"], masks["local"])
+            else:   # chunked attention: dynamic per-layer window scalar
+                mask = None
+                window = jnp.where(is_global, 0, cfg.sliding_window)
+        else:
+            lp = inp[0] if isinstance(inp, tuple) else inp
+            mask = masks["default"]
+            window = 0 if masks["default"] is not None else cfg.sliding_window
+        if shared_flags is not None:
+            use_shared = inp[1]
+            def with_shared(x):
+                y, _ = _apply_attn_layer(shared_attn, cfg, x,
+                                         positions=positions,
+                                         mask=masks["default"])
+                return y
+            x = jax.lax.cond(use_shared, with_shared, lambda x: x, x)
+        x, aux = _apply_kind(lp, cfg, kind, x, positions=positions,
+                             mask=mask, enc_out=enc_out, window=window)
+        x = shard_activation(x, act_spec)
+        return (x, aux_sum + aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    L = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    xs: Any = (stacked,)
+    if window_flags is not None:
+        xs = (stacked, window_flags)
+    elif shared_flags is not None:
+        xs = (stacked, shared_flags)
+    (x, aux_sum), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux_sum
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """batch: {"tokens": (B,S) int32, ["vision_embeds"|"audio_frames"]}.
+
+    Returns (logits (B, S_total, V), aux_loss scalar).
+    """
+    adt = cfg.activation_dtype
+    tokens = batch["tokens"]
+    B, S_tok = tokens.shape
+    x = embed(params["embed"], tokens, adt)
+
+    if cfg.modality == "vision":
+        vis = dense(params["vision_proj"], batch["vision_embeds"].astype(adt))
+        x = jnp.concatenate([vis, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = shard_activation(x, P("data", None, None))
+
+    enc_out = None
+    if cfg.encoder_layers:
+        frames = batch["audio_frames"].astype(adt)
+        e = dense(params["encoder"]["input_proj"], frames)
+        F = e.shape[1]
+        epos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+        emask = jnp.zeros((F, F), jnp.float32)   # bidirectional
+        e, _ = _scan_stack(params["encoder"]["layers"],
+                           cfg.with_updates(moe=False), e,
+                           positions=epos, masks={"default": emask})
+        enc_out = apply_norm(cfg.norm_type, params["encoder"]["final_norm"],
+                             e, cfg.norm_eps)
+
+    kinds = cfg.layer_kinds()
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.attn_impl == "chunked":
+        # online-softmax path: no (S,S) mask tensors; windows are scalars
+        masks = {"default": None, "global": None, "local": None}
+    else:
+        causal = attn_mod.make_attention_mask(S, S, causal=True)
+        masks = {"default": causal, "global": causal}
+        if cfg.sliding_window:
+            masks["local"] = attn_mod.make_attention_mask(
+                S, S, causal=True, window=cfg.sliding_window)
+            if not cfg.global_every:
+                masks["default"] = masks["local"]
+
+    if "layers" in params and params.get("layers") is not None:
+        kind = kinds[0] if is_homogeneous(cfg) else "attn"
+        window_flags = None
+        if cfg.sliding_window and cfg.global_every:
+            window_flags = jnp.array(
+                [(i + 1) % cfg.global_every == 0 for i in range(cfg.num_layers)])
+        shared_flags = None
+        if cfg.shared_attn_every:
+            shared_flags = jnp.array(
+                [i > 0 and i % cfg.shared_attn_every == 0
+                 for i in range(cfg.num_layers)])
+        x, aux_total = _scan_stack(
+            params["layers"], cfg, x, positions=positions, masks=masks,
+            enc_out=enc_out, kind=kind,
+            shared_attn=params.get("shared_attn"),
+            shared_flags=shared_flags, window_flags=window_flags)
+    else:
+        def one_block(lp, x, kind, w, mask):
+            return _apply_kind(lp, cfg, kind, x, positions=positions,
+                               mask=mask, enc_out=enc_out, window=w)
+        if cfg.remat:
+            one_block = jax.checkpoint(one_block, prevent_cse=False,
+                                       static_argnums=(2, 3))
+        for i, (lp, kind) in enumerate(zip(params["blocks"], kinds)):
+            if (cfg.shared_attn_every and i > 0
+                    and i % cfg.shared_attn_every == 0):
+                x, _ = _apply_attn_layer(params["shared_attn"], cfg, x,
+                                         positions=positions,
+                                         mask=masks["default"])
+            w = _layer_window(cfg, i)
+            mask = masks["local"] if (w and masks.get("local") is not None) \
+                else masks["default"]
+            x, aux = one_block(lp, x, kind, w, mask)
+            aux_total = aux_total + aux
+
+    x = apply_norm(cfg.norm_type, params["final_norm"], x, cfg.norm_eps)
+    # reshard the final hidden states to batch-over-"data" BEFORE the
+    # unembed matmul so its (B,S,V) output is born (data, _, model)-sharded
+    # — no unsharded fp32 full-vocab intermediate exists at any point
+    x = shard_activation(x, P("data", None, None), remap=False)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["unembed"], x).astype(jnp.float32)
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    # vocab over "model": keeps the (B,S,V) tensor (and its backward
+    # matmuls) sharded — the dominant activation for large-vocab archs.
+    # Literal (no profile remap): under batch-everywhere profiles the
+    # batch axes cannot also cover the vocab dim.
+    logits = shard_activation(logits, P("data", None, "model"), remap=False)
+    return logits, aux_total
+
+
+def loss_fn(params, cfg, batch):
+    """Causal LM loss. labels: (B, S_tok) with -1 = ignore.
+
+    Computed in a vocab-sharding-friendly form: logsumexp + one-hot einsum
+    (reductions over the sharded vocab dim lower to (B,S)-sized psums;
+    no gather / full-vocab log-softmax tensor is materialized).
+    """
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    # logits for token positions only (vision prefix predicts nothing)
+    S_tok = labels.shape[1]
+    logits = logits[:, -S_tok:, :]
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)          # (B,S)
+    onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - label_logit
+    nll = jnp.sum(nll * valid) / jnp.maximum(1, jnp.sum(valid))
+    return nll + cfg.aux_loss_weight * aux, {"nll": nll, "aux": aux}

@@ -1,0 +1,283 @@
+"""xLSTM blocks — mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM: exponential input gate + forget gate over a matrix memory
+C_t = f C_{t-1} + i v k^T. Training uses the stabilized *parallel*
+(attention-like) form from the xLSTM paper; decode carries (C, n, m) —
+O(1) per token, which makes `long_500k` decode feasible.
+
+sLSTM: true recurrence (h_{t-1} feeds the gates) with scalar memory and
+the max-stabilizer trick; computed with `lax.scan` over time.
+
+Blocks carry their own up/down projections (the assigned xlstm-125m config
+has d_ff=0: no separate FFN block). mLSTM uses pre-up-projection
+(proj_factor 2), sLSTM operates at model width with a GeLU MLP after.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (init_dense, dense, init_rmsnorm, rmsnorm,
+                                 lecun_init)
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg):
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    dh = di // H
+    return di, H, dh
+
+
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di, H, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": init_dense(ks[0], d, di, dtype=dtype),
+        "gate_proj": init_dense(ks[1], d, di, dtype=dtype),
+        "wq": init_dense(ks[2], di, di, dtype=dtype),
+        "wk": init_dense(ks[3], di, di, dtype=dtype),
+        "wv": init_dense(ks[4], di, di, dtype=dtype),
+        "wi": init_dense(ks[5], di, H, use_bias=True, dtype=dtype),
+        "wf": init_dense(ks[6], di, H, use_bias=True, dtype=dtype),
+        "norm": init_rmsnorm(di, dtype),
+        "down_proj": init_dense(ks[7], di, d, dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(params, cfg, u):
+    di, H, dh = _mlstm_dims(cfg)
+    B = u.shape[0]
+    S = u.shape[1]
+    q = dense(params["wq"], u).reshape(B, S, H, dh)
+    k = dense(params["wk"], u).reshape(B, S, H, dh) / math.sqrt(dh)
+    v = dense(params["wv"], u).reshape(B, S, H, dh)
+    i_raw = dense(params["wi"], u).astype(jnp.float32)   # (B,S,H)
+    f_raw = dense(params["wf"], u).astype(jnp.float32)
+    return q, k, v, i_raw, f_raw
+
+
+def mlstm_parallel(q, k, v, i_raw, f_raw):
+    """Stabilized parallel mLSTM. q,k,v: (B,S,H,dh); gates (B,S,H)."""
+    B, S, H, dh = q.shape
+    f32 = jnp.float32
+    log_f = jax.nn.log_sigmoid(f_raw)                     # (B,S,H)
+    F = jnp.cumsum(log_f, axis=1)                         # (B,S,H)
+    # D[t,j] = F_t - F_j + i_j   for j<=t
+    D = (F[:, :, None, :] - F[:, None, :, :]
+         + i_raw[:, None, :, :])                          # (B,S,S,H)
+    causal = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+    D = jnp.where(causal[None, :, :, None], D, NEG_INF)
+    m = jnp.max(D, axis=2, keepdims=True)                 # (B,S,1,H)
+    Dp = jnp.exp(D - m)
+    logits = jnp.einsum("bthd,bjhd->btjh", q.astype(f32), k.astype(f32))
+    W = logits * Dp
+    norm = jnp.maximum(jnp.abs(jnp.sum(W, axis=2)), jnp.exp(-m[:, :, 0, :]))
+    h = jnp.einsum("btjh,bjhd->bthd", W, v.astype(f32)) / norm[..., None]
+    return h.astype(q.dtype)
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, chunk=256):
+    """Chunked, stabilized mLSTM — O(S * chunk) memory instead of O(S^2).
+
+    Carries (C: (B,H,dh,dh), n: (B,H,dh), m: (B,H)) across chunks with a
+    running max-stabilizer, exactly like the decode recurrence but at
+    chunk granularity (the xLSTM analogue of Mamba2's SSD chunking).
+    """
+    B, S, H, dh = q.shape
+    f32 = jnp.float32
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    qc = jnp.moveaxis(q.reshape(B, nc, Q, H, dh), 1, 0).astype(f32)
+    kc = jnp.moveaxis(k.reshape(B, nc, Q, H, dh), 1, 0).astype(f32)
+    vc = jnp.moveaxis(v.reshape(B, nc, Q, H, dh), 1, 0).astype(f32)
+    ic = jnp.moveaxis(i_raw.reshape(B, nc, Q, H), 1, 0)
+    fc = jnp.moveaxis(f_raw.reshape(B, nc, Q, H), 1, 0)
+
+    causal = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+
+    def body(carry, inp):
+        Cst, nst, mst = carry                      # (B,H,dh,dh),(B,H,dh),(B,H)
+        qt, kt, vt, it, ft = inp
+        log_f = jax.nn.log_sigmoid(ft)             # (B,Q,H)
+        F = jnp.cumsum(log_f, axis=1)
+        # intra-chunk log weights D[t,j] = F_t - F_j + i_j  (j <= t)
+        D = F[:, :, None, :] - F[:, None, :, :] + it[:, None, :, :]
+        D = jnp.where(causal[None, :, :, None], D, NEG_INF)
+        m_intra = jnp.max(D, axis=2)               # (B,Q,H)
+        # inter-chunk: state carries scale mst; decay to t is F_t
+        m_inter = F + mst[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)        # (B,Q,H)
+
+        w_intra = jnp.exp(D - m_t[:, :, None, :])
+        s = jnp.einsum("bthd,bjhd->btjh", qt, kt)
+        num_intra = jnp.einsum("btjh,btjh,bjhd->bthd", s, w_intra, vt)
+        den_intra = jnp.einsum("btjh,btjh->bth", s, w_intra)
+
+        scale_inter = jnp.exp(m_inter - m_t)       # (B,Q,H)
+        # C[d,e] accumulates v_d k_e — contract q against the k index (e)
+        num_inter = jnp.einsum("bthe,bhde->bthd", qt, Cst) \
+            * scale_inter[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qt, nst) * scale_inter
+
+        num = num_intra + num_inter
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        h = num / den[..., None]
+
+        # state update to chunk end
+        F_end = F[:, -1, :]                        # (B,H)
+        m_new = jnp.maximum(mst + F_end,
+                            jnp.max(it + F_end[:, None, :] - F, axis=1))
+        w_upd = jnp.exp(it + F_end[:, None, :] - F
+                        - m_new[:, None, :])                  # (B,Q,H)
+        C_new = (jnp.exp(mst + F_end - m_new)[:, :, None, None] * Cst
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", w_upd, vt, kt))
+        n_new = (jnp.exp(mst + F_end - m_new)[:, :, None] * nst
+                 + jnp.einsum("bjh,bjhd->bhd", w_upd, kt))
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, H, dh, dh), f32)
+    n0 = jnp.zeros((B, H, dh), f32)
+    m0 = jnp.full((B, H), -1e30, f32)
+    _, hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh)
+    return h.astype(q.dtype)
+
+
+def mlstm_block(params, cfg, x):
+    u = dense(params["up_proj"], x)
+    g = dense(params["gate_proj"], x)
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(params, cfg, u)
+    if cfg.mlstm_impl == "chunked":
+        h = mlstm_chunked(q, k, v, i_raw, f_raw, chunk=cfg.mlstm_chunk)
+    else:
+        h = mlstm_parallel(q, k, v, i_raw, f_raw)
+    di, H, dh = _mlstm_dims(cfg)
+    h = h.reshape(*x.shape[:-1], di)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps)
+    h = h * jax.nn.silu(g)
+    return dense(params["down_proj"], h)
+
+
+def init_mlstm_state(cfg, batch, dtype=jnp.float32):
+    di, H, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+    }
+
+
+def mlstm_step(params, cfg, x, state):
+    """Decode one token. x: (B,1,D)."""
+    f32 = jnp.float32
+    u = dense(params["up_proj"], x)
+    g = dense(params["gate_proj"], x)
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(params, cfg, u)
+    q, k, v = (t[:, 0].astype(f32) for t in (q, k, v))    # (B,H,dh)
+    i_raw, f_raw = i_raw[:, 0], f_raw[:, 0]               # (B,H)
+
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + state["m"], i_raw)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    i_s = jnp.exp(i_raw - m_new)
+    C = f_s[..., None, None] * state["C"] + i_s[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", v, k)
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhde,bhe->bhd", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    di, H, dh = _mlstm_dims(cfg)
+    h = h.reshape(x.shape[0], 1, di).astype(x.dtype)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps)
+    h = h * jax.nn.silu(g)
+    return dense(params["down_proj"], h), {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 7)
+    p = {
+        # input-to-gates: z, i, f, o — each (d -> d) headwise
+        "wz": init_dense(ks[0], d, d, use_bias=True, dtype=dtype),
+        "wi": init_dense(ks[1], d, d, use_bias=True, dtype=dtype),
+        "wf": init_dense(ks[2], d, d, use_bias=True, dtype=dtype),
+        "wo_gate": init_dense(ks[3], d, d, use_bias=True, dtype=dtype),
+        # block-diagonal recurrent weights: (H, dh, dh) per gate
+        "rz": lecun_init(ks[4], (H, dh, dh), fan_in=dh, dtype=dtype),
+        "ri": lecun_init(ks[5], (H, dh, dh), fan_in=dh, dtype=dtype),
+        "rf": lecun_init(ks[6], (H, dh, dh), fan_in=dh, dtype=dtype),
+        "norm": init_rmsnorm(d, dtype),
+    }
+    return p
+
+
+def init_slstm_state(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    z = jnp.zeros((batch, H, dh), dtype)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, dh), -1e30, dtype)}
+
+
+def _slstm_cell(params, cfg, zt, it, ft, ot, state):
+    """One sLSTM step; gate preactivations (B,H,dh) already include input."""
+    f32 = jnp.float32
+    h_prev = state["h"].astype(f32)
+    rec = lambda w: jnp.einsum("bhd,hde->bhe", h_prev, w.astype(f32))
+    zt = jnp.tanh(zt + rec(params["rz"]))
+    it = it + rec(params["ri"])
+    ft = ft + rec(params["rf"])
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + state["m"], it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * zt
+    n = jnp.maximum(f_s * state["n"] + i_s, jnp.exp(-m_new))
+    h = jax.nn.sigmoid(ot) * c / n
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(params, cfg, x, state=None):
+    """x: (B,S,D) — sequential scan over time. Returns (y, state)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    f32 = jnp.float32
+    pre = lambda wname: dense(params[wname], x).reshape(B, S, H, dh).astype(f32)
+    z_pre, i_pre, f_pre, o_pre = (pre(w) for w in ("wz", "wi", "wf", "wo_gate"))
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    def step(st, inp):
+        zt, it, ft, ot = inp
+        st = _slstm_cell(params, cfg, zt, it, ft, ot, st)
+        return st, st["h"]
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z_pre, i_pre, f_pre, o_pre))
+    state, hs = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    return rmsnorm(params["norm"], y, cfg.norm_eps), state
+
+
+def slstm_step(params, cfg, x, state):
+    y, state = slstm_forward(params, cfg, x, state)
+    return y, state

@@ -1,0 +1,110 @@
+"""Pure-JAX optimizers as pytree transforms (no optax dependency).
+
+API mirrors the optax gradient-transform convention:
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+
+def sgd(lr, momentum=0.0, nesterov=False):
+    def init(params):
+        if momentum:
+            return {"mu": _tree_zeros_like(params), "count": jnp.zeros((), jnp.int32)}
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        lr_t = lr(state["count"]) if callable(lr) else lr
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            if nesterov:
+                upd = jax.tree.map(lambda m, g: -(lr_t) * (momentum * m + g),
+                                   mu, grads)
+            else:
+                upd = jax.tree.map(lambda m: -(lr_t) * m, mu)
+            return upd, {"mu": mu, "count": state["count"] + 1}
+        return (jax.tree.map(lambda g: -(lr_t) * g, grads),
+                {"count": state["count"] + 1})
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+          moment_dtype=jnp.float32):
+    def init(params):
+        return {
+            "m": _tree_zeros_like(params, moment_dtype),
+            "v": _tree_zeros_like(params, moment_dtype),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr_t = lr(c) if callable(lr) else lr
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                         * jnp.square(g.astype(v.dtype)), state["v"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(m.dtype)
+            return (-lr_t * step).astype(p.dtype)
+
+        return (jax.tree.map(upd, m, v, params),
+                {"m": m, "v": v, "count": c})
+
+    return Optimizer(init, update)
+
+
+def adam(lr, **kw):
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+def cosine_schedule(peak_lr, warmup_steps, total_steps, floor=0.0):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(1, warmup_steps)
+        t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                     0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr

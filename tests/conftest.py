@@ -1,0 +1,16 @@
+"""Test fixtures. NOTE: no XLA_FLAGS device-count override here — tests
+run on the real single CPU device; multi-device mesh behaviour is tested
+via subprocesses (see test_dryrun_small.py) so jax's device-count lock
+never leaks into the main test process."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,170 @@
+"""Data pipeline, partitioning (hypothesis properties), optimizers,
+checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpoint import (latest_checkpoint,
+                                         restore_checkpoint, save_checkpoint)
+from repro.data import partition, synthetic
+from repro.data.pipeline import MarkovLM, image_batches
+from repro.optim import optimizers
+
+
+# -- partitioning --------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(50, 400), clients=st.integers(2, 10),
+       seed=st.integers(0, 50))
+def test_iid_partition_is_exact_cover(n, clients, seed):
+    labels = np.random.default_rng(seed).integers(0, 10, n)
+    parts = partition.iid_partition(labels, clients, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+
+
+@settings(max_examples=10, deadline=None)
+@given(clients=st.integers(2, 6), alpha=st.floats(0.1, 5.0),
+       seed=st.integers(0, 20))
+def test_dirichlet_partition_cover_and_skew(clients, alpha, seed):
+    labels = np.random.default_rng(seed).integers(0, 10, 600)
+    parts = partition.dirichlet_partition(labels, clients, alpha=alpha,
+                                          seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == len(allidx) == 600
+    assert min(len(p) for p in parts) >= 8
+
+
+def test_dirichlet_skew_increases_as_alpha_drops():
+    labels = np.random.default_rng(0).integers(0, 10, 2000)
+    def skew(alpha):
+        parts = partition.dirichlet_partition(labels, 5, alpha=alpha, seed=1)
+        tab = partition.partition_stats(labels, parts).astype(float)
+        tab = tab / tab.sum(1, keepdims=True)
+        return np.mean(np.std(tab, axis=0))
+    assert skew(0.1) > skew(10.0)
+
+
+# -- synthetic data ------------------------------------------------------------
+
+def test_datasets_deterministic_and_shaped():
+    d1 = synthetic.mnist_like(seed=3, n_train=100, n_test=50)
+    d2 = synthetic.mnist_like(seed=3, n_train=100, n_test=50)
+    np.testing.assert_array_equal(d1["train"][0], d2["train"][0])
+    assert d1["train"][0].shape == (100, 28, 28, 1)
+    assert d1["train"][0].min() >= 0 and d1["train"][0].max() <= 1
+    assert set(np.unique(d1["train"][1])) <= set(range(10))
+
+
+def test_fashion_is_harder_than_mnist():
+    """A nearest-class-mean classifier does better on the mnist-like set
+    than the fashion-like one (the hardness gap that drives the paper's
+    per-dataset accuracy difference)."""
+    def ncm_accuracy(ds):
+        xtr, ytr = ds["train"]
+        xte, yte = ds["test"]
+        means = np.stack([xtr[ytr == c].mean(0).ravel() for c in range(10)])
+        d = ((xte.reshape(len(xte), -1)[:, None, :]
+              - means[None, :, :]) ** 2).sum(-1)
+        return float(np.mean(np.argmin(d, 1) == yte))
+    m = synthetic.mnist_like(seed=0, n_train=800, n_test=200)
+    f = synthetic.fashion_like(seed=0, n_train=800, n_test=200)
+    am, af = ncm_accuracy(m), ncm_accuracy(f)
+    assert am > af, (am, af)
+    assert am > 0.5                      # mnist-like is genuinely learnable
+
+
+def test_image_batches_shapes():
+    x = np.zeros((100, 28, 28, 1), np.float32)
+    y = np.zeros((100,), np.int32)
+    bs = list(image_batches(x, y, 32, epochs=2))
+    assert len(bs) == 6
+    assert bs[0]["image"].shape == (32, 28, 28, 1)
+
+
+def test_markov_lm_learnable_structure():
+    lm = MarkovLM(64, branching=3, seed=0)
+    b = next(lm.batches(4, 32, 1))
+    assert b["tokens"].shape == (4, 32)
+    # successors constrained to the transition table
+    for row in b["tokens"]:
+        for t in range(1, len(row)):
+            assert row[t] in lm.next_tokens[row[t - 1]]
+
+
+# -- optimizers ------------------------------------------------------------------
+
+def _quad_loss(p):
+    return jnp.sum((p["x"] - 3.0) ** 2)
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: optimizers.sgd(0.1),
+    lambda: optimizers.sgd(0.05, momentum=0.9),
+    lambda: optimizers.adamw(0.2),
+])
+def test_optimizers_converge_on_quadratic(make_opt):
+    opt = make_opt()
+    params = {"x": jnp.array([0.0, 10.0])}
+    state = opt.init(params)
+    for _ in range(100):
+        g = jax.grad(_quad_loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = optimizers.apply_updates(params, upd)
+    np.testing.assert_allclose(np.asarray(params["x"]), 3.0, atol=5e-2)
+
+
+def test_adamw_weight_decay_shrinks_params():
+    opt = optimizers.adamw(0.1, weight_decay=0.5)
+    params = {"x": jnp.array([5.0])}
+    state = opt.init(params)
+    zero_grad = {"x": jnp.array([0.0])}
+    for _ in range(20):
+        upd, state = opt.update(zero_grad, state, params)
+        params = optimizers.apply_updates(params, upd)
+    assert abs(float(params["x"][0])) < 5.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), max_norm=st.floats(0.1, 5.0))
+def test_clip_by_global_norm(seed, max_norm):
+    g = {"a": jax.random.normal(jax.random.PRNGKey(seed), (10,)) * 10}
+    clipped, norm = optimizers.clip_by_global_norm(g, max_norm)
+    cn = float(optimizers.global_norm(clipped))
+    assert cn <= max_norm * 1.01
+
+
+def test_cosine_schedule_shape():
+    lr = optimizers.cosine_schedule(1.0, 10, 100)
+    assert float(lr(jnp.asarray(0))) < 0.2
+    assert abs(float(lr(jnp.asarray(10))) - 1.0) < 0.11
+    assert float(lr(jnp.asarray(100))) < 0.01
+
+
+# -- checkpointing ----------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"layer": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                      "b": jnp.ones((3,), jnp.bfloat16)},
+            "step_arr": jnp.asarray(7)}
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 42, tree, extra_meta={"note": "t"})
+        assert latest_checkpoint(d) == path
+        restored = restore_checkpoint(path, jax.tree.map(jnp.zeros_like, tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"w": jnp.zeros((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 1, tree)
+        with pytest.raises(ValueError):
+            restore_checkpoint(path, {"w": jnp.zeros((3, 3))})

@@ -1,0 +1,43 @@
+"""The example scripts must actually run (deliverable b)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+def _run(args, timeout=600):
+    out = subprocess.run([sys.executable] + args, capture_output=True,
+                         text=True, timeout=timeout, cwd=ROOT, env=ENV)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-1500:])
+    return out.stdout
+
+
+def test_quickstart_example():
+    out = _run(["examples/quickstart.py", "--arch", "xlstm-125m",
+                "--steps", "8", "--batch", "2", "--seq-len", "64"])
+    assert "loss:" in out and "checkpointed" in out
+
+
+def test_federated_example():
+    out = _run(["examples/federated_image_classification.py",
+                "--strategy", "afl", "--dataset", "mnist", "--rounds", "2",
+                "--clients", "4", "--n-train", "400", "--curves"])
+    assert "testing acc:" in out
+    assert os.path.exists(os.path.join(ROOT, "curves_afl_mnist.csv"))
+
+
+def test_federated_example_noniid_gossip():
+    out = _run(["examples/federated_image_classification.py",
+                "--strategy", "afl", "--gossip", "--non-iid",
+                "--rounds", "2", "--clients", "4", "--n-train", "400"])
+    assert "non-IID" in out
+
+
+def test_serve_decode_example():
+    out = _run(["examples/serve_decode.py", "--arch", "gemma3-4b",
+                "--batch", "2", "--prompt-len", "4", "--gen-len", "8"])
+    assert "decode:" in out and "cache index" in out

@@ -1,0 +1,155 @@
+"""Unit + hypothesis property tests for the FL aggregation operators —
+the paper's Eq. (5) and the three strategy schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import strategies, topology
+from repro.core.fl_types import FLConfig
+
+
+def _trees(n, shape=(4, 3), seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.normal(size=shape).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=shape[1]).astype(np.float32))}
+            for _ in range(n)]
+
+
+# -- fedavg properties (Eq. 5) ----------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 8), seed=st.integers(0, 100))
+def test_fedavg_equal_weights_is_mean(n, seed):
+    trees = _trees(n, seed=seed)
+    agg = strategies.fedavg(trees)
+    exp = np.mean([np.asarray(t["w"]) for t in trees], axis=0)
+    np.testing.assert_allclose(np.asarray(agg["w"]), exp, rtol=1e-4,
+                               atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 100),
+       weights=st.lists(st.floats(0.1, 10.0), min_size=3, max_size=3))
+def test_fedavg_convexity(seed, weights):
+    """Aggregate lies within the per-coordinate min/max of the clients."""
+    trees = _trees(3, seed=seed)
+    agg = strategies.fedavg(trees, weights=weights)
+    stack = np.stack([np.asarray(t["w"]) for t in trees])
+    assert np.all(np.asarray(agg["w"]) <= stack.max(0) + 1e-5)
+    assert np.all(np.asarray(agg["w"]) >= stack.min(0) - 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), perm_seed=st.integers(0, 100))
+def test_fedavg_permutation_invariance(seed, perm_seed):
+    trees = _trees(5, seed=seed)
+    w = list(np.random.default_rng(perm_seed).uniform(0.5, 2.0, 5))
+    order = np.random.default_rng(perm_seed + 1).permutation(5)
+    a1 = strategies.fedavg(trees, weights=w)
+    a2 = strategies.fedavg([trees[i] for i in order],
+                           weights=[w[i] for i in order])
+    np.testing.assert_allclose(np.asarray(a1["w"]), np.asarray(a2["w"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_fedavg_idempotent_on_identical_clients():
+    t = _trees(1)[0]
+    agg = strategies.fedavg([t, t, t], weights=[1, 2, 3])
+    np.testing.assert_allclose(np.asarray(agg["w"]), np.asarray(t["w"]),
+                               rtol=1e-6)
+
+
+# -- hfl two-tier ------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_hfl_two_tier_equals_flat_fedavg(seed):
+    """Sample-count-weighted two-tier aggregation == flat weighted FedAvg
+    (the hierarchy is mathematically transparent; paper §2.1)."""
+    trees = _trees(6, seed=seed)
+    w = list(np.random.default_rng(seed).integers(10, 100, 6).astype(float))
+    groups = topology.hierarchical_groups(6, 3)
+    hier = strategies.hfl_aggregate(trees, groups, weights=w)
+    flat = strategies.fedavg(trees, weights=w)
+    np.testing.assert_allclose(np.asarray(hier["w"]), np.asarray(flat["w"]),
+                               rtol=1e-4)
+
+
+# -- gossip -------------------------------------------------------------------
+
+def test_gossip_preserves_mean_and_contracts():
+    trees = _trees(8, seed=3)
+    nbrs = topology.ring_neighbors(8, 2)
+    mean0 = np.mean([np.asarray(t["w"]) for t in trees], axis=0)
+    cur = trees
+    spread_prev = np.inf
+    for it in range(5):
+        cur = strategies.gossip_round(cur, nbrs)
+        stack = np.stack([np.asarray(t["w"]) for t in cur])
+        np.testing.assert_allclose(stack.mean(0), mean0, rtol=1e-4)
+        spread = np.max(stack.max(0) - stack.min(0))
+        assert spread < spread_prev + 1e-9   # monotone consensus
+        spread_prev = spread
+    assert spread_prev < 0.5 * np.max(
+        np.stack([np.asarray(t["w"]) for t in trees]).max(0)
+        - np.stack([np.asarray(t["w"]) for t in trees]).min(0))
+
+
+# -- cfl merge ----------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(0.05, 0.95), seed=st.integers(0, 50))
+def test_cfl_merge_interpolates(alpha, seed):
+    g, c = _trees(2, seed=seed)
+    merged = strategies.cfl_merge(g, c, alpha)
+    exp = (1 - alpha) * np.asarray(g["w"]) + alpha * np.asarray(c["w"])
+    np.testing.assert_allclose(np.asarray(merged["w"]), exp, rtol=1e-5)
+
+
+def test_cfl_repeated_merge_converges_to_client():
+    g, c = _trees(2, seed=9)
+    cur = g
+    for _ in range(60):
+        cur = strategies.cfl_merge(cur, c, 0.3)
+    np.testing.assert_allclose(np.asarray(cur["w"]), np.asarray(c["w"]),
+                               atol=1e-4)
+
+
+# -- topology ------------------------------------------------------------------
+
+def test_hierarchical_groups_partition():
+    groups = topology.hierarchical_groups(12, 3)
+    flat = sorted(c for g in groups for c in g)
+    assert flat == list(range(12))
+    assert all(len(g) == 4 for g in groups)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 20))
+def test_ring_neighbors_symmetric(n):
+    nbrs = topology.ring_neighbors(n, 2)
+    for c, ns in enumerate(nbrs):
+        for j in ns:
+            assert c in nbrs[j]          # undirected ring
+            assert j != c
+
+
+def test_participation_sampling_bounds():
+    rng = np.random.default_rng(0)
+    for frac in (0.1, 0.5, 1.0):
+        p = topology.sample_participants(rng, 10, frac)
+        assert 1 <= len(p) <= 10
+        assert len(set(p.tolist())) == len(p)
+
+
+# -- kernel-backed fedavg matches tree fedavg ---------------------------------
+
+def test_fedavg_kernel_path_matches():
+    trees = _trees(4, seed=11)
+    w = [1.0, 2.0, 3.0, 4.0]
+    plain = strategies.fedavg(trees, weights=w)
+    kern = strategies.fedavg(trees, weights=w, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(plain["w"]), np.asarray(kern["w"]),
+                               rtol=1e-5)

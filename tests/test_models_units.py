@@ -1,0 +1,187 @@
+"""Unit + property tests for model building blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as am
+from repro.models import layers, moe
+from repro.configs.base import ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- norms --------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), scale=st.floats(0.1, 10))
+def test_rmsnorm_output_rms_is_one(seed, scale):
+    x = scale * jax.random.normal(jax.random.PRNGKey(seed), (4, 64))
+    p = layers.init_rmsnorm(64)
+    y = layers.rmsnorm(p, x)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=0.05)
+
+
+def test_layernorm_zero_mean_unit_var():
+    x = 5 + 3 * jax.random.normal(KEY, (8, 32))
+    p = layers.init_layernorm(32)
+    y = np.asarray(layers.layernorm(p, x))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.var(-1), 1.0, atol=1e-2)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(KEY, (2, 16, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    y = layers.apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """q·k after RoPE depends only on relative offset."""
+    d = 32
+    q = jax.random.normal(KEY, (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+    def dot_at(pq, pk):
+        qr = layers.apply_rope(q, jnp.full((1, 1), pq))
+        kr = layers.apply_rope(k, jnp.full((1, 1), pk))
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-4  # actually differs
+
+
+# -- attention masks ------------------------------------------------------------
+
+def test_causal_mask():
+    m = am.make_attention_mask(4, 4, causal=True)
+    finite = np.asarray(m) == 0.0
+    assert finite.tolist() == [[True, False, False, False],
+                               [True, True, False, False],
+                               [True, True, True, False],
+                               [True, True, True, True]]
+
+
+def test_window_mask():
+    m = am.make_attention_mask(5, 5, causal=True, window=2)
+    ok = np.asarray(m) == 0.0
+    for i in range(5):
+        for j in range(5):
+            assert ok[i, j] == (j <= i and j > i - 2)
+
+
+def test_gqa_equals_repeated_mha():
+    B, S, H, Hk, dh = 2, 8, 4, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hk, dh))
+    mask = am.make_attention_mask(S, S)
+    out_gqa = am.gqa_attention(q, k, v, mask)
+    out_mha = am.gqa_attention(q, jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2),
+                               mask)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               atol=1e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    B, S, H, dh = 1, 8, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, dh))
+    out = am.gqa_attention(q, k, v, am.make_attention_mask(S, S))
+    vmin = np.asarray(v).min(axis=1, keepdims=True)
+    vmax = np.asarray(v).max(axis=1, keepdims=True)
+    o = np.asarray(out)
+    assert np.all(o <= vmax.transpose(0, 1, 2, 3) + 1e-4)
+    assert np.all(o >= vmin.transpose(0, 1, 2, 3) - 1e-4)
+
+
+# -- MoE ------------------------------------------------------------------------
+
+def _moe_cfg(**kw):
+    base = dict(d_model=32, d_ff=64, num_experts=4, top_k=2,
+                moe=True, capacity_factor=1.25, moe_group_size=16,
+                num_shared_experts=0)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_moe_routing_weights_normalized():
+    cfg = _moe_cfg()
+    x = jax.random.normal(KEY, (2, 16, 32))
+    p = moe.init_moe(jax.random.PRNGKey(1), cfg)
+    tv, ti, gates = moe.route(p["router"], x.reshape(2, 16, 32), 4, 2)
+    np.testing.assert_allclose(np.asarray(tv.sum(-1)), 1.0, atol=1e-5)
+    assert np.all(np.asarray(ti) < 4)
+
+
+def test_moe_combine_mass_conservation():
+    """Per-token combine mass == 1 when no token dropped, <= 1 always."""
+    cfg = _moe_cfg(capacity_factor=8.0)   # huge capacity: nothing dropped
+    G, S, E, K, C = 1, 16, 4, 2, 64
+    tv = jnp.full((G, S, K), 0.5)
+    ti = jax.random.randint(KEY, (G, S, K), 0, E)
+    comb = moe.dispatch_combine_masks(tv, ti, E, C)
+    mass = np.asarray(comb.sum(axis=(2, 3)))
+    np.testing.assert_allclose(mass, 1.0, atol=1e-5)
+
+    tight = moe.dispatch_combine_masks(tv, ti, E, 2)   # tiny capacity
+    assert np.all(np.asarray(tight.sum(axis=(2, 3))) <= 1.0 + 1e-5)
+
+
+def test_moe_load_balance_loss_bounds():
+    """Perfectly uniform routing gives loss ~1; collapsed routing ~E."""
+    G, S, E = 4, 64, 4
+    uniform_gates = jnp.full((G, S, E), 1.0 / E)
+    ti = jnp.stack([jnp.arange(S) % E] * G).reshape(G, S, 1)
+    lb_uniform = float(moe.load_balance_loss(uniform_gates, ti, E))
+    assert abs(lb_uniform - 1.0) < 0.05
+    collapsed = jax.nn.one_hot(jnp.zeros((G, S), jnp.int32), E)
+    ti0 = jnp.zeros((G, S, 1), jnp.int32)
+    lb_collapsed = float(moe.load_balance_loss(collapsed, ti0, E))
+    assert abs(lb_collapsed - E) < 0.05
+
+
+def test_moe_ffn_shapes_and_shared_experts():
+    cfg = _moe_cfg(num_shared_experts=2)
+    p = moe.init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 32))
+    out, aux = moe.moe_ffn(p, cfg, x)
+    assert out.shape == x.shape
+    assert np.isfinite(float(aux))
+
+
+def test_moe_capacity_multiple_of_8():
+    assert moe._capacity(512, 8, 128, 1.25) % 8 == 0
+    assert moe._capacity(4, 1, 64, 1.0) >= 8
+
+
+# -- Mamba2 conv (shift form) ---------------------------------------------------
+
+def test_causal_depthwise_conv_matches_lax_conv():
+    """The shift-multiply form (SPMD-safe; see DESIGN.md §7.5) must equal
+    lax.conv_general_dilated exactly."""
+    from repro.models.ssm import _causal_depthwise_conv
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 29, 10))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 10))
+    got = _causal_depthwise_conv(x, w)
+    exp = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding=[(3, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=10)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-6)
+
+
+def test_causal_depthwise_conv_is_causal():
+    from repro.models.ssm import _causal_depthwise_conv
+    x = jnp.zeros((1, 16, 4)).at[0, 8, :].set(1.0)   # impulse at t=8
+    w = jnp.ones((4, 4))
+    y = np.asarray(_causal_depthwise_conv(x, w))
+    assert np.all(y[0, :8] == 0)           # nothing before the impulse
+    assert np.all(y[0, 8:12] == 1)         # width-4 response
+    assert np.all(y[0, 12:] == 0)
