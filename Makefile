@@ -1,0 +1,17 @@
+# Tier-1 verification and common dev entry points.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test deps bench bench-engines
+
+deps:
+	$(PY) -m pip install -r requirements-dev.txt
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run --scale quick
+
+bench-engines:
+	$(PY) -m benchmarks.kernel_bench --scale full

@@ -8,7 +8,9 @@ Sections:
   paper_table2   — precision/recall/F1/accuracy
   paper_fig9_11  — per-round accuracy/loss curves (CSV rows)
   paper_fig13_14 — derived comparisons (accuracy & efficiency ranking)
-  kernels        — micro-bench CSV (name,us_per_call,derived)
+  kernels        — micro-bench CSV (name,us_per_call,derived), including
+                   the loop-vs-vectorized engine round-throughput sweep
+                   over client counts (8 -> 256 at --scale full)
   roofline       — per (arch x shape x mesh) terms from the dry-run cache
 """
 import argparse
@@ -69,8 +71,8 @@ def main():
     for k, v in claims.items():
         print(f"paper_fig13_14,{k},{'PASS' if v else 'FAIL'}")
 
-    print("\n== kernels (name,us_per_call,derived) ==")
-    kernel_bench.main()
+    print("\n== kernels + engine sweep (name,us_per_call,derived) ==")
+    kernel_bench.main(args.scale)
 
     print("\n== roofline (from experiments/dryrun cache) ==")
     roofline_table.main()

@@ -5,6 +5,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 STRATEGIES = ("hfl", "afl", "cfl")
+ENGINES = ("loop", "vectorized")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,9 +50,19 @@ class FLConfig:
     # pod-scale trainer
     local_steps: int = 4           # K local steps between aggregation events
     aggregate_every: int = 1       # rounds between aggregation events
+    # simulation engine
+    engine: str = "loop"           # loop       — per-client Python loop
+                                   #              (paper-faithful timing: one
+                                   #              dispatch per client)
+                                   # vectorized — whole federation stacked,
+                                   #              one vmap-of-scan dispatch
+                                   #              per round + kernel-backed
+                                   #              aggregation (see
+                                   #              core/engine.py)
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
+        assert self.engine in ENGINES, self.engine
         assert self.num_clients % self.num_groups == 0, \
             "clients must divide evenly into groups"
 

@@ -6,6 +6,16 @@ testing accuracy, build time, classification time, precision, recall, F1,
 balanced accuracy, confusion matrix, and per-round accuracy/loss curves
 (Figures 9/11).
 
+Two interchangeable engines run the rounds (`FLConfig.engine`):
+* "loop" — per-client Python loop, one jit dispatch per client. This is
+  the paper-faithful timing surface: build time includes the per-device
+  dispatch/serialization a real per-client deployment pays.
+* "vectorized" — the federation as one stacked pytree; local training is
+  a single compiled scan and aggregation goes through the kernel-backed
+  stacked operators (core/engine.py + strategies stacked section). Same
+  results to float tolerance (tests/test_engine.py), ~3x+ round
+  throughput at 64 clients, scales to federation sizes the loop cannot.
+
 Timing protocol (paper §1.2.6-§1.2.7, interpretation noted in DESIGN.md):
 * Build time — wall-clock of the full federated training procedure.
 * Classification time — wall-clock to produce test-set predictions from
@@ -25,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine as engine_mod
 from repro.core import strategies, topology
 from repro.core.fl_types import FLConfig
 from repro.core.metrics import Timer, classification_metrics
@@ -106,6 +117,9 @@ class FederatedSimulation:
         self.client_data = [(xtr[p], ytr[p]) for p in self.parts]
         self.weights = [len(p) for p in self.parts]
         self.opt = optimizers.sgd(fl.lr, momentum=fl.momentum)
+        self.vec = (engine_mod.VectorizedClientEngine(
+                        fl, self.client_data, self.weights)
+                    if fl.engine == "vectorized" else None)
 
     # -- local work ---------------------------------------------------------
     def _local_train(self, params, cid):
@@ -134,6 +148,17 @@ class FederatedSimulation:
             preds.append(np.asarray(_predict(params, jnp.asarray(x[i:i + batch]))))
         return np.concatenate(preds)
 
+    def set_partition(self, parts):
+        """Re-partition the train split (e.g. Dirichlet non-IID) after
+        construction; rebuilds the vectorized engine state if active."""
+        xtr, ytr = self.dataset["train"]
+        self.parts = parts
+        self.client_data = [(xtr[p], ytr[p]) for p in parts]
+        self.weights = [len(p) for p in parts]
+        if self.vec is not None:
+            self.vec = engine_mod.VectorizedClientEngine(
+                self.fl, self.client_data, self.weights)
+
     # -- strategies ---------------------------------------------------------
     def _warmup(self):
         """Compile the train/predict jits outside the measured windows so
@@ -144,23 +169,48 @@ class FederatedSimulation:
                         self.fl.local_batch_size, np.random.default_rng(0))
         _sgd_epoch(self.init_params, self.opt.init(self.init_params), data,
                    (self.fl.lr, self.fl.momentum))
+        self._warmup_predicts()
+        # local-shard train-accuracy eval shape
+        n_eval = min(len(x), 512)
+        _predict(self.init_params, jnp.asarray(x[:n_eval]))
+
+    def _warmup_predicts(self):
+        """Compile the classification/eval `_predict` shapes (shared by
+        both engines)."""
         x_test = self.dataset["test"][0]
         _predict(self.init_params, jnp.asarray(x_test[:500]))
         _predict(self.init_params, jnp.asarray(x_test))             # full
         shard = -(-len(x_test) // self.fl.num_clients)
         _predict(self.init_params, jnp.asarray(x_test[:shard]))     # shard
-        # local-shard train-accuracy eval shape
-        n_eval = min(len(x), 512)
-        _predict(self.init_params, jnp.asarray(x[:n_eval]))
+
+    def _warmup_vectorized(self):
+        """Compile the vectorized round (train, aggregation kernels, eval)
+        outside the measured windows: dry-run ONE round of the strategy
+        with a throwaway rng seeded like self.rng (shapes are identical,
+        self.rng is untouched), plus the classification-path predicts."""
+        self._warmup_predicts()
+        rng = np.random.default_rng(self.fl.seed)
+        curves = {"train_acc": [], "train_loss": [], "test_acc": []}
+        runner = {"hfl": self._run_hfl_vec, "afl": self._run_afl_vec,
+                  "cfl": self._run_cfl_vec}[self.fl.strategy]
+        served_fn, _ = runner(curves, rng, rounds=1)
+        served_fn()
 
     def run(self) -> FLResult:
         fl = self.fl
         curves = {"train_acc": [], "train_loss": [], "test_acc": []}
-        self._warmup()
+        if self.vec is None:
+            self._warmup()
+        else:
+            self._warmup_vectorized()
         build_timer = Timer()
 
         with build_timer:
-            if fl.strategy == "hfl":
+            if self.vec is not None:
+                runner = {"hfl": self._run_hfl_vec, "afl": self._run_afl_vec,
+                          "cfl": self._run_cfl_vec}[fl.strategy]
+                served_fn, train_acc = runner(curves, self.rng, fl.rounds)
+            elif fl.strategy == "hfl":
                 served_fn, train_acc = self._run_hfl(curves)
             elif fl.strategy == "afl":
                 served_fn, train_acc = self._run_afl(curves)
@@ -295,4 +345,85 @@ class FederatedSimulation:
             self._track(curves, accs, losses, model)
         final = model
         served = lambda: final     # continually-merged model already serves
+        return served, train_acc
+
+    # -- vectorized-engine runners ------------------------------------------
+    # Same schedules as the loop runners above, but the whole federation is
+    # one stacked pytree: local training is a single vmap-of-scan dispatch
+    # per round (core/engine.py) and every aggregation event goes through
+    # the kernel-backed stacked operators (core/strategies.py). Batch
+    # construction consumes `rng` in the loop engine's exact order, so the
+    # engines agree up to float tolerance (see tests/test_engine.py).
+
+    def _run_hfl_vec(self, curves, rng, rounds):
+        fl, eng = self.fl, self.vec
+        w = np.asarray(self.weights, np.float32)
+        all_clients = list(range(fl.num_clients))
+        group_stack = engine_mod.replicate_tree(self.init_params,
+                                                fl.num_groups)
+        global_model = self.init_params
+        train_acc = 0.0
+        for rnd in range(rounds):
+            data = eng.batched_clients(rng, all_clients, fl.local_epochs)
+            params = engine_mod.repeat_groups(group_stack,
+                                              fl.clients_per_group)
+            params, losses, _ = eng.train(params, data)
+            accs = eng.local_accs(params, all_clients)
+            group_stack, group_w = strategies.hfl_tier1_stacked(
+                params, fl.num_groups, w)
+            if (rnd + 1) % fl.hfl_global_every == 0 or rnd == rounds - 1:
+                global_model = strategies.fedavg_stacked(group_stack, group_w)
+                group_stack = engine_mod.replicate_tree(global_model,
+                                                        fl.num_groups)
+            train_acc = float(np.mean(accs))
+            self._track(curves, accs,
+                        np.asarray(losses[:, -eng.nb:]).mean(axis=1),
+                        global_model)
+        final_params = params
+        served = lambda: strategies.hfl_aggregate_stacked(
+            final_params, fl.num_groups, w)
+        return served, train_acc
+
+    def _run_afl_vec(self, curves, rng, rounds):
+        fl, eng = self.fl, self.vec
+        w = np.asarray(self.weights, np.float64)
+        global_model = self.init_params
+        train_acc = 0.0
+        for rnd in range(rounds):
+            participants = topology.sample_participants(
+                rng, fl.num_clients, fl.participation)
+            data = eng.batched_clients(rng, participants, fl.local_epochs)
+            params = engine_mod.replicate_tree(global_model,
+                                               len(participants))
+            params, losses, _ = eng.train(params, data)
+            accs = eng.local_accs(params, participants)
+            if fl.afl_mode == "gossip":
+                nbrs = topology.ring_neighbors(len(participants),
+                                               fl.gossip_neighbors)
+                params = strategies.gossip_stacked(params, nbrs)
+            pw = w[participants]
+            global_model = strategies.afl_aggregate_stacked(params, pw)
+            train_acc = float(np.mean(accs))
+            self._track(curves, accs,
+                        np.asarray(losses[:, -eng.nb:]).mean(axis=1),
+                        global_model)
+        last_params, last_w = params, pw
+        served = lambda: strategies.afl_aggregate_stacked(last_params, last_w)
+        return served, train_acc
+
+    def _run_cfl_vec(self, curves, rng, rounds):
+        fl, eng = self.fl, self.vec
+        model = self.init_params
+        train_acc = 0.0
+        for rnd in range(rounds):
+            order = rng.permutation(fl.num_clients)
+            data = eng.batched_clients(rng, order, fl.local_epochs)
+            model, losses, accs = eng.cfl_round(model, order, data,
+                                                fl.merge_alpha)
+            train_acc = float(np.mean(np.asarray(accs)))
+            self._track(curves, np.asarray(accs),
+                        np.asarray(losses[:, -eng.nb:]).mean(axis=1),
+                        model)
+        final = model
+        served = lambda: final
         return served, train_acc

@@ -96,8 +96,113 @@ def cfl_merge(global_params: Params, client_params: Params,
 
 
 # ===========================================================================
+# stacked-array operators — the vectorized engine's aggregation events
+# ===========================================================================
+# These operate on ONE pytree whose leaves carry a leading client axis
+# (core/engine.py). Every weighted reduction lowers onto the Pallas
+# `fedavg_agg` kernel through the ravel path in kernels/ops.py (interpret
+# mode on CPU, native on TPU); gossip is a dense mixing matmul (each
+# output row mixes several inputs — not a single weighted reduction).
+
+
+def _stacked_weights(n: int, weights) -> jnp.ndarray:
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    return w / jnp.sum(w)
+
+
+def fedavg_stacked(stacked: Params, weights=None, *,
+                   interpret=None) -> Params:
+    """Kernel-backed Eq. (5) over a stacked federation -> single pytree."""
+    from repro.kernels import ops as kops
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    return kops.fedavg_aggregate_stacked(
+        stacked, _stacked_weights(n, weights), interpret=interpret)
+
+
+def hfl_tier1_stacked(stacked: Params, num_groups: int, weights=None, *,
+                      interpret=None):
+    """Group-server aggregation over the contiguous equal-size groups of
+    `topology.hierarchical_groups`: (C, ...) -> ((G, ...) group models,
+    (G,) group sample-weight totals) — one kernel call per group."""
+    from repro.kernels import ops as kops
+    mat = kops.stacked_ravel(stacked)
+    C = mat.shape[0]
+    if C % num_groups:
+        raise ValueError(f"{C} clients not divisible into {num_groups} groups")
+    per = C // num_groups
+    w = (jnp.ones((C,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    rows, totals = [], []
+    for g in range(num_groups):
+        wg = w[g * per:(g + 1) * per]
+        rows.append(kops.fedavg_aggregate(
+            mat[g * per:(g + 1) * per], wg / jnp.sum(wg),
+            interpret=interpret))
+        totals.append(jnp.sum(wg))
+    return (kops.stacked_unravel(stacked, jnp.stack(rows)),
+            jnp.stack(totals))
+
+
+def hfl_aggregate_stacked(stacked: Params, num_groups: int, weights=None, *,
+                          interpret=None) -> Params:
+    """Two-tier HFL on the stack: tier-1 group kernels, tier-2 kernel over
+    the (G, ...) group models weighted by group totals."""
+    groups, gw = hfl_tier1_stacked(stacked, num_groups, weights,
+                                   interpret=interpret)
+    return fedavg_stacked(groups, gw, interpret=interpret)
+
+
+def afl_aggregate_stacked(stacked: Params, weights=None, participate=None, *,
+                          interpret=None) -> Params:
+    """Masked FedAvg over sampled participants: `participate` is a (C,)
+    0/1 mask folded into the kernel weights (non-participants contribute
+    zero; at least one participant required)."""
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    if participate is not None:
+        w = w * jnp.asarray(participate, jnp.float32)
+    return fedavg_stacked(stacked, w, interpret=interpret)
+
+
+def gossip_stacked(stacked: Params, neighbors: List[List[int]]) -> Params:
+    """Synchronous ring gossip on the stack: a (C, C) row-stochastic
+    mixing matrix (self + neighbors, uniform) applied to the raveled
+    parameter matrix. Matches host `gossip_round` exactly."""
+    from repro.kernels import ops as kops
+    mat = kops.stacked_ravel(stacked)
+    C = mat.shape[0]
+    mix = np.zeros((C, C), np.float32)
+    for c, nbrs in enumerate(neighbors):
+        members = [c] + list(nbrs)
+        mix[c, members] = 1.0 / len(members)
+    return kops.stacked_unravel(stacked, jnp.asarray(mix) @ mat)
+
+
+def cfl_merge_stacked(global_params: Params, client_params: Params,
+                      alpha, *, interpret=None) -> Params:
+    """Continual merge as a C=2 kernel reduction with weights
+    (1-alpha, alpha) — same math as host `cfl_merge`, kernel-routed.
+    Traceable (alpha may be a tracer), so it composes with lax.scan."""
+    stacked = jax.tree.map(lambda g, c: jnp.stack([g, c]),
+                           global_params, client_params)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    return fedavg_stacked(stacked, jnp.stack([1.0 - alpha, alpha]),
+                          interpret=interpret)
+
+
+# ===========================================================================
 # mesh-level (inside shard_map) operators — pod-scale FL
 # ===========================================================================
+
+def _axis_size(name: str) -> int:
+    """Static mesh-axis size inside shard_map — `jax.lax.axis_size` on new
+    jax, `jax.core.axis_frame` (which returns the size) on 0.4.x."""
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(name))
+    return int(jax.core.axis_frame(name))
+
 
 def _wavg_psum(params, weight, axes):
     """Weighted mean over mesh axes: psum(w*theta)/psum(w)."""
@@ -125,17 +230,41 @@ def mesh_hfl(params, weight, *, client_axis="data",
                        / jax.lax.psum(gw, pod_axis)).astype(p.dtype),
             group)
 
-    axis_size = jax.lax.axis_size(client_axis)
+    axis_size = _axis_size(client_axis)
     groups = topology.mesh_axis_groups(axis_size, num_groups)
-    # tier 1: group-server aggregate
-    gw = jax.lax.psum(weight, client_axis, axis_index_groups=groups)
-    group = jax.tree.map(
-        lambda p: (jax.lax.psum(p.astype(jnp.float32) * weight, client_axis,
-                                axis_index_groups=groups) / gw).astype(p.dtype),
-        params)
-    # tier 2: global-server aggregate over group models (each group model is
-    # replicated within its group, so the global mean needs 1/group_size).
-    per = axis_size // num_groups
+    # tier 1: group-server aggregate — partial collectives over the
+    # axis_index_groups partition where the backend supports them, else a
+    # one-hot-masked full psum: every device contributes its weighted
+    # params into its group's slot of a (G, ...) expansion, the full-axis
+    # psum produces all G group sums at once, and each device reads back
+    # its own group's row (identical math, 0.4.x-shard_map portable).
+    try:
+        gw = jax.lax.psum(weight, client_axis, axis_index_groups=groups)
+        group = jax.tree.map(
+            lambda p: (jax.lax.psum(p.astype(jnp.float32) * weight,
+                                    client_axis, axis_index_groups=groups)
+                       / gw).astype(p.dtype),
+            params)
+    except NotImplementedError:
+        per = axis_size // num_groups
+        idx = jax.lax.axis_index(client_axis)
+        onehot = (jnp.arange(num_groups) == idx // per).astype(jnp.float32)
+        gw = jnp.tensordot(onehot,
+                           jax.lax.psum(onehot * weight, client_axis), axes=1)
+
+        def tier1(p):
+            e = (onehot.reshape((num_groups,) + (1,) * p.ndim)
+                 * (p.astype(jnp.float32) * weight))
+            return (jnp.tensordot(onehot, jax.lax.psum(e, client_axis),
+                                  axes=1) / gw).astype(p.dtype)
+
+        group = jax.tree.map(tier1, params)
+    # tier 2: global-server aggregate over group models. Each group model
+    # is replicated across its (equal-size) group, so the gw-weighted sum
+    # over the full axis overcounts numerator AND denominator by exactly
+    # the group size — the factors cancel and this is the correct
+    # group-weight-weighted mean (pinned against host `hfl_aggregate` in
+    # test_fl_mesh_dryrun.py::test_mesh_hfl_matches_host).
     return jax.tree.map(
         lambda p: (jax.lax.psum(p.astype(jnp.float32) * gw, client_axis)
                    / jax.lax.psum(gw, client_axis) ).astype(p.dtype),
@@ -156,7 +285,7 @@ def mesh_afl_gossip(params, *, client_axis="data", steps: int = 1):
     """Ring gossip: each client averages with its +-1 ring neighbors via
     collective_permute — O(2 * |params|) link traffic per step, no global
     collective. Iterating converges to the consensus mean."""
-    n = jax.lax.axis_size(client_axis)
+    n = _axis_size(client_axis)
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]
 

@@ -10,6 +10,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import fedavg_agg as _fa
 from repro.kernels import flash_attention as _fl
@@ -29,22 +30,59 @@ def fedavg_aggregate(stacked, weights, *, interpret=None):
     return _fa.fedavg_agg(stacked, weights, interpret=interpret)
 
 
-def fedavg_aggregate_tree(client_params, weights, *, interpret=None):
-    """FedAvg a list of pytrees through the fused kernel: flatten each
-    client's params to one vector, aggregate, unflatten."""
-    flats = []
-    for p in client_params:
-        leaves = jax.tree.leaves(p)
-        flats.append(jnp.concatenate([l.reshape(-1).astype(jnp.float32)
-                                      for l in leaves]))
-    agg = fedavg_aggregate(jnp.stack(flats), weights, interpret=interpret)
-    template = client_params[0]
+# The flatten/ravel path: every aggregation event in the vectorized engine
+# (FedAvg, HFL tiers, masked AFL, CFL merge) funnels its stacked pytree
+# through these three helpers onto the fused kernel's (C, N) layout.
+
+def stacked_ravel(stacked_tree):
+    """Pytree with leading client axis -> (C, N) float32 matrix (leaves
+    flattened and concatenated in tree-flatten order)."""
+    leaves = jax.tree.leaves(stacked_tree)
+    C = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(C, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def stacked_unravel(template_stacked, mat):
+    """(M, N) matrix -> pytree with leading axis M, trailing shapes/dtypes
+    taken from `template_stacked` (its own leading axis is ignored, so the
+    template may have a different client count than M)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template_stacked)
+    M = mat.shape[0]
+    out, off = [], 0
+    for l in leaves:
+        sz = int(np.prod(l.shape[1:], dtype=np.int64))
+        out.append(mat[:, off:off + sz].reshape((M,) + l.shape[1:])
+                   .astype(l.dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_unravel(template, vec):
+    """(N,) aggregated vector -> single pytree shaped like `template` with
+    its leading client axis dropped (pass a stacked tree as template)."""
     leaves, treedef = jax.tree_util.tree_flatten(template)
     out, off = [], 0
     for l in leaves:
-        out.append(agg[off:off + l.size].reshape(l.shape).astype(l.dtype))
-        off += l.size
+        sz = int(np.prod(l.shape[1:], dtype=np.int64))
+        out.append(vec[off:off + sz].reshape(l.shape[1:]).astype(l.dtype))
+        off += sz
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def fedavg_aggregate_stacked(stacked_tree, weights, *, interpret=None):
+    """Kernel-backed FedAvg of a stacked pytree: ravel -> fused weighted
+    reduction -> unravel. `weights` must already be normalized."""
+    mat = stacked_ravel(stacked_tree)
+    return tree_unravel(stacked_tree,
+                        fedavg_aggregate(mat, weights, interpret=interpret))
+
+
+def fedavg_aggregate_tree(client_params, weights, *, interpret=None):
+    """FedAvg a *list* of pytrees through the fused kernel (host-level
+    callers); stacks then reuses the ravel path."""
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *client_params)
+    return fedavg_aggregate_stacked(stacked, weights, interpret=interpret)
 
 
 # -- flash attention -----------------------------------------------------------

@@ -31,6 +31,7 @@ from repro.configs.registry import combos, get_config
 from repro.launch import roofline as rl
 from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod
+from repro.launch import mesh as mesh_mod
 from repro.launch.mesh import make_fl_mesh, make_production_mesh
 from repro.models.model import build_model
 from repro.optim import optimizers
@@ -197,7 +198,7 @@ def lower_and_compile(arch: str, shape_name: str, *, multi_pod=False,
               if shape.kind in ("train", "prefill") else shape.global_batch)
     flops_factor = 6.0 if shape.kind == "train" else 2.0
 
-    with jax.sharding.set_mesh(mesh):
+    with mesh_mod.activate_mesh(mesh):
         lowered = _lower_step(cfg)
         t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
@@ -313,7 +314,7 @@ def lower_fl(arch: str, strategy: str, *, multi_pod=False, seq_len=512,
     w_sds = jax.ShapeDtypeStruct((clients,), jnp.float32)
     part_sds = jax.ShapeDtypeStruct((clients,), jnp.bool_)
 
-    with jax.sharding.set_mesh(mesh):
+    with mesh_mod.activate_mesh(mesh):
         lowered = jax.jit(trainer.fl_train_step, donate_argnums=(0,)).lower(
             state_sds, batch_sds, w_sds, part_sds)
         t_lower = time.perf_counter() - t0

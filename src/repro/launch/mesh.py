@@ -10,14 +10,27 @@ from __future__ import annotations
 import jax
 
 
+def axis_types_kw(n: int) -> dict:
+    """`axis_types=(Auto,)*n` when this jax version has AxisType (>=0.6),
+    else empty — 0.4.x meshes are Auto-only and reject the kwarg."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n} if at is not None else {}
+
+
+def activate_mesh(mesh):
+    """Install `mesh` as the ambient mesh: `jax.sharding.set_mesh` on new
+    jax, the Mesh context manager on 0.4.x (same effect for Auto axes)."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Target: TPU v5e pod(s). 16x16 = 256 chips single-pod;
     (pod=2, 16, 16) = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(axes)))
 
 
 def make_fl_mesh(*, clients: int = 16, model: int = 16,
@@ -25,12 +38,11 @@ def make_fl_mesh(*, clients: int = 16, model: int = 16,
     """Mesh for pod-scale federated runs: the "data" axis hosts FL clients
     (one client per slice), "model" is tensor-parallel within a client,
     and the "pod" axis carries HFL's hierarchy tier in multi-pod runs."""
-    auto = jax.sharding.AxisType.Auto
     if multi_pod:
         return jax.make_mesh((2, clients, model), ("pod", "data", "model"),
-                             axis_types=(auto,) * 3)
+                             **axis_types_kw(3))
     return jax.make_mesh((clients, model), ("data", "model"),
-                         axis_types=(auto,) * 2)
+                         **axis_types_kw(2))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -39,4 +51,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(1, min(model, n // data))
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **axis_types_kw(2))

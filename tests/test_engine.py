@@ -1,0 +1,222 @@
+"""Vectorized stacked-client engine: loop-vs-vectorized parity on all
+three strategies, stacked-operator equivalence against the host (list)
+operators, stacking utilities, and topology edge cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, strategies, topology
+from repro.core.fl_types import FLConfig
+from repro.core.simulation import FederatedSimulation
+from repro.data.synthetic import mnist_like
+
+
+# ---------------------------------------------------------------------------
+# loop vs vectorized engine parity (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_ds():
+    # 4 clients x 64 samples: shard-divisible so both engines see the
+    # exact same batch count (see VectorizedClientEngine docstring)
+    return mnist_like(seed=0, n_train=256, n_test=128)
+
+
+def _run(ds, strategy, eng, **kw):
+    base = dict(num_clients=4, num_groups=2, rounds=2, local_epochs=2,
+                local_batch_size=32, lr=0.05, seed=0)
+    base.update(kw)
+    fl = FLConfig(strategy=strategy, engine=eng, **base)
+    return FederatedSimulation(fl, ds).run()
+
+
+@pytest.mark.parametrize("strategy", ["hfl", "afl", "cfl"])
+def test_engine_parity(small_ds, strategy):
+    """Both engines consume the rng identically and run the same SGD
+    sequence, so accuracies, curves and losses agree to float tolerance
+    (ISSUE acceptance: final test accuracy within 1e-3)."""
+    loop = _run(small_ds, strategy, "loop")
+    vec = _run(small_ds, strategy, "vectorized")
+    assert abs(loop.test_accuracy - vec.test_accuracy) <= 1e-3
+    assert abs(loop.train_accuracy - vec.train_accuracy) <= 1e-3
+    np.testing.assert_allclose(loop.round_test_acc, vec.round_test_acc,
+                               atol=1e-3)
+    np.testing.assert_allclose(loop.round_train_acc, vec.round_train_acc,
+                               atol=1e-3)
+    np.testing.assert_allclose(loop.round_train_loss, vec.round_train_loss,
+                               atol=1e-3)
+
+
+def test_engine_parity_afl_gossip(small_ds):
+    loop = _run(small_ds, "afl", "loop", afl_mode="gossip", participation=1.0)
+    vec = _run(small_ds, "afl", "vectorized", afl_mode="gossip",
+               participation=1.0)
+    assert abs(loop.test_accuracy - vec.test_accuracy) <= 1e-3
+    np.testing.assert_allclose(loop.round_test_acc, vec.round_test_acc,
+                               atol=1e-3)
+
+
+def test_vectorized_params_match_loop_sgd():
+    """One client's vmapped-scan SGD == the loop engine's _sgd_epoch on
+    the same batches (parameter-level parity, not just metrics)."""
+    from repro.core.simulation import _sgd_epoch
+    from repro.models import cnn as cnn_mod
+    from repro.optim import optimizers
+
+    params = cnn_mod.init_cnn(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    imgs = rng.normal(size=(3, 16, 28, 28, 1)).astype(np.float32)
+    labs = rng.integers(0, 10, size=(3, 16)).astype(np.int32)
+    data = {"image": jnp.asarray(imgs), "label": jnp.asarray(labs)}
+
+    opt = optimizers.sgd(0.05, momentum=0.9)
+    ref, _, _, _ = _sgd_epoch(params, opt.init(params), data, (0.05, 0.9))
+
+    stacked = engine.replicate_tree(params, 2)
+    sdata = {"image": jnp.asarray(np.stack([imgs, imgs])),
+             "label": jnp.asarray(np.stack([labs, labs]))}
+    out, _, _ = engine.train_clients(
+        stacked, sdata, stacked_loss_fn=cnn_mod.cnn_loss_stacked,
+        lr=0.05, momentum=0.9)
+    for rl, vl in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(rl), np.asarray(vl[0]),
+                                   atol=2e-5)
+        np.testing.assert_allclose(np.asarray(vl[0]), np.asarray(vl[1]),
+                                   atol=1e-6)   # identical clients stay equal
+
+
+# ---------------------------------------------------------------------------
+# stacked operators == host (list) operators
+# ---------------------------------------------------------------------------
+
+def _forest(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))}
+            for _ in range(n)]
+
+
+def test_stack_unstack_roundtrip():
+    trees = _forest(5)
+    stacked = engine.stack_forest(trees)
+    assert stacked["w"].shape == (5, 4, 3)
+    back = engine.unstack_forest(stacked)
+    for a, b in zip(trees, back):
+        np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+
+
+def test_replicate_and_repeat_groups():
+    t = _forest(1)[0]
+    rep = engine.replicate_tree(t, 3)
+    assert rep["w"].shape == (3, 4, 3)
+    groups = engine.stack_forest(_forest(2, seed=7))
+    per_client = engine.repeat_groups(groups, 2)
+    np.testing.assert_array_equal(np.asarray(per_client["w"][1]),
+                                  np.asarray(groups["w"][0]))
+    np.testing.assert_array_equal(np.asarray(per_client["w"][2]),
+                                  np.asarray(groups["w"][1]))
+
+
+def test_fedavg_stacked_matches_host():
+    trees = _forest(6, seed=1)
+    w = [3.0, 1.0, 2.0, 5.0, 4.0, 6.0]
+    host = strategies.fedavg(trees, weights=w)
+    vec = strategies.fedavg_stacked(engine.stack_forest(trees), w)
+    np.testing.assert_allclose(np.asarray(host["w"]), np.asarray(vec["w"]),
+                               rtol=1e-5)
+
+
+def test_hfl_aggregate_stacked_matches_host():
+    trees = _forest(6, seed=2)
+    w = list(np.random.default_rng(0).integers(10, 100, 6).astype(float))
+    groups = topology.hierarchical_groups(6, 3)
+    host = strategies.hfl_aggregate(trees, groups, weights=w)
+    vec = strategies.hfl_aggregate_stacked(engine.stack_forest(trees), 3, w)
+    np.testing.assert_allclose(np.asarray(host["w"]), np.asarray(vec["w"]),
+                               rtol=1e-4)
+
+
+def test_afl_aggregate_stacked_mask_matches_host():
+    trees = _forest(5, seed=3)
+    w = [1.0, 2.0, 3.0, 4.0, 5.0]
+    participants = [1, 3, 4]
+    host = strategies.afl_aggregate(trees, participants, weights=w)
+    mask = np.isin(np.arange(5), participants).astype(np.float32)
+    vec = strategies.afl_aggregate_stacked(engine.stack_forest(trees), w,
+                                           participate=mask)
+    np.testing.assert_allclose(np.asarray(host["w"]), np.asarray(vec["w"]),
+                               rtol=1e-5)
+
+
+def test_gossip_stacked_matches_host():
+    trees = _forest(8, seed=4)
+    nbrs = topology.ring_neighbors(8, 2)
+    host = strategies.gossip_round(trees, nbrs)
+    vec = strategies.gossip_stacked(engine.stack_forest(trees), nbrs)
+    for c in range(8):
+        np.testing.assert_allclose(np.asarray(host[c]["w"]),
+                                   np.asarray(vec["w"][c]), rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_cfl_merge_stacked_matches_host():
+    g, c = _forest(2, seed=5)
+    host = strategies.cfl_merge(g, c, 0.3)
+    vec = strategies.cfl_merge_stacked(g, c, 0.3)
+    np.testing.assert_allclose(np.asarray(host["w"]), np.asarray(vec["w"]),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_hfl_tier1_stacked_group_models():
+    trees = _forest(4, seed=6)
+    w = [1.0, 3.0, 2.0, 2.0]
+    groups, gw = strategies.hfl_tier1_stacked(engine.stack_forest(trees), 2, w)
+    exp0 = strategies.fedavg(trees[:2], weights=w[:2])
+    np.testing.assert_allclose(np.asarray(groups["w"][0]),
+                               np.asarray(exp0["w"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), [4.0, 4.0], rtol=1e-6)
+    with pytest.raises(ValueError):
+        strategies.hfl_tier1_stacked(engine.stack_forest(trees), 3, w)
+
+
+# ---------------------------------------------------------------------------
+# topology edge cases
+# ---------------------------------------------------------------------------
+
+def test_ring_neighbors_degree_at_least_num_clients():
+    """degree >= n wraps onto itself: the neighbor set saturates at
+    "all other clients" and never contains the client."""
+    for n, deg in [(4, 4), (4, 6), (3, 8), (2, 2)]:
+        nbrs = topology.ring_neighbors(n, deg)
+        for c, ns in enumerate(nbrs):
+            assert ns == sorted(set(range(n)) - {c})
+
+
+def test_sample_participants_fraction_bounds():
+    rng = np.random.default_rng(0)
+    p0 = topology.sample_participants(rng, 10, 0.0)
+    assert len(p0) == 1                       # at-least-one floor
+    p1 = topology.sample_participants(rng, 10, 1.0)
+    assert sorted(p1.tolist()) == list(range(10))
+
+
+def test_hierarchical_groups_non_divisible_raises():
+    with pytest.raises(AssertionError):
+        topology.hierarchical_groups(10, 3)
+    with pytest.raises(AssertionError):
+        topology.mesh_axis_groups(10, 4)
+
+
+def test_flconfig_validates_engine():
+    with pytest.raises(AssertionError):
+        FLConfig(engine="warp")
+    assert FLConfig(engine="vectorized").engine == "vectorized"
+
+
+def test_vectorized_engine_rejects_oversized_batch():
+    ds = mnist_like(seed=0, n_train=64, n_test=32)
+    fl = FLConfig(strategy="afl", num_clients=8, num_groups=2,
+                  local_batch_size=32, engine="vectorized")
+    with pytest.raises(ValueError, match="local_batch_size"):
+        FederatedSimulation(fl, ds)

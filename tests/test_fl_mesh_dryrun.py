@@ -24,11 +24,12 @@ SNIPPET = textwrap.dedent("""
                                     fl_tree_shardings_opt)
     from repro.models.model import build_model
     from repro.sharding import specs as sh
+    from repro.launch import mesh as mesh_mod
     from repro.launch import roofline as rl
 
     cfg = get_config("phi3-mini-3.8b").reduced().with_updates(vocab_size=512)
     mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **mesh_mod.axis_types_kw(2))
     fl = FLConfig(strategy="{strategy}", num_clients=4, num_groups=2,
                   local_steps=2, lr=0.05, afl_mode="{mode}")
     model = build_model(cfg)
@@ -53,7 +54,7 @@ SNIPPET = textwrap.dedent("""
                         bs, bsh)
     wsds = jax.ShapeDtypeStruct((4,), jnp.float32)
     psds = jax.ShapeDtypeStruct((4,), jnp.bool_)
-    with jax.sharding.set_mesh(mesh):
+    with mesh_mod.activate_mesh(mesh):
         compiled = jax.jit(tr.fl_train_step).lower(
             ssds, bsds, wsds, psds).compile()
     coll = rl.parse_collective_bytes(compiled.as_text())
@@ -78,3 +79,67 @@ def test_fl_step_lowers_on_mesh(strategy, mode):
     if mode == "gossip":
         assert result["permutes"] > 0, \
             "gossip must lower to collective-permute (ring exchange)"
+
+
+# ---------------------------------------------------------------------------
+# mesh_hfl two-tier math pinned against the host aggregate
+# ---------------------------------------------------------------------------
+# Regression for the single-pod tier-2 reduction: each group model is
+# replicated across its (equal-size) group before the global psum, so the
+# group size cancels between numerator and denominator. This test fails if
+# either tier double-counts.
+
+MESH_HFL_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core import strategies, topology
+
+    C, N, G = 8, 1000, {groups}
+    rng = np.random.default_rng(0)
+    stacked = jnp.asarray(rng.normal(size=(C, N)).astype(np.float32))
+    weight = jnp.asarray(rng.uniform(10.0, 100.0, C).astype(np.float32))
+    multi_pod = {multi_pod}
+    if multi_pod:
+        mesh = jax.make_mesh((G, C // G), ("pod", "data"))
+        fn = lambda p, w: strategies.mesh_hfl(
+            p, w[0], client_axis="data", pod_axis="pod")
+        specs = (P(("pod", "data")), P(("pod", "data")))
+        out_spec = P(("pod", "data"))
+    else:
+        mesh = jax.make_mesh((C,), ("data",))
+        fn = lambda p, w: strategies.mesh_hfl(
+            p, w[0], client_axis="data", num_groups=G)
+        specs = (P("data"), P("data"))
+        out_spec = P("data")
+    f = shard_map(fn, mesh=mesh, in_specs=specs, out_specs=out_spec)
+    out = np.asarray(jax.jit(f)(stacked, weight))
+    replicated = bool(np.allclose(out, out[0:1], atol=1e-5))
+
+    clients = [{{"w": stacked[i]}} for i in range(C)]
+    groups = topology.hierarchical_groups(C, G)
+    host = strategies.hfl_aggregate(clients, groups,
+                                    weights=np.asarray(weight))
+    err = float(np.max(np.abs(out[0] - np.asarray(host["w"]))))
+    print(json.dumps({{"replicated": replicated, "err": err}}))
+""")
+
+
+@pytest.mark.parametrize("groups,multi_pod", [
+    (2, False), (4, False), (2, True),
+])
+def test_mesh_hfl_matches_host(groups, multi_pod):
+    code = MESH_HFL_SNIPPET.format(src=SRC, groups=groups,
+                                   multi_pod=multi_pod)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    result = json.loads(out.stdout.strip().splitlines()[-1])
+    assert result["replicated"], "every client must hold the global model"
+    assert result["err"] < 1e-4, \
+        f"mesh_hfl diverges from host hfl_aggregate: {result['err']}"

@@ -28,6 +28,75 @@ def test_fedavg_kernel_sweep(C, N, dtype):
                                np.asarray(exp, np.float32), atol=tol)
 
 
+@pytest.mark.parametrize("C,N,block", [
+    (1, 4096, 4096),     # single client, N exactly one block
+    (1, 37, 4096),       # single client, N smaller than the min tile
+    (3, 8191, 4096),     # N one short of a block multiple (max padding)
+    (2, 8192, 4096),     # N exactly two blocks (zero padding)
+    (5, 4097, 4096),     # N one past a block boundary
+])
+def test_fedavg_kernel_block_edges(C, N, block):
+    stacked = jax.random.normal(KEY, (C, N), jnp.float32)
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (C,)))
+    out = fa.fedavg_agg(stacked, w, block=block, interpret=True)
+    exp = ref.fedavg_agg_ref(stacked, w)
+    assert out.shape == (N,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+def test_fedavg_kernel_bf16_nonuniform_weights():
+    """bf16 stacked params with strongly non-uniform weights: the kernel
+    accumulates in f32, so the result tracks the f32 oracle within bf16
+    rounding of the inputs."""
+    C, N = 4, 5000
+    stacked = jax.random.normal(KEY, (C, N), jnp.bfloat16)
+    w = jnp.asarray([0.7, 0.05, 0.15, 0.1], jnp.float32)
+    out = fa.fedavg_agg(stacked, w, block=2048, interpret=True)
+    exp = ref.fedavg_agg_ref(stacked.astype(jnp.float32), w)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=2e-2)
+
+
+def test_fedavg_kernel_zero_weight_client_drops_out():
+    """A zero weight removes the client from the aggregate exactly —
+    the masked-AFL participation path relies on this."""
+    C, N = 3, 1000
+    stacked = jax.random.normal(KEY, (C, N), jnp.float32)
+    w = jnp.asarray([0.5, 0.0, 0.5])
+    out = fa.fedavg_agg(stacked, w, interpret=True)
+    exp = 0.5 * stacked[0] + 0.5 * stacked[2]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+def test_stacked_ravel_unravel_roundtrip():
+    """The flatten/ravel path every stacked aggregation event rides on."""
+    trees = [{"a": jnp.ones((3, 5)) * i,
+              "b": {"c": jnp.full((7,), i, jnp.float32)}} for i in range(4)]
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+    mat = ops.stacked_ravel(stacked)
+    assert mat.shape == (4, 3 * 5 + 7)
+    back = ops.stacked_unravel(stacked, mat)
+    np.testing.assert_array_equal(np.asarray(back["a"]),
+                                  np.asarray(stacked["a"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]["c"]),
+                                  np.asarray(stacked["b"]["c"]))
+    one = ops.tree_unravel(stacked, mat[2])
+    np.testing.assert_array_equal(np.asarray(one["a"]),
+                                  np.asarray(trees[2]["a"]))
+
+
+def test_fedavg_aggregate_stacked_matches_tree_path():
+    trees = [{"w": jax.random.normal(jax.random.PRNGKey(i), (6, 4))}
+             for i in range(3)]
+    w = jnp.asarray([0.2, 0.3, 0.5])
+    via_list = ops.fedavg_aggregate_tree(trees, w, interpret=True)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+    via_stack = ops.fedavg_aggregate_stacked(stacked, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(via_list["w"]),
+                               np.asarray(via_stack["w"]), rtol=1e-6)
+
+
 def test_fedavg_tree_roundtrip():
     trees = [{"a": jnp.ones((3, 5)) * i, "b": {"c": jnp.full((7,), i, jnp.float32)}}
              for i in range(4)]

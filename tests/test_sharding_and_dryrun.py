@@ -72,12 +72,13 @@ DRYRUN_SNIPPET = textwrap.dedent("""
     from repro.launch import train as tm, roofline as rl
     from repro.optim import optimizers
     from repro.sharding import specs as sh
+    from repro.launch import mesh as mesh_mod
 
     cfg = get_config("{arch}").reduced().with_updates(
         sharding_profile="{profile}", vocab_size=512)
     sh.set_profile(cfg.sharding_profile)
     mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **mesh_mod.axis_types_kw(2))
     model = build_model(cfg)
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     psh = sh.tree_shardings(params_shape, mesh)
@@ -96,7 +97,7 @@ DRYRUN_SNIPPET = textwrap.dedent("""
                                                           sharding=s),
                         bs, bsh)
     step = tm.make_train_step(model, opt)
-    with jax.sharding.set_mesh(mesh):
+    with mesh_mod.activate_mesh(mesh):
         compiled = jax.jit(step).lower(psds, osds, bsds).compile()
     roof = rl.analyze(compiled, 8)
     print(json.dumps({{"ok": True,
