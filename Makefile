@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test deps bench bench-engines
+.PHONY: test deps lint bench bench-engines scenarios bench-ci
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -10,8 +10,24 @@ deps:
 test:
 	$(PY) -m pytest -x -q
 
+lint:
+	ruff check .
+
 bench:
 	$(PY) -m benchmarks.run --scale quick
 
 bench-engines:
 	$(PY) -m benchmarks.kernel_bench --scale full
+
+# the registry + the CI smoke grid (mirrors the bench-smoke job's grid)
+scenarios:
+	$(PY) -m repro.core.scenarios --list
+	$(PY) -m repro.core.scenarios --grid ci
+
+# the CI round-throughput gate, locally: OVERWRITES the tracked
+# BENCH_ci.json (the recorded acceptance run — only commit the change
+# when deliberately re-recording) and compares against the committed
+# baseline
+bench-ci:
+	$(PY) -m benchmarks.ci_bench --scale quick --out BENCH_ci.json \
+	    --baseline benchmarks/BENCH_baseline.json --check

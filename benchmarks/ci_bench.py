@@ -1,0 +1,156 @@
+"""CI benchmark: round-throughput tracking + scenario smoke grid.
+
+Measures the loop-vs-vectorized round throughput of BOTH runtimes (the
+synchronous engine and the tick-batched async engine) at the target
+client count, runs the registry's CI smoke grid, and writes one
+`BENCH_ci.json` document (stable schema, DESIGN.md §7).
+
+With `--baseline` it gates: the regression signal is the vectorized/loop
+SPEEDUP ratio (dimensionless, so portable across runner hardware — raw
+wall-clock from a laptop baseline would flap on every CI machine change;
+absolute throughputs are still recorded for trend tracking), failing when
+a speedup falls more than `--tolerance` (default 25%) below the committed
+baseline, or when the async speedup at quick scale drops below the 2x
+acceptance floor.
+
+    PYTHONPATH=src python -m benchmarks.ci_bench --scale quick \
+        --out BENCH_ci.json --baseline benchmarks/BENCH_baseline.json --check
+"""
+import argparse
+import json
+import os
+import sys
+
+SCHEMA_VERSION = 1
+
+SCALES = {
+    # clients, sync rounds, async updates/client
+    "smoke": {"clients": 8, "sync_rounds": 2, "updates": 2},
+    "quick": {"clients": 64, "sync_rounds": 2, "updates": 2},
+}
+ASYNC_SPEEDUP_FLOOR = 2.0        # ISSUE 2 acceptance, quick scale only
+
+
+def bench_sync(clients, rounds):
+    """Seconds/round of the synchronous engines — the measurement is
+    `kernel_bench.measure_sync_round`, shared with the engine sweep so
+    the gate can never drift from the protocol it claims to track."""
+    from benchmarks.kernel_bench import measure_sync_round
+    per = measure_sync_round(clients, rounds)
+    return {
+        "loop_round_s": per["loop"],
+        "vectorized_round_s": per["vectorized"],
+        "loop_rounds_per_s": 1.0 / per["loop"],
+        "vectorized_rounds_per_s": 1.0 / per["vectorized"],
+        "speedup": per["loop"] / per["vectorized"],
+    }
+
+
+def bench_async(clients, updates):
+    """Merge throughput of the tick-batched async runtime — the
+    measurement is `kernel_bench.measure_async`, shared with the async
+    engine sweep (and the 64-client acceptance measurement)."""
+    from benchmarks.kernel_bench import measure_async
+    per = measure_async(clients, updates)
+    return {
+        "merges": per["loop"].merges,
+        "batches": per["loop"].batches,
+        "loop_build_s": per["loop"].build_time_s,
+        "vectorized_build_s": per["vectorized"].build_time_s,
+        "loop_merges_per_s": per["loop"].merges / per["loop"].build_time_s,
+        "vectorized_merges_per_s": (per["vectorized"].merges
+                                    / per["vectorized"].build_time_s),
+        "speedup": (per["loop"].build_time_s
+                    / per["vectorized"].build_time_s),
+    }
+
+
+def run(scale):
+    from repro.core import scenarios
+    cfg = SCALES[scale]
+    C = cfg["clients"]
+    print(f"ci_bench scale={scale} clients={C}", flush=True)
+    sync = bench_sync(C, cfg["sync_rounds"])
+    print(f"  sync  c{C}: loop {sync['loop_round_s']:.2f}s/round, "
+          f"vectorized {sync['vectorized_round_s']:.2f}s/round "
+          f"({sync['speedup']:.2f}x)", flush=True)
+    asy = bench_async(C, cfg["updates"])
+    print(f"  async c{C}: loop {asy['loop_build_s']:.2f}s, "
+          f"vectorized {asy['vectorized_build_s']:.2f}s for "
+          f"{asy['merges']} merges ({asy['speedup']:.2f}x)", flush=True)
+    grid = {}
+    for name in scenarios.CI_SMOKE_GRID:
+        res = scenarios.run_scenario(name)
+        grid[name] = res
+        print(f"  scenario {name}: "
+              f"test_acc={res['metrics']['test_accuracy']:.3f} "
+              f"rounds_per_s={res['timing']['rounds_per_s']:.3f}",
+              flush=True)
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "scale": scale,
+        "clients": C,
+        "host": {"cpus": os.cpu_count()},
+        "sync": sync,
+        "async": asy,
+        "scenarios": grid,
+    }
+
+
+def compare(new, baseline, tolerance=0.25):
+    """Gate the run against the committed baseline. Returns a list of
+    failure strings (empty = pass)."""
+    failures = []
+    for section in ("sync", "async"):
+        got = new[section]["speedup"]
+        want = baseline[section]["speedup"]
+        if got < want * (1.0 - tolerance):
+            failures.append(
+                f"{section} round-throughput regression: vectorized/loop "
+                f"speedup {got:.2f}x < baseline {want:.2f}x - {tolerance:.0%}")
+    if new["scale"] == "quick" and new["async"]["speedup"] < ASYNC_SPEEDUP_FLOOR:
+        failures.append(
+            f"async speedup {new['async']['speedup']:.2f}x below the "
+            f"{ASYNC_SPEEDUP_FLOOR}x acceptance floor at 64 clients")
+    missing = [n for n in baseline.get("scenarios", {})
+               if n not in new["scenarios"]]
+    if missing:
+        failures.append(f"scenario grid lost coverage: {missing}")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="quick", choices=sorted(SCALES))
+    ap.add_argument("--out", default="BENCH_ci.json")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON to compare against")
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on regression vs the baseline")
+    args = ap.parse_args(argv)
+
+    doc = run(args.scale)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out}")
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        failures = compare(doc, base, args.tolerance)
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        if failures:
+            print(f"{len(failures)} regression(s) vs {args.baseline}",
+                  file=sys.stderr)
+            if args.check:
+                return 1
+        else:
+            print(f"no regression vs {args.baseline} "
+                  f"(tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -103,33 +103,61 @@ ENGINE_SWEEPS = {
 }
 
 
-def bench_engines(client_counts=(8, 32, 64), rounds=2):
-    """Round-throughput of the loop vs vectorized simulation engines on
-    the paper CNN under HFL (2 groups, 2 local epochs, 64-sample shards,
-    batch 32) — the paper's protocol shape, scaled out in client count.
-
-    Per client count: seconds/round for both engines and the vectorized
-    speedup. The loop engine pays one jit dispatch + one small-batch XLA
-    program per client per epoch; the vectorized engine runs the whole
-    federation as one compiled scan with kernel-backed aggregation
-    (core/engine.py), so the gap widens with the client count and with
-    the host's core count. Compile time is excluded on both sides (the
-    simulation warms up outside its build-time window).
-    """
+def measure_sync_round(clients, rounds=2):
+    """Seconds/round of the loop vs vectorized engines on the paper CNN
+    under HFL (2 groups, 2 local epochs, 64-sample shards, batch 32) —
+    THE synchronous protocol shape. The engine sweep below and the CI
+    regression gate (benchmarks/ci_bench.py) both consume this helper so
+    they can never measure different protocols. Compile time is excluded
+    on both sides (the simulation warms up outside its build window)."""
     from repro.core.fl_types import FLConfig
     from repro.core.simulation import FederatedSimulation
     from repro.data.synthetic import mnist_like
 
+    ds = mnist_like(n_train=clients * 64, n_test=128)
+    per = {}
+    for eng in ("loop", "vectorized"):
+        fl = FLConfig(strategy="hfl", num_clients=clients, num_groups=2,
+                      rounds=rounds, local_epochs=2, local_batch_size=32,
+                      lr=0.05, seed=0, engine=eng)
+        r = FederatedSimulation(fl, ds).run()
+        per[eng] = r.build_time_s / rounds
+    return per
+
+
+def measure_async(clients, updates=2):
+    """Loop vs vectorized `AsyncResult`s of the tick-batched async
+    runtime under uniform speeds (full-federation arrival batches — the
+    batched kernel merge's best case). THE async protocol shape, shared
+    with the CI gate like `measure_sync_round`."""
+    from repro.core.async_agg import AsyncSimulation
+    from repro.core.fl_types import FLConfig
+    from repro.core.simulation import FederatedSimulation
+    from repro.data.synthetic import mnist_like
+
+    ds = mnist_like(n_train=clients * 64, n_test=128)
+    per = {}
+    for eng in ("loop", "vectorized"):
+        fl = FLConfig(strategy="cfl", num_clients=clients, num_groups=2,
+                      local_epochs=1, local_batch_size=32, lr=0.05, seed=0,
+                      engine=eng)
+        per[eng] = AsyncSimulation(FederatedSimulation(fl, ds),
+                                   updates_per_client=updates,
+                                   speed_model="uniform", tick=1.0,
+                                   engine=eng).run()
+    return per
+
+
+def bench_engines(client_counts=(8, 32, 64), rounds=2):
+    """Round-throughput sweep over client counts. The loop engine pays
+    one jit dispatch + one small-batch XLA program per client per epoch;
+    the vectorized engine runs the whole federation as one compiled scan
+    with kernel-backed aggregation (core/engine.py), so the gap widens
+    with the client count and with the host's core count."""
     rows = []
     for C in client_counts:
-        ds = mnist_like(n_train=C * 64, n_test=128)
-        per = {}
+        per = measure_sync_round(C, rounds)
         for eng in ("loop", "vectorized"):
-            fl = FLConfig(strategy="hfl", num_clients=C, num_groups=2,
-                          rounds=rounds, local_epochs=2, local_batch_size=32,
-                          lr=0.05, seed=0, engine=eng)
-            r = FederatedSimulation(fl, ds).run()
-            per[eng] = r.build_time_s / rounds
             rows.append((f"fl_round_hfl_c{C}_{eng}", per[eng] * 1e6,
                          "engine=one_round"))
         speedup = per["loop"] / per["vectorized"]
@@ -138,10 +166,30 @@ def bench_engines(client_counts=(8, 32, 64), rounds=2):
     return rows
 
 
+def bench_async_engines(client_counts=(8, 64), updates=2):
+    """Merge-throughput sweep of the tick-batched async runtime: the
+    vectorized engine executes each arrival batch as one stacked
+    training dispatch + one kernel-backed weighted merge while the loop
+    engine pays per-client dispatch + per-arrival host merges."""
+    rows = []
+    for C in client_counts:
+        res = measure_async(C, updates)
+        per = {eng: r.build_time_s / r.batches for eng, r in res.items()}
+        for eng in ("loop", "vectorized"):
+            rows.append((f"fl_async_batch_c{C}_{eng}", per[eng] * 1e6,
+                         "engine=one_merge_batch"))
+        speedup = per["loop"] / per["vectorized"]
+        rows.append((f"fl_async_batch_c{C}_speedup", speedup,
+                     f"vectorized_{speedup:.2f}x_(ratio,_not_us)"))
+    return rows
+
+
 def main(scale="quick"):
     rows = (bench_fedavg() + bench_attention() + bench_ssm()
             + bench_aggregation_strategies()
-            + bench_engines(ENGINE_SWEEPS[scale]))
+            + bench_engines(ENGINE_SWEEPS[scale])
+            + bench_async_engines(tuple(sorted({min(ENGINE_SWEEPS[scale]),
+                                                max(ENGINE_SWEEPS[scale])}))))
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     return rows

@@ -11,6 +11,8 @@ Sections:
   kernels        — micro-bench CSV (name,us_per_call,derived), including
                    the loop-vs-vectorized engine round-throughput sweep
                    over client counts (8 -> 256 at --scale full)
+  scenarios      — the registry's CI smoke grid (core/scenarios.py), CSV
+                   rows in the stable result schema's key metrics
   roofline       — per (arch x shape x mesh) terms from the dry-run cache
 """
 import argparse
@@ -23,6 +25,9 @@ def main():
                     choices=["smoke", "quick", "full"])
     ap.add_argument("--skip-study", action="store_true",
                     help="reuse cached paper-study results if present")
+    ap.add_argument("--scenarios", default="ci",
+                    help="comma-separated scenario names, 'ci' for the "
+                         "smoke grid, or 'none' to skip the section")
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, paper_tables, roofline_table
@@ -73,6 +78,19 @@ def main():
 
     print("\n== kernels + engine sweep (name,us_per_call,derived) ==")
     kernel_bench.main(args.scale)
+
+    if args.scenarios != "none":
+        from repro.core import scenarios as scen
+        todo = (list(scen.CI_SMOKE_GRID) if args.scenarios == "ci"
+                else args.scenarios.split(","))
+        print("\n== scenarios (name,scenario,strategy/topology/engine,"
+              "test_acc,f1,build_s,rounds_per_s) ==")
+        for name in todo:
+            res = scen.run_scenario(name)
+            s, m, t = res["spec"], res["metrics"], res["timing"]
+            print(f"scenario,{name},{s['strategy']}/{s['topology']}/"
+                  f"{s['engine']},{m['test_accuracy']:.3f},{m['f1']:.3f},"
+                  f"{t['build_time_s']:.2f},{t['rounds_per_s']:.3f}")
 
     print("\n== roofline (from experiments/dryrun cache) ==")
     roofline_table.main()

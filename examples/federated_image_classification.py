@@ -6,7 +6,10 @@ per-round accuracy/loss curves (paper Figs. 9/11).
     PYTHONPATH=src python examples/federated_image_classification.py \
         --strategy cfl --dataset fashion --rounds 10 --clients 10 --curves
 Beyond-paper options: --non-iid (Dirichlet label skew), --gossip
-(decentralized ring aggregation for AFL).
+(decentralized ring aggregation for AFL), and the scenario registry:
+`--list-scenarios` / `--scenario NAME` runs a named point of the
+strategy x partition x topology x heterogeneity x engine space
+(core/scenarios.py) and prints its stable result document.
 """
 import argparse
 import csv
@@ -46,7 +49,23 @@ def main():
                          "vectorized = whole federation as one compiled "
                          "step with kernel-backed aggregation (same "
                          "results, scales to hundreds of clients)")
+    ap.add_argument("--scenario", metavar="NAME",
+                    help="run a named registry scenario instead of the "
+                         "flag-built config (core/scenarios.py)")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print the scenario registry and exit")
     args = ap.parse_args()
+
+    if args.list_scenarios:
+        from repro.core import scenarios
+        scenarios.main(["--list"])
+        return
+    if args.scenario:
+        import json
+        from repro.core import scenarios
+        res = scenarios.run_scenario(args.scenario)
+        print(json.dumps(res, indent=1))
+        return
 
     ds = DATASETS[args.dataset](n_train=args.n_train,
                                 n_test=max(500, args.n_train // 5))

@@ -12,24 +12,72 @@ arriving update immediately, down-weighted by its staleness:
 Xie et al. 2019 polynomial staleness). This composes with the paper's CFL
 (it *is* CFL's continual merge with a staleness-adaptive alpha).
 
-`AsyncSimulation` models heterogeneity with per-client speed factors and
-an event queue — build time becomes the makespan of the slowest path, not
+`AsyncSimulation` models heterogeneity with per-client speed models, a
+participation sampler, and a dropout process over an event timeline —
+build time becomes the makespan of the slowest surviving path, not
 sum-of-rounds, which is the scalability argument the paper gestures at.
+
+Tick-batch protocol (DESIGN.md §5): arrivals are grouped by (optionally
+tick-quantized) finish time. All clients in a batch train from the model
+at batch start and their updates merge in arrival order. The protocol is
+engine-independent host logic; the two engines differ only in how a batch
+executes:
+
+* "loop"       — per-client jit dispatch via `sim._local_train`, one
+                 `cfl_merge` host call per arrival (paper-faithful
+                 per-device timing surface).
+* "vectorized" — the batch trains as ONE stacked vmap-of-scan dispatch
+                 (core/engine.py) and merges through ONE kernel-backed
+                 weighted reduction (`strategies.async_batch_merge`, a
+                 weighted variant of the fedavg ravel path) whose
+                 composed weights reproduce the sequential merges
+                 exactly, so the engines agree to float tolerance.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Any, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import strategies
+from repro.core import strategies, topology
+from repro.core.metrics import Timer, classification_metrics
 
 
 def staleness_alpha(alpha: float, staleness: int, decay: float = 0.5
                     ) -> float:
     return alpha * (1.0 + staleness) ** (-decay)
+
+
+SPEED_MODELS = ("uniform", "lognormal", "straggler")
+
+
+def make_speeds(model: str, num_clients: int, rng: np.random.Generator, *,
+                sigma: float = 0.5, straggler_factor: float = 4.0,
+                quantize: float = 0.0) -> np.ndarray:
+    """Per-client step-time factors for the named heterogeneity model.
+
+    uniform    — every client takes one time unit per local round.
+    lognormal  — LogNormal(0, sigma) step times (some clients 3-4x slower).
+    straggler  — one rng-chosen client `straggler_factor`x slower.
+
+    `quantize` > 0 snaps speeds onto that grid — with a discrete speed
+    support, arrivals collide into large same-tick batches, which is the
+    regime where the vectorized engine's batched execution pays off.
+    """
+    if model == "uniform":
+        s = np.ones(num_clients)
+    elif model == "lognormal":
+        s = rng.lognormal(0.0, sigma, num_clients)
+    elif model == "straggler":
+        s = np.ones(num_clients)
+        s[rng.integers(num_clients)] = straggler_factor
+    else:
+        raise ValueError(f"unknown speed model {model!r} "
+                         f"(expected one of {SPEED_MODELS})")
+    if quantize > 0:
+        s = np.maximum(quantize, np.round(s / quantize) * quantize)
+    return s
 
 
 @dataclasses.dataclass
@@ -38,51 +86,217 @@ class AsyncResult:
     merges: int
     mean_staleness: float
     makespan: float
+    train_accuracy: float = 0.0
+    batches: int = 0
+    build_time_s: float = 0.0
+    classification_time_s: float = 0.0
+    precision: float = 0.0
+    recall: float = 0.0
+    f1: float = 0.0
+    balanced_accuracy: float = 0.0
+    dropped_clients: Tuple[int, ...] = ()
+    participants: Tuple[int, ...] = ()
 
 
 class AsyncSimulation:
     """Event-driven async FL over the same client substrate as
-    `FederatedSimulation` (reuses its local-training machinery)."""
+    `FederatedSimulation` (reuses its local-training machinery).
+
+    Heterogeneity knobs:
+      speeds / speed_model — per-client step times (see `make_speeds`).
+      participation        — fraction of clients sampled into the run
+                             (at-least-one floor, like AFL rounds).
+      dropout              — fraction of *participants* that fail at an
+                             rng-chosen point in their update sequence
+                             (possibly before contributing anything); at
+                             least one participant always survives.
+      tick                 — arrival-time quantization grid (0 = exact
+                             float collisions only). Bigger ticks mean
+                             bigger same-tick batches.
+      engine               — "loop" | "vectorized" | None (inherit the
+                             wrapped simulation's `fl.engine`).
+    """
 
     def __init__(self, sync_sim, alpha=0.6, decay=0.5, speeds=None,
-                 updates_per_client=4):
+                 updates_per_client=4, *, speed_model="lognormal",
+                 participation=1.0, dropout=0.0, tick=0.0,
+                 engine: Optional[str] = None):
         self.sim = sync_sim              # a FederatedSimulation
         self.alpha = alpha
         self.decay = decay
-        C = sync_sim.fl.num_clients
-        rng = np.random.default_rng(sync_sim.fl.seed)
-        # heterogeneity: client step time ~ LogNormal (some 3-4x slower)
-        self.speeds = (speeds if speeds is not None
-                       else rng.lognormal(0.0, 0.5, C))
         self.updates_per_client = updates_per_client
+        self.tick = tick
+        self.engine = engine if engine is not None else sync_sim.fl.engine
+        if self.engine not in ("loop", "vectorized"):
+            raise ValueError(f"unknown engine {self.engine!r} "
+                             f"(expected 'loop' or 'vectorized')")
+        C = sync_sim.fl.num_clients
+        # Schedule rng: consumed in a fixed order (speeds, participation,
+        # dropout) so two instances with the same seed build the same
+        # timeline regardless of engine — the parity contract's first half
+        # (DESIGN.md §4).
+        rng = np.random.default_rng(sync_sim.fl.seed)
+        self.speeds = (np.asarray(speeds, float) if speeds is not None
+                       else make_speeds(speed_model, C, rng))
+        parts = topology.sample_participants(rng, C, participation)
+        self.participants = tuple(int(c) for c in parts)
+        self.n_updates = np.zeros(C, int)
+        self.n_updates[list(self.participants)] = updates_per_client
+        dropped: Tuple[int, ...] = ()
+        if dropout > 0 and len(self.participants) > 1:
+            n_drop = min(int(round(dropout * len(self.participants))),
+                         len(self.participants) - 1)
+            if n_drop:
+                victims = rng.choice(np.asarray(self.participants), n_drop,
+                                     replace=False)
+                self.n_updates[victims] = rng.integers(
+                    0, updates_per_client, size=n_drop)
+                dropped = tuple(int(v) for v in np.sort(victims))
+        self.dropped_clients = dropped
 
+    # -- schedule -----------------------------------------------------------
+    def _quantize(self, t: float) -> float:
+        if self.tick <= 0:
+            return t
+        return float(np.ceil(round(t / self.tick, 9)) * self.tick)
+
+    def schedule(self) -> List[Tuple[float, List[int]]]:
+        """The full arrival timeline, grouped into same-tick batches:
+        [(time, [client, ...]), ...] in time order, clients id-sorted
+        within a batch. Client c's k-th arrival lands at the (quantized)
+        cumulative time of k+1 local rounds; dropped clients simply stop
+        producing arrivals after their failure point."""
+        arrivals: Dict[float, List[int]] = {}
+        for c in range(self.sim.fl.num_clients):
+            t = 0.0
+            for _ in range(int(self.n_updates[c])):
+                t = self._quantize(t + float(self.speeds[c]))
+                arrivals.setdefault(t, []).append(c)
+        return [(t, sorted(arrivals[t])) for t in sorted(arrivals)]
+
+    # -- batch execution (the engine split) ---------------------------------
+    def _train_batch_loop(self, model, clients: Sequence[int],
+                          alphas: Sequence[float]):
+        locals_, accs = [], []
+        for c in clients:
+            p, _, acc = self.sim._local_train(model, c)
+            locals_.append(p)
+            accs.append(acc)
+        for p, a in zip(locals_, alphas):
+            model = strategies.cfl_merge(model, p, a)
+        return model, accs
+
+    def _train_batch_vec(self, model, clients: Sequence[int],
+                         alphas: Sequence[float]):
+        from repro.core import engine as engine_mod
+        eng = self._vec
+        data = eng.batched_clients(self.sim.rng, clients,
+                                   self.sim.fl.local_epochs)
+        stacked = engine_mod.replicate_tree(model, len(clients))
+        stacked, _, _ = eng.train(stacked, data)
+        accs = eng.local_accs(stacked, clients)
+        model = strategies.async_batch_merge(model, stacked,
+                                             np.asarray(alphas, np.float32))
+        return model, list(accs)
+
+    # -- warmup -------------------------------------------------------------
+    def _warmup(self, batch_sizes: Sequence[int]):
+        """Compile every program the timed loop will dispatch: the
+        train/eval jits, and (vectorized) one dry batch per DISTINCT batch
+        size with a throwaway rng — shapes are what matter, `sim.rng` is
+        untouched."""
+        sim = self.sim
+        if self.engine == "loop":
+            import jax.numpy as jnp
+
+            from repro.core.simulation import _batched, _predict, _sgd_epoch
+            sim._warmup()
+            # sim._warmup compiles a fixed 2-batch epoch and client 0's
+            # eval shape; also compile the ACTUAL per-shard epoch and
+            # local-eval shape(s) the timed _local_train calls dispatch
+            # (shards may be uneven), so loop build time never includes
+            # XLA compile
+            rng = np.random.default_rng(0)
+            B = sim.fl.local_batch_size
+            done_nb, done_eval = set(), set()
+            for c in np.nonzero(self.n_updates)[0]:
+                x, y = sim.client_data[c]
+                nb = len(x) // B
+                # no skip for shapes sim._warmup may have covered: a
+                # duplicate dispatch is a jit cache hit, costing ~nothing
+                if nb not in done_nb:
+                    done_nb.add(nb)
+                    data = _batched(x, y, B, rng)
+                    _sgd_epoch(sim.init_params,
+                               sim.opt.init(sim.init_params), data,
+                               (sim.fl.lr, sim.fl.momentum))
+                n_eval = min(len(x), 512)
+                if n_eval not in done_eval:
+                    done_eval.add(n_eval)
+                    _predict(sim.init_params, jnp.asarray(x[:n_eval]))
+            return
+        sim._warmup_predicts()
+        from repro.core import engine as engine_mod
+        eng = self._vec
+        rng = np.random.default_rng(0)
+        for k in sorted(set(batch_sizes)):
+            clients = list(range(k))
+            data = eng.batched_clients(rng, clients, sim.fl.local_epochs)
+            stacked = engine_mod.replicate_tree(sim.init_params, k)
+            stacked, _, _ = eng.train(stacked, data)
+            eng.local_accs(stacked, clients)
+            strategies.async_batch_merge(
+                sim.init_params, stacked,
+                np.full(k, self.alpha, np.float32))
+
+    # -- driver -------------------------------------------------------------
     def run(self) -> AsyncResult:
         sim = self.sim
-        C = sim.fl.num_clients
+        if self.engine == "vectorized":
+            from repro.core import engine as engine_mod
+            self._vec = sim.vec or engine_mod.VectorizedClientEngine(
+                sim.fl, sim.client_data, sim.weights)
+        batches = self.schedule()
+        self._warmup([len(cs) for _, cs in batches])
+        run_batch = (self._train_batch_vec if self.engine == "vectorized"
+                     else self._train_batch_loop)
+
         model = sim.init_params
         server_step = 0
-        staleness_log = []
-        # event queue: (finish_time, client, base_version)
-        q = [(float(self.speeds[c]), c, 0) for c in range(C)]
-        heapq.heapify(q)
-        remaining = {c: self.updates_per_client for c in range(C)}
+        base_version = np.zeros(sim.fl.num_clients, int)
+        staleness_log: List[int] = []
+        acc_log: List[float] = []
         t = 0.0
-        merges = 0
-        while q:
-            t, c, base_version = heapq.heappop(q)
-            local, _, _ = sim._local_train(model, c)
-            tau = server_step - base_version
-            a = staleness_alpha(self.alpha, tau, self.decay)
-            model = strategies.cfl_merge(model, local, a)
-            server_step += 1
-            merges += 1
-            staleness_log.append(tau)
-            remaining[c] -= 1
-            if remaining[c] > 0:
-                heapq.heappush(q, (t + float(self.speeds[c]), c,
-                                   server_step))
-        preds = sim._eval(model)
-        acc = float(np.mean(preds == sim.dataset["test"][1]))
-        return AsyncResult(test_accuracy=acc, merges=merges,
-                           mean_staleness=float(np.mean(staleness_log)),
-                           makespan=t)
+        timer = Timer()
+        with timer:
+            for t, clients in batches:
+                taus = [server_step + i - int(base_version[c])
+                        for i, c in enumerate(clients)]
+                alphas = [staleness_alpha(self.alpha, tau, self.decay)
+                          for tau in taus]
+                model, accs = run_batch(model, clients, alphas)
+                server_step += len(clients)
+                # the batch is atomic: every member pulls the post-batch
+                # model for its next local round
+                base_version[clients] = server_step
+                staleness_log.extend(taus)
+                acc_log.extend(float(a) for a in accs)
+        self.final_model = model
+
+        class_timer = Timer()
+        with class_timer:
+            preds = sim._eval(model)
+        y_true = sim.dataset["test"][1]
+        m = classification_metrics(y_true, preds, 10)
+        return AsyncResult(
+            test_accuracy=m["accuracy"], merges=server_step,
+            mean_staleness=(float(np.mean(staleness_log))
+                            if staleness_log else 0.0),
+            makespan=t,
+            train_accuracy=(float(np.mean(acc_log)) if acc_log else 0.0),
+            batches=len(batches), build_time_s=timer.elapsed,
+            classification_time_s=class_timer.elapsed,
+            precision=m["precision"], recall=m["recall"], f1=m["f1"],
+            balanced_accuracy=m["balanced_accuracy"],
+            dropped_clients=self.dropped_clients,
+            participants=self.participants)

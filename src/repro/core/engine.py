@@ -18,11 +18,18 @@ Pieces:
 * `VectorizedClientEngine` — host-side driver state: per-client shards,
   stacked eval sets, and the rng-consumption protocol shared with the
   loop engine so both engines see identical batch orders (this is what
-  makes loop/vectorized parity exact rather than statistical).
+  makes loop/vectorized parity exact rather than statistical;
+  DESIGN.md §4).
 
 Aggregation itself lives in `core/strategies.py` (stacked-array section)
 and lowers onto the Pallas `fedavg_agg` kernel via the ravel path in
 `kernels/ops.py`.
+
+Consumers: `FederatedSimulation`'s vectorized runners (synchronous
+rounds) and the heterogeneous async runtime (`core/async_agg.py`), whose
+tick batches train through `batched_clients`/`train` with an arbitrary
+client subset per dispatch and merge through the kernel-backed
+`strategies.async_batch_merge`.
 """
 from __future__ import annotations
 

@@ -1,0 +1,278 @@
+"""Declarative scenario registry — one source of truth for experiments,
+benchmarks, and CI.
+
+A `ScenarioSpec` names a point in the evaluation space the paper (and its
+future-work directions) spans:
+
+    strategy x partition (iid / Dirichlet-alpha) x topology
+             x heterogeneity (speed model, dropout, staleness decay)
+             x engine (loop / vectorized)
+
+Every spec resolves to a runnable configuration (`resolve`) and every run
+emits one stable result-JSON document (`run_scenario`, schema in
+DESIGN.md §6) so `examples/`, `benchmarks/run.py`, and the CI bench-smoke
+job all consume the same definitions instead of hand-rolled configs.
+
+    PYTHONPATH=src python -m repro.core.scenarios --list
+    PYTHONPATH=src python -m repro.core.scenarios --run iid-hfl-vec
+    PYTHONPATH=src python -m repro.core.scenarios --grid ci --json out.json
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple, Union
+
+RESULT_SCHEMA_VERSION = 1
+
+# topology is the communication graph the strategy induces; the pairing is
+# validated so a spec can't claim e.g. a ring under HFL
+TOPOLOGY_BY_STRATEGY = {
+    "hfl": ("hierarchical",),
+    "afl": ("star", "ring"),
+    "cfl": ("sequential",),
+    "async": ("event",),
+}
+PARTITIONS = ("iid", "dirichlet")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One named, fully-specified federated run."""
+    name: str
+    description: str
+    strategy: str = "afl"            # hfl | afl | cfl | async
+    topology: str = "star"           # see TOPOLOGY_BY_STRATEGY
+    engine: str = "vectorized"       # loop | vectorized
+    # data
+    dataset: str = "mnist"           # mnist | fashion
+    partition: str = "iid"           # iid | dirichlet
+    dirichlet_alpha: float = 0.5
+    n_train: int = 512
+    n_test: int = 256
+    # federation shape / schedule
+    num_clients: int = 8
+    num_groups: int = 2
+    rounds: int = 2
+    local_epochs: int = 1
+    local_batch_size: int = 32
+    lr: float = 0.05
+    participation: float = 1.0
+    gossip_neighbors: int = 2
+    merge_alpha: float = 0.5
+    # heterogeneity (async strategy only)
+    speed_model: str = "uniform"     # uniform | lognormal | straggler
+    dropout: float = 0.0
+    staleness_alpha: float = 0.6
+    staleness_decay: float = 0.5
+    updates_per_client: int = 2
+    tick: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.strategy not in TOPOLOGY_BY_STRATEGY:
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+        allowed = TOPOLOGY_BY_STRATEGY[self.strategy]
+        if self.topology not in allowed:
+            raise ValueError(
+                f"{self.name}: topology {self.topology!r} is invalid for "
+                f"strategy {self.strategy!r} (expected one of {allowed})")
+        if self.partition not in PARTITIONS:
+            raise ValueError(f"unknown partition {self.partition!r}")
+        if self.engine not in ("loop", "vectorized"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+
+    def to_fl_config(self):
+        """The underlying FLConfig: async runs on the CFL continual-merge
+        substrate; an AFL ring topology selects gossip mode."""
+        from repro.core.fl_types import FLConfig
+        return FLConfig(
+            strategy="cfl" if self.strategy == "async" else self.strategy,
+            num_clients=self.num_clients, num_groups=self.num_groups,
+            rounds=self.rounds, local_epochs=self.local_epochs,
+            local_batch_size=self.local_batch_size, lr=self.lr,
+            participation=self.participation,
+            afl_mode="gossip" if self.topology == "ring" else "fedavg",
+            gossip_neighbors=self.gossip_neighbors,
+            merge_alpha=self.merge_alpha, seed=self.seed,
+            engine=self.engine)
+
+    def asdict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+REGISTRY: Dict[str, ScenarioSpec] = {}
+
+
+def register(spec: ScenarioSpec) -> ScenarioSpec:
+    if spec.name in REGISTRY:
+        raise ValueError(f"duplicate scenario name {spec.name!r}")
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ScenarioSpec:
+    if name not in REGISTRY:
+        known = ", ".join(sorted(REGISTRY))
+        raise KeyError(f"unknown scenario {name!r} (known: {known})")
+    return REGISTRY[name]
+
+
+def names() -> List[str]:
+    return sorted(REGISTRY)
+
+
+# strategy x engine coverage on the paper's IID setting
+register(ScenarioSpec(
+    "iid-hfl-vec", "centralized two-tier HFL, IID shards, stacked engine",
+    strategy="hfl", topology="hierarchical", local_epochs=2))
+register(ScenarioSpec(
+    "iid-hfl-loop", "loop-engine twin of iid-hfl-vec (paper-faithful "
+    "per-client dispatch timing)",
+    strategy="hfl", topology="hierarchical", local_epochs=2, engine="loop"))
+register(ScenarioSpec(
+    "iid-afl-vec", "decentralized AFL, 50% participation, masked FedAvg",
+    strategy="afl", topology="star", participation=0.5, local_epochs=2))
+register(ScenarioSpec(
+    "iid-cfl-vec", "decentralized continual CFL, sequential client pass",
+    strategy="cfl", topology="sequential"))
+register(ScenarioSpec(
+    "ring-gossip-vec", "AFL in gossip mode: ring-neighbor averaging, full "
+    "participation",
+    strategy="afl", topology="ring", participation=1.0))
+# non-IID Dirichlet label skew — loop engine (uneven shards are the loop
+# engine's territory: the stacked engine truncates to the federation-min
+# batch count)
+register(ScenarioSpec(
+    "dirichlet-afl-loop", "AFL under Dirichlet(0.3) label skew",
+    strategy="afl", topology="star", engine="loop", partition="dirichlet",
+    dirichlet_alpha=0.3, participation=0.5, n_train=768))
+register(ScenarioSpec(
+    "dirichlet-hfl-loop", "HFL under mild Dirichlet(1.0) label skew",
+    strategy="hfl", topology="hierarchical", engine="loop",
+    partition="dirichlet", dirichlet_alpha=1.0, n_train=768))
+# heterogeneous async runtime — the tentpole axis
+register(ScenarioSpec(
+    "async-uniform-vec", "async staleness-aware merge, homogeneous "
+    "clients (full-federation tick batches)",
+    strategy="async", topology="event", speed_model="uniform"))
+register(ScenarioSpec(
+    "async-straggler-vec", "async with one 4x straggler: fast clients "
+    "keep merging while the straggler's updates arrive stale",
+    strategy="async", topology="event", speed_model="straggler"))
+register(ScenarioSpec(
+    "async-dropout-vec", "async where half the participants fail "
+    "mid-run; the survivors' merges carry the model",
+    strategy="async", topology="event", speed_model="uniform", dropout=0.5,
+    updates_per_client=3))
+register(ScenarioSpec(
+    "async-lognormal-loop", "async under continuous LogNormal speeds "
+    "(singleton batches — the loop engine's regime)",
+    strategy="async", topology="event", engine="loop",
+    speed_model="lognormal", tick=0.0))
+
+# the CI bench-smoke grid: one sync-centralized, one sync-decentralized,
+# one async-heterogeneous scenario (see .github/workflows/ci.yml)
+CI_SMOKE_GRID: Tuple[str, ...] = (
+    "iid-hfl-vec", "ring-gossip-vec", "async-straggler-vec")
+
+
+# ---------------------------------------------------------------------------
+# resolution + execution
+# ---------------------------------------------------------------------------
+
+def resolve(spec: ScenarioSpec):
+    """Spec -> (FederatedSimulation, spec) with dataset built, partition
+    applied, and engine state ready. Async wrapping happens in
+    `run_scenario` (the sync sim is the async run's client substrate)."""
+    from repro.core.simulation import FederatedSimulation
+    return FederatedSimulation.from_scenario(spec), spec
+
+
+def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
+    """Run one scenario and return the stable result document
+    (DESIGN.md §6). `rounds_per_s` is the round-throughput number the CI
+    regression gate tracks: sync rounds (or async merge-batches) per
+    second of build time."""
+    spec = get(scenario) if isinstance(scenario, str) else scenario
+    sim, _ = resolve(spec)
+    async_block = None
+    if spec.strategy == "async":
+        from repro.core.async_agg import AsyncSimulation
+        r = AsyncSimulation(
+            sim, alpha=spec.staleness_alpha, decay=spec.staleness_decay,
+            updates_per_client=spec.updates_per_client,
+            speed_model=spec.speed_model, participation=spec.participation,
+            dropout=spec.dropout, tick=spec.tick, engine=spec.engine).run()
+        units = r.batches
+        async_block = {
+            "merges": r.merges, "batches": r.batches,
+            "mean_staleness": r.mean_staleness, "makespan": r.makespan,
+            "dropped_clients": list(r.dropped_clients),
+            "participants": list(r.participants),
+        }
+    else:
+        r = sim.run()
+        units = spec.rounds
+    return {
+        "schema_version": RESULT_SCHEMA_VERSION,
+        "scenario": spec.name,
+        "spec": spec.asdict(),
+        "metrics": {
+            "test_accuracy": r.test_accuracy,
+            "train_accuracy": r.train_accuracy,
+            "precision": r.precision, "recall": r.recall, "f1": r.f1,
+            "balanced_accuracy": r.balanced_accuracy,
+        },
+        "timing": {
+            "build_time_s": r.build_time_s,
+            "classification_time_s": r.classification_time_s,
+            "rounds_per_s": (units / r.build_time_s
+                             if r.build_time_s > 0 else 0.0),
+        },
+        "async": async_block,
+    }
+
+
+def main(argv: Optional[List[str]] = None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="print the registry and exit")
+    ap.add_argument("--run", nargs="+", metavar="NAME",
+                    help="run the named scenario(s)")
+    ap.add_argument("--grid", choices=["ci"],
+                    help="run a predefined grid (ci = the bench-smoke trio)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write results as a JSON list")
+    args = ap.parse_args(argv)
+
+    if args.list or not (args.run or args.grid):
+        for n in names():
+            s = REGISTRY[n]
+            print(f"{n:22s} {s.strategy}/{s.topology}/{s.engine:10s} "
+                  f"partition={s.partition:9s} clients={s.num_clients}  "
+                  f"{s.description}")
+        return
+
+    todo = list(args.run or []) + (list(CI_SMOKE_GRID) if args.grid else [])
+    results = []
+    for name in todo:
+        res = run_scenario(name)
+        results.append(res)
+        m, t = res["metrics"], res["timing"]
+        print(f"{name}: test_acc={m['test_accuracy']:.3f} "
+              f"f1={m['f1']:.3f} build={t['build_time_s']:.2f}s "
+              f"rounds_per_s={t['rounds_per_s']:.3f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"results -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

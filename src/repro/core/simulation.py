@@ -16,7 +16,7 @@ Two interchangeable engines run the rounds (`FLConfig.engine`):
   results to float tolerance (tests/test_engine.py), ~3x+ round
   throughput at 64 clients, scales to federation sizes the loop cannot.
 
-Timing protocol (paper §1.2.6-§1.2.7, interpretation noted in DESIGN.md):
+Timing protocol (paper §1.2.6-§1.2.7, interpretation in DESIGN.md §3):
 * Build time — wall-clock of the full federated training procedure.
 * Classification time — wall-clock to produce test-set predictions from
   the *served* model. For centralized HFL the served model must first be
@@ -147,6 +147,29 @@ class FederatedSimulation:
         for i in range(0, len(x), batch):
             preds.append(np.asarray(_predict(params, jnp.asarray(x[i:i + batch]))))
         return np.concatenate(preds)
+
+    @classmethod
+    def from_scenario(cls, spec) -> "FederatedSimulation":
+        """Build a simulation from a `core.scenarios.ScenarioSpec` (duck-
+        typed: any object with the spec's fields works): dataset
+        constructed, partition applied, engine state ready. Async
+        scenarios wrap the returned sim in `AsyncSimulation` — see
+        `core.scenarios.run_scenario`."""
+        from repro.data.synthetic import DATASETS
+        ds = DATASETS[spec.dataset](seed=spec.seed, n_train=spec.n_train,
+                                    n_test=spec.n_test)
+        sim = cls(spec.to_fl_config(), ds)
+        if spec.partition == "dirichlet":
+            from repro.data.partition import dirichlet_partition
+            _, ytr = ds["train"]
+            # every client must fill at least one local batch — with the
+            # default floor (8) a heavily-skewed shard can fall below the
+            # batch size and the loop engine would train it on ZERO
+            # batches (NaN loss, untrained params)
+            sim.set_partition(dirichlet_partition(
+                ytr, spec.num_clients, alpha=spec.dirichlet_alpha,
+                seed=spec.seed, min_per_client=spec.local_batch_size))
+        return sim
 
     def set_partition(self, parts):
         """Re-partition the train split (e.g. Dirichlet non-IID) after

@@ -192,6 +192,36 @@ def cfl_merge_stacked(global_params: Params, client_params: Params,
                           interpret=interpret)
 
 
+def staleness_batch_weights(alphas) -> jnp.ndarray:
+    """Weights that make ONE weighted reduction equal k SEQUENTIAL
+    continual merges with rates alphas[0..k-1] (in that order):
+
+        theta <- (1-a_i) theta + a_i theta_i   for i = 0..k-1
+
+    composes to  theta * prod_j (1-a_j)
+                 + sum_i theta_i * a_i * prod_{j>i} (1-a_j),
+
+    so the returned (k+1,) vector is [prod(1-a), a_0*suffix_0, ...,
+    a_{k-1}*1] with suffix_i = prod_{j>i}(1-a_j). The entries telescope
+    to sum exactly 1 — no renormalization needed (DESIGN.md §5)."""
+    a = jnp.asarray(alphas, jnp.float32)
+    keep = jnp.cumprod((1.0 - a)[::-1])[::-1]         # prod_{j>=i}(1-a_j)
+    suffix = jnp.concatenate([keep[1:], jnp.ones((1,), jnp.float32)])
+    return jnp.concatenate([keep[:1], a * suffix])
+
+
+def async_batch_merge(global_params: Params, stacked_updates: Params,
+                      alphas, *, interpret=None) -> Params:
+    """Batched staleness-aware merge: fold k same-tick client arrivals
+    (leading axis k, per-arrival rates `alphas`) into the server model in
+    one kernel pass — exactly equivalent to k sequential `cfl_merge`
+    calls (tests/test_async_engine.py pins the equivalence)."""
+    from repro.kernels import ops as kops
+    return kops.merge_aggregate_stacked(
+        global_params, stacked_updates, staleness_batch_weights(alphas),
+        interpret=interpret)
+
+
 # ===========================================================================
 # mesh-level (inside shard_map) operators — pod-scale FL
 # ===========================================================================

@@ -85,6 +85,23 @@ def fedavg_aggregate_tree(client_params, weights, *, interpret=None):
     return fedavg_aggregate_stacked(stacked, weights, interpret=interpret)
 
 
+def merge_aggregate_stacked(base_tree, stacked_tree, weights, *,
+                            interpret=None):
+    """Weighted variant of the `fedavg_aggregate_stacked` ravel path with
+    a distinguished base row: the async engine's batched merge.
+
+    `base_tree` is the server model (no client axis), `stacked_tree` holds
+    k arriving client updates (leading axis k), `weights` is a (k+1,)
+    already-normalized vector whose first entry weights the base model.
+    One fused kernel pass over the (k+1, N) matrix replaces k sequential
+    `cfl_merge` host calls (see strategies.async_batch_merge for the
+    weight composition that makes the two exactly equivalent)."""
+    base_row = stacked_ravel(jax.tree.map(lambda l: l[None], base_tree))
+    mat = jnp.concatenate([base_row, stacked_ravel(stacked_tree)], axis=0)
+    return tree_unravel(stacked_tree,
+                        fedavg_aggregate(mat, weights, interpret=interpret))
+
+
 # -- flash attention -----------------------------------------------------------
 
 def flash_attention(q, k, v, *, causal=True, window=0, interpret=None,

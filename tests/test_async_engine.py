@@ -1,0 +1,201 @@
+"""Vectorized heterogeneous-client async runtime: loop-vs-vectorized
+parity, batched-merge equivalence to sequential cfl_merge, staleness
+monotonicity, speed models, and dropout/sampling edge cases
+(DESIGN.md §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import strategies
+from repro.core.async_agg import (AsyncSimulation, make_speeds,
+                                  staleness_alpha)
+from repro.core.fl_types import FLConfig
+from repro.core.simulation import FederatedSimulation
+from repro.data.synthetic import mnist_like
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    # 4 clients x 64 samples, shard-divisible (parity contract §4.3)
+    return mnist_like(seed=0, n_train=256, n_test=128)
+
+
+def _async(ds, engine, **kw):
+    fl = FLConfig(strategy="cfl", num_clients=4, num_groups=2,
+                  local_epochs=1, local_batch_size=32, lr=0.05, seed=0,
+                  engine=engine)
+    return AsyncSimulation(FederatedSimulation(fl, ds), engine=engine, **kw)
+
+
+# ---------------------------------------------------------------------------
+# loop vs vectorized parity (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+def test_async_engine_parity_uniform(small_ds):
+    """Homogeneous speeds: every tick is a full-federation batch. Both
+    engines replay the same schedule and rng, so accuracy, staleness and
+    makespan agree (merge math is algebraically identical)."""
+    loop = _async(small_ds, "loop", speed_model="uniform",
+                  updates_per_client=2).run()
+    vec = _async(small_ds, "vectorized", speed_model="uniform",
+                 updates_per_client=2).run()
+    assert loop.merges == vec.merges == 8
+    assert loop.batches == vec.batches == 2
+    assert loop.makespan == vec.makespan == 2.0
+    assert loop.mean_staleness == vec.mean_staleness
+    assert abs(loop.test_accuracy - vec.test_accuracy) <= 1e-3
+    assert abs(loop.train_accuracy - vec.train_accuracy) <= 1e-3
+    assert abs(loop.f1 - vec.f1) <= 1e-2
+
+
+def test_async_engine_parity_straggler(small_ds):
+    """Mixed batch sizes (3 fast clients collide, the straggler arrives
+    alone): parity must hold across heterogeneous batches too."""
+    speeds = np.array([1.0, 1.0, 1.0, 4.0])
+    loop = _async(small_ds, "loop", speeds=speeds,
+                  updates_per_client=2).run()
+    vec = _async(small_ds, "vectorized", speeds=speeds,
+                 updates_per_client=2).run()
+    assert loop.merges == vec.merges == 8
+    assert loop.batches == vec.batches == 4      # t = 1, 2, 4, 8
+    assert loop.makespan == vec.makespan == pytest.approx(8.0)
+    assert abs(loop.test_accuracy - vec.test_accuracy) <= 1e-3
+    assert loop.mean_staleness == vec.mean_staleness
+
+
+# ---------------------------------------------------------------------------
+# batched merge == sequential cfl_merge
+# ---------------------------------------------------------------------------
+
+def _forest(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))}
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_async_batch_merge_equals_sequential(k):
+    trees = _forest(k + 1, seed=k)
+    base, updates = trees[0], trees[1:]
+    alphas = [staleness_alpha(0.6, tau) for tau in range(k)]
+    seq = base
+    for u, a in zip(updates, alphas):
+        seq = strategies.cfl_merge(seq, u, a)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *updates)
+    bat = strategies.async_batch_merge(base, stacked, alphas)
+    for sl, bl in zip(jax.tree.leaves(seq), jax.tree.leaves(bat)):
+        np.testing.assert_allclose(np.asarray(sl), np.asarray(bl),
+                                   atol=1e-6)
+
+
+def test_staleness_batch_weights_sum_to_one():
+    for alphas in ([0.6], [0.5, 0.5], [0.9, 0.1, 0.4, 0.8]):
+        w = strategies.staleness_batch_weights(alphas)
+        assert w.shape == (len(alphas) + 1,)
+        assert float(jnp.sum(w)) == pytest.approx(1.0, abs=1e-6)
+        assert float(w[-1]) == pytest.approx(alphas[-1])
+
+
+# ---------------------------------------------------------------------------
+# staleness alpha
+# ---------------------------------------------------------------------------
+
+def test_staleness_alpha_monotone_in_staleness():
+    """a(tau) strictly decreases in tau and never reaches zero."""
+    vals = [staleness_alpha(0.6, tau) for tau in range(0, 50)]
+    assert vals[0] == 0.6
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+    assert vals[-1] > 0
+
+
+def test_staleness_alpha_monotone_in_decay():
+    """At fixed tau > 0, a stronger decay discounts harder; decay=0
+    disables staleness discounting entirely."""
+    for tau in (1, 5, 20):
+        a_weak = staleness_alpha(0.6, tau, decay=0.25)
+        a_strong = staleness_alpha(0.6, tau, decay=1.0)
+        assert a_strong < a_weak < 0.6
+    assert staleness_alpha(0.6, 100, decay=0.0) == 0.6
+
+
+# ---------------------------------------------------------------------------
+# heterogeneity models, dropout, sampling
+# ---------------------------------------------------------------------------
+
+def test_async_simulation_rejects_unknown_engine(small_ds):
+    fl = FLConfig(strategy="cfl", num_clients=4, num_groups=2)
+    sim = FederatedSimulation(fl, small_ds)
+    with pytest.raises(ValueError, match="unknown engine"):
+        AsyncSimulation(sim, engine="warp")
+
+
+def test_make_speeds_models():
+    rng = np.random.default_rng(0)
+    assert np.all(make_speeds("uniform", 8, rng) == 1.0)
+    s = make_speeds("straggler", 8, rng, straggler_factor=4.0)
+    assert sorted(np.unique(s)) == [1.0, 4.0] and np.sum(s == 4.0) == 1
+    ln = make_speeds("lognormal", 64, rng)
+    assert ln.shape == (64,) and np.all(ln > 0) and len(np.unique(ln)) > 8
+    q = make_speeds("lognormal", 64, rng, quantize=0.5)
+    np.testing.assert_allclose(np.round(q / 0.5), q / 0.5)
+    assert np.min(q) >= 0.5
+    with pytest.raises(ValueError, match="speed model"):
+        make_speeds("warp", 4, rng)
+
+
+def test_tick_quantization_batches(small_ds):
+    """Continuous lognormal speeds produce singleton batches at tick=0;
+    a coarse tick grid collapses them into few large batches."""
+    fine = _async(small_ds, "loop", speed_model="lognormal",
+                  updates_per_client=2, tick=0.0)
+    coarse = _async(small_ds, "loop", speed_model="lognormal",
+                    updates_per_client=2, tick=5.0)
+    n_fine = len(fine.schedule())
+    n_coarse = len(coarse.schedule())
+    assert n_fine == 8                     # distinct float arrival times
+    assert n_coarse < n_fine
+    assert sum(len(cs) for _, cs in coarse.schedule()) == 8
+
+
+def test_dropout_all_but_one_client(small_ds):
+    """dropout=1.0 caps at C-1 victims: one client always survives and
+    its updates carry the run to completion."""
+    sim = _async(small_ds, "loop", speed_model="uniform",
+                 updates_per_client=3, dropout=1.0)
+    assert len(sim.dropped_clients) == 3
+    survivor = set(range(4)) - set(sim.dropped_clients)
+    assert len(survivor) == 1
+    assert sim.n_updates[survivor.pop()] == 3
+    r = sim.run()
+    assert 3 <= r.merges <= 3 + 3 * 2      # survivor + partial victims
+    assert r.dropped_clients == sim.dropped_clients
+    assert 0.0 <= r.test_accuracy <= 1.0
+
+
+def test_dropout_parity_between_engines(small_ds):
+    """The dropout process is schedule rng, drawn before training: both
+    engines see the same victims and the same surviving timeline."""
+    loop = _async(small_ds, "loop", speed_model="uniform",
+                  updates_per_client=3, dropout=0.5)
+    vec = _async(small_ds, "vectorized", speed_model="uniform",
+                 updates_per_client=3, dropout=0.5)
+    assert loop.dropped_clients == vec.dropped_clients
+    assert loop.schedule() == vec.schedule()
+    rl, rv = loop.run(), vec.run()
+    assert rl.merges == rv.merges
+    assert abs(rl.test_accuracy - rv.test_accuracy) <= 1e-3
+
+
+def test_participation_single_client(small_ds):
+    """participation -> 0 floors at k=1 (topology.sample_participants):
+    the whole run is one client's update stream, staleness stays 0
+    within singleton batches."""
+    sim = _async(small_ds, "loop", speed_model="uniform",
+                 updates_per_client=3, participation=0.0)
+    assert len(sim.participants) == 1
+    r = sim.run()
+    assert r.merges == 3 and r.batches == 3
+    assert r.mean_staleness == 0.0
+    assert r.participants == sim.participants

@@ -1,0 +1,142 @@
+"""Scenario registry: spec validation, resolution to runnable configs,
+the stable result-JSON schema, and the CI bench compare gate
+(DESIGN.md §6-§7)."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import scenarios
+from repro.core.fl_types import FLConfig
+from repro.core.simulation import FederatedSimulation
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.ci_bench import ASYNC_SPEEDUP_FLOOR, compare  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# registry + spec validation
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_every_axis():
+    """The shipped registry spans the full evaluation space: every
+    strategy, both engines, both partitions, and every heterogeneity
+    speed model appear in at least one named scenario."""
+    specs = [scenarios.get(n) for n in scenarios.names()]
+    assert {s.strategy for s in specs} == set(scenarios.TOPOLOGY_BY_STRATEGY)
+    assert {s.engine for s in specs} == {"loop", "vectorized"}
+    assert {s.partition for s in specs} == {"iid", "dirichlet"}
+    assert {s.speed_model for s in specs if s.strategy == "async"} == {
+        "uniform", "lognormal", "straggler"}
+
+
+def test_every_spec_resolves_to_fl_config():
+    for name in scenarios.names():
+        fl = scenarios.get(name).to_fl_config()
+        assert isinstance(fl, FLConfig)
+        assert fl.num_clients % fl.num_groups == 0
+
+
+def test_ci_smoke_grid_is_registered():
+    assert len(scenarios.CI_SMOKE_GRID) == 3
+    for name in scenarios.CI_SMOKE_GRID:
+        assert name in scenarios.REGISTRY
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="topology"):
+        scenarios.ScenarioSpec("bad", "x", strategy="hfl", topology="ring")
+    with pytest.raises(ValueError, match="strategy"):
+        scenarios.ScenarioSpec("bad", "x", strategy="warp")
+    with pytest.raises(ValueError, match="partition"):
+        scenarios.ScenarioSpec("bad", "x", partition="sorted")
+    with pytest.raises(ValueError, match="engine"):
+        scenarios.ScenarioSpec("bad", "x", engine="warp")
+    with pytest.raises(ValueError, match="duplicate"):
+        scenarios.register(scenarios.get("iid-hfl-vec"))
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenarios.get("no-such-scenario")
+
+
+def test_async_spec_maps_to_cfl_substrate():
+    fl = scenarios.get("async-uniform-vec").to_fl_config()
+    assert fl.strategy == "cfl" and fl.engine == "vectorized"
+    fl = scenarios.get("ring-gossip-vec").to_fl_config()
+    assert fl.afl_mode == "gossip"
+
+
+# ---------------------------------------------------------------------------
+# resolution + execution
+# ---------------------------------------------------------------------------
+
+def test_from_scenario_applies_dirichlet_partition():
+    spec = scenarios.get("dirichlet-afl-loop")
+    sim = FederatedSimulation.from_scenario(spec)
+    sizes = [len(p) for p in sim.parts]
+    assert sum(sizes) == spec.n_train
+    assert max(sizes) != min(sizes)        # label skew -> uneven shards
+    iid = FederatedSimulation.from_scenario(scenarios.get("iid-hfl-loop"))
+    assert max(len(p) for p in iid.parts) - min(
+        len(p) for p in iid.parts) <= 1
+
+
+def test_run_scenario_result_schema():
+    """One cheap async run end-to-end; the result document is the stable
+    schema every consumer (example, benchmarks, CI) parses."""
+    spec = scenarios.ScenarioSpec(
+        "tiny-async", "schema smoke", strategy="async", topology="event",
+        engine="loop", num_clients=4, n_train=128, n_test=64,
+        speed_model="uniform", updates_per_client=1)
+    res = scenarios.run_scenario(spec)
+    assert res["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
+    assert res["scenario"] == "tiny-async"
+    assert res["spec"]["strategy"] == "async"
+    for k in ("test_accuracy", "train_accuracy", "precision", "recall",
+              "f1", "balanced_accuracy"):
+        assert 0.0 <= res["metrics"][k] <= 1.0
+    assert res["timing"]["rounds_per_s"] > 0
+    assert res["async"]["merges"] == 4 and res["async"]["batches"] == 1
+    json.dumps(res)                        # must be JSON-serializable
+
+
+def test_run_scenario_sync_has_null_async_block():
+    spec = scenarios.ScenarioSpec(
+        "tiny-cfl", "schema smoke", strategy="cfl", topology="sequential",
+        engine="loop", num_clients=4, n_train=128, n_test=64, rounds=1)
+    res = scenarios.run_scenario(spec)
+    assert res["async"] is None
+    assert res["spec"]["rounds"] == 1
+    json.dumps(res)
+
+
+# ---------------------------------------------------------------------------
+# CI bench gate
+# ---------------------------------------------------------------------------
+
+def _bench_doc(sync_speedup, async_speedup, scale="quick"):
+    return {"schema_version": 1, "scale": scale, "clients": 64,
+            "sync": {"speedup": sync_speedup},
+            "async": {"speedup": async_speedup},
+            "scenarios": {n: {} for n in scenarios.CI_SMOKE_GRID}}
+
+
+def test_compare_passes_within_tolerance():
+    base = _bench_doc(3.0, 2.8)
+    assert compare(_bench_doc(3.0, 2.8), base) == []
+    assert compare(_bench_doc(2.4, ASYNC_SPEEDUP_FLOOR + 0.2), base) == []
+
+
+def test_compare_flags_regressions():
+    base = _bench_doc(3.0, 2.8)
+    fails = compare(_bench_doc(1.5, 2.8), base)
+    assert len(fails) == 1 and "sync" in fails[0]
+    fails = compare(_bench_doc(3.0, 1.2), base)
+    assert any("async" in f for f in fails)
+    assert any("floor" in f for f in fails)
+    # floor only applies at quick scale
+    assert compare(_bench_doc(3.0, 1.9, scale="smoke"),
+                   _bench_doc(3.0, 1.9, scale="smoke")) == []
+    fails = compare({**_bench_doc(3.0, 2.8), "scenarios": {}}, base)
+    assert any("coverage" in f for f in fails)
