@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test deps lint bench bench-engines scenarios bench-ci
+.PHONY: test deps lint bench bench-engines scenarios bench-ci attack-demo
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -23,6 +23,12 @@ bench-engines:
 scenarios:
 	$(PY) -m repro.core.scenarios --list
 	$(PY) -m repro.core.scenarios --grid ci
+
+# one adversarial scenario end-to-end: 25% sign-flip attackers at 32
+# clients, defended by the trimmed-mean selection kernel (DESIGN.md §8;
+# the full acceptance family lives in experiments/attacks/)
+attack-demo:
+	$(PY) -m repro.core.scenarios --run attack-signflip-trimmed-32c-vec
 
 # the CI round-throughput gate, locally: OVERWRITES the tracked
 # BENCH_ci.json (the recorded acceptance run — only commit the change

@@ -2,8 +2,9 @@
 
 Measures the loop-vs-vectorized round throughput of BOTH runtimes (the
 synchronous engine and the tick-batched async engine) at the target
-client count, runs the registry's CI smoke grid, and writes one
-`BENCH_ci.json` document (stable schema, DESIGN.md §7).
+client count, the robust-aggregation overhead ratio (trimmed-mean vs
+plain fedavg, DESIGN.md §8), runs the registry's CI smoke grid, and
+writes one `BENCH_ci.json` document (stable schema, DESIGN.md §7).
 
 With `--baseline` it gates: the regression signal is the vectorized/loop
 SPEEDUP ratio (dimensionless, so portable across runner hardware — raw
@@ -65,6 +66,17 @@ def bench_async(clients, updates):
     }
 
 
+def bench_robust(clients):
+    """Robust trimmed-mean vs plain fedavg aggregation throughput — the
+    measurement is `kernel_bench.measure_robust` (ISSUE 3 sweep), shared
+    like the other helpers. The gated `speedup` is fedavg/trimmed: the
+    fraction of linear-aggregation throughput the robust path retains
+    (guards against e.g. accidentally routing the CPU path through the
+    interpret-mode selection kernel)."""
+    from benchmarks.kernel_bench import measure_robust
+    return measure_robust(clients)
+
+
 def run(scale):
     from repro.core import scenarios
     cfg = SCALES[scale]
@@ -78,6 +90,9 @@ def run(scale):
     print(f"  async c{C}: loop {asy['loop_build_s']:.2f}s, "
           f"vectorized {asy['vectorized_build_s']:.2f}s for "
           f"{asy['merges']} merges ({asy['speedup']:.2f}x)", flush=True)
+    rob = bench_robust(C)
+    print(f"  robust c{C}: trimmed {rob['trimmed_us']:.0f}us vs fedavg "
+          f"{rob['fedavg_us']:.0f}us ({rob['speedup']:.3f}x)", flush=True)
     grid = {}
     for name in scenarios.CI_SMOKE_GRID:
         res = scenarios.run_scenario(name)
@@ -93,20 +108,25 @@ def run(scale):
         "host": {"cpus": os.cpu_count()},
         "sync": sync,
         "async": asy,
+        "robust": rob,
         "scenarios": grid,
     }
 
 
 def compare(new, baseline, tolerance=0.25):
     """Gate the run against the committed baseline. Returns a list of
-    failure strings (empty = pass)."""
+    failure strings (empty = pass). The "robust" section gates only when
+    both documents carry it (pre-ISSUE-3 baselines don't)."""
     failures = []
-    for section in ("sync", "async"):
+    for section in ("sync", "async", "robust"):
+        if section == "robust" and not (section in new
+                                        and section in baseline):
+            continue
         got = new[section]["speedup"]
         want = baseline[section]["speedup"]
         if got < want * (1.0 - tolerance):
             failures.append(
-                f"{section} round-throughput regression: vectorized/loop "
+                f"{section} throughput regression: "
                 f"speedup {got:.2f}x < baseline {want:.2f}x - {tolerance:.0%}")
     if new["scale"] == "quick" and new["async"]["speedup"] < ASYNC_SPEEDUP_FLOOR:
         failures.append(

@@ -10,7 +10,9 @@ Sections:
   paper_fig13_14 — derived comparisons (accuracy & efficiency ranking)
   kernels        — micro-bench CSV (name,us_per_call,derived), including
                    the loop-vs-vectorized engine round-throughput sweep
-                   over client counts (8 -> 256 at --scale full)
+                   over client counts (8 -> 256 at --scale full) and the
+                   robust trimmed-mean aggregation sweep (8 -> 256
+                   clients, DESIGN.md §8)
   scenarios      — the registry's CI smoke grid (core/scenarios.py), CSV
                    rows in the stable result schema's key metrics
   roofline       — per (arch x shape x mesh) terms from the dry-run cache

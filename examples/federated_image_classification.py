@@ -6,10 +6,17 @@ per-round accuracy/loss curves (paper Figs. 9/11).
     PYTHONPATH=src python examples/federated_image_classification.py \
         --strategy cfl --dataset fashion --rounds 10 --clients 10 --curves
 Beyond-paper options: --non-iid (Dirichlet label skew), --gossip
-(decentralized ring aggregation for AFL), and the scenario registry:
-`--list-scenarios` / `--scenario NAME` runs a named point of the
-strategy x partition x topology x heterogeneity x engine space
-(core/scenarios.py) and prints its stable result document.
+(decentralized ring aggregation for AFL), the adversarial axis
+(--attack/--attack-fraction/--attack-scale toggles Byzantine clients,
+--defense/--clip-tau selects the robust aggregator — DESIGN.md §8), and
+the scenario registry: `--list-scenarios` / `--scenario NAME` runs a
+named point of the strategy x partition x topology x heterogeneity x
+adversary x engine space (core/scenarios.py) and prints its stable
+result document.
+
+    PYTHONPATH=src python examples/federated_image_classification.py \
+        --strategy afl --clients 16 --engine vectorized \
+        --attack sign_flip --attack-scale 4 --defense trimmed_mean
 """
 import argparse
 import csv
@@ -41,6 +48,22 @@ def main():
     ap.add_argument("--non-iid", action="store_true",
                     help="Dirichlet(0.5) label-skew partition (paper §4 "
                          "future work, implemented here)")
+    from repro.core.fl_types import ATTACKS, DEFENSES
+    ap.add_argument("--attack", choices=ATTACKS, default="none",
+                    help="Byzantine client attack (core/attacks.py): a "
+                         "rng-chosen subset corrupts its uploads between "
+                         "training and aggregation (label_flip poisons "
+                         "the shard instead)")
+    ap.add_argument("--attack-fraction", type=float, default=0.25,
+                    help="fraction of clients that are Byzantine")
+    ap.add_argument("--attack-scale", type=float, default=1.0,
+                    help="attack magnitude (flip/boost factor or sigma)")
+    ap.add_argument("--defense", choices=DEFENSES, default="none",
+                    help="robust aggregation rule (core/robust.py); "
+                         "validity depends on the strategy's aggregation "
+                         "event (DESIGN.md §8)")
+    ap.add_argument("--clip-tau", type=float, default=10.0,
+                    help="norm_clip: max L2 of an accepted update delta")
     ap.add_argument("--curves", action="store_true",
                     help="write per-round curves CSV (paper Figs. 9/11)")
     ap.add_argument("--engine", choices=["loop", "vectorized"],
@@ -75,7 +98,10 @@ def main():
                   participation=args.participation,
                   merge_alpha=args.merge_alpha, lr=args.lr,
                   afl_mode="gossip" if args.gossip else "fedavg",
-                  engine=args.engine)
+                  attack=args.attack,
+                  attack_fraction=args.attack_fraction,
+                  attack_scale=args.attack_scale, defense=args.defense,
+                  clip_tau=args.clip_tau, engine=args.engine)
     sim = FederatedSimulation(fl, ds)
     if args.non_iid:
         from repro.data.partition import dirichlet_partition
@@ -85,6 +111,11 @@ def main():
     r = sim.run()
     print(f"\n=== {args.strategy.upper()} on {ds['name']} "
           f"({'non-IID' if args.non_iid else 'IID'}) ===")
+    if args.attack != "none" or args.defense != "none":
+        print(f"attack:             {args.attack} "
+              f"(clients {[int(c) for c in sim.attackers]}, "
+              f"scale {args.attack_scale})")
+        print(f"defense:            {args.defense}")
     print(f"training acc:       {r.train_accuracy:.3f}")
     print(f"testing acc:        {r.test_accuracy:.3f}")
     print(f"precision/recall:   {r.precision:.3f} / {r.recall:.3f}")

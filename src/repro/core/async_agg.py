@@ -175,26 +175,48 @@ class AsyncSimulation:
         return [(t, sorted(arrivals[t])) for t in sorted(arrivals)]
 
     # -- batch execution (the engine split) ---------------------------------
+    # Adversarial axis (DESIGN.md §8): attacker arrivals are corrupted
+    # against the batch-start model (the base every member pulled — the
+    # batch is atomic), keyed by (seed, batch index, absolute client id)
+    # so both engines inject identical corruption. The only defense at
+    # this low-redundancy merge event is norm_clip: every arriving delta
+    # is clipped against the batch-start model BEFORE the staleness
+    # merge, which leaves the batched-merge weight algebra (and thus
+    # engine parity) untouched — only the merged VALUES change.
+
     def _train_batch_loop(self, model, clients: Sequence[int],
-                          alphas: Sequence[float]):
+                          alphas: Sequence[float], event: int):
+        sim = self.sim
+        base = model
         locals_, accs = [], []
         for c in clients:
-            p, _, acc = self.sim._local_train(model, c)
+            p, _, acc = sim._local_train(model, c)
             locals_.append(p)
             accs.append(acc)
+        locals_ = sim._corrupt_clients(locals_, [base] * len(clients),
+                                       clients, event)
+        if sim.fl.defense == "norm_clip":
+            from repro.core import robust
+            locals_ = [robust.clip_update(base, p, sim.fl.clip_tau)
+                       for p in locals_]
         for p, a in zip(locals_, alphas):
             model = strategies.cfl_merge(model, p, a)
         return model, accs
 
     def _train_batch_vec(self, model, clients: Sequence[int],
-                         alphas: Sequence[float]):
+                         alphas: Sequence[float], event: int):
         from repro.core import engine as engine_mod
+        sim = self.sim
         eng = self._vec
-        data = eng.batched_clients(self.sim.rng, clients,
-                                   self.sim.fl.local_epochs)
-        stacked = engine_mod.replicate_tree(model, len(clients))
-        stacked, _, _ = eng.train(stacked, data)
+        data = eng.batched_clients(sim.rng, clients, sim.fl.local_epochs)
+        base = engine_mod.replicate_tree(model, len(clients))
+        stacked, _, _ = eng.train(base, data)
         accs = eng.local_accs(stacked, clients)
+        stacked = sim._corrupt_stacked(stacked, base, clients, event)
+        if sim.fl.defense == "norm_clip":
+            from repro.core import robust
+            stacked = robust.clip_deltas_stacked(model, stacked,
+                                                 sim.fl.clip_tau)
         model = strategies.async_batch_merge(model, stacked,
                                              np.asarray(alphas, np.float32))
         return model, list(accs)
@@ -236,6 +258,7 @@ class AsyncSimulation:
                     _predict(sim.init_params, jnp.asarray(x[:n_eval]))
             return
         sim._warmup_predicts()
+        from repro.core import attacks
         from repro.core import engine as engine_mod
         eng = self._vec
         rng = np.random.default_rng(0)
@@ -245,6 +268,14 @@ class AsyncSimulation:
             stacked = engine_mod.replicate_tree(sim.init_params, k)
             stacked, _, _ = eng.train(stacked, data)
             eng.local_accs(stacked, clients)
+            if sim.fl.attack not in ("none", "label_flip"):
+                # all-flags-on so the corruption program compiles even
+                # when the dry client ids aren't attackers
+                attacks.corrupt_stacked(
+                    stacked, stacked, np.ones(k, bool),
+                    attacks.client_keys(attacks.event_key(sim.fl.seed, 0),
+                                        clients),
+                    kind=sim.fl.attack, scale=sim.fl.attack_scale)
             strategies.async_batch_merge(
                 sim.init_params, stacked,
                 np.full(k, self.alpha, np.float32))
@@ -269,12 +300,12 @@ class AsyncSimulation:
         t = 0.0
         timer = Timer()
         with timer:
-            for t, clients in batches:
+            for bi, (t, clients) in enumerate(batches):
                 taus = [server_step + i - int(base_version[c])
                         for i, c in enumerate(clients)]
                 alphas = [staleness_alpha(self.alpha, tau, self.decay)
                           for tau in taus]
-                model, accs = run_batch(model, clients, alphas)
+                model, accs = run_batch(model, clients, alphas, bi)
                 server_step += len(clients)
                 # the batch is atomic: every member pulls the post-batch
                 # model for its next local round

@@ -1,0 +1,160 @@
+"""Byzantine client attacks — the adversarial workload axis (DESIGN.md §8).
+
+A configurable subset of clients is adversarial. Model-poisoning attacks
+corrupt the client's trained parameters *between local training and the
+aggregation event*; the data-poisoning attack (label_flip) corrupts the
+client's shard before training. All corruptions are expressed relative to
+`base` — the model the client pulled at the start of its local round — so
+they target the *update* theta_c - base, which is what aggregation acts on:
+
+  sign_flip      theta_mal = base - scale * (theta_c - base)
+                 (gradient reversal: the update is flipped and boosted)
+  gauss          theta_mal = theta_c + scale * N(0, I)
+                 (additive Gaussian noise on the uploaded parameters)
+  model_replace  theta_mal = base + scale * (theta_c - base)
+                 (boosted model replacement, Bagdasaryan et al. 2020: a
+                 large `scale` makes the single malicious update dominate
+                 the average)
+  label_flip     data-layer: shard labels y -> (num_classes - 1) - y
+                 before training (the uploaded parameters are an honest
+                 SGD run on poisoned data — `corrupt_tree` is identity)
+
+RNG-parity contract (DESIGN.md §4): corruption must be identical under
+`engine="loop"` and `engine="vectorized"`. Two mechanisms guarantee that:
+
+* the attacker set is drawn from a dedicated generator derived from the
+  config seed (`attacker_ids`) — never from the schedule rng;
+* Gaussian noise is keyed by (seed, aggregation event, absolute client
+  id) through `jax.random.fold_in`, so the noise a client injects does
+  not depend on which engine materializes it or on how the event's
+  client subset is ordered.
+
+`corrupt_tree` is the single-client corruption (traceable — used inside
+the CFL `lax.scan`); `corrupt_stacked` is its vmap over the leading
+client axis (the stacked engine path). The loop engine calls
+`corrupt_tree` per attacker with the same key derivation, so both
+engines see bitwise-identical corruption.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fl_types import ATTACKS
+
+Params = Any
+
+_ATTACK_SALT = 0x5EED_A77C        # decouples attack keys from model init
+NUM_CLASSES = 10
+
+
+def attacker_ids(num_clients: int, fraction: float, seed: int
+                 ) -> np.ndarray:
+    """The Byzantine subset: `fraction` of the federation, rng-chosen from
+    a generator derived from (seed, salt) so the schedule rng (participant
+    sampling, visit orders, speeds) is untouched. At least one attacker
+    when fraction > 0; at least one honest client always."""
+    if fraction <= 0 or num_clients <= 1:
+        return np.empty((0,), int)
+    k = min(num_clients - 1, max(1, int(round(fraction * num_clients))))
+    rng = np.random.default_rng([seed, _ATTACK_SALT])
+    return np.sort(rng.choice(num_clients, size=k, replace=False))
+
+
+def attacker_mask(num_clients: int, fraction: float, seed: int
+                  ) -> np.ndarray:
+    mask = np.zeros((num_clients,), bool)
+    mask[attacker_ids(num_clients, fraction, seed)] = True
+    return mask
+
+
+def flip_labels(labels: np.ndarray, num_classes: int = NUM_CLASSES
+                ) -> np.ndarray:
+    """Deterministic label flip y -> (K-1) - y (an involution, so the
+    attack is its own inverse — pinned in tests)."""
+    return (num_classes - 1 - labels).astype(labels.dtype)
+
+
+def event_key(seed: int, event: int) -> jax.Array:
+    """PRNG key for one aggregation event (sync round / async batch)."""
+    return jax.random.fold_in(
+        jax.random.PRNGKey(np.uint32(seed ^ _ATTACK_SALT)), event)
+
+
+def client_keys(key: jax.Array, client_ids) -> jax.Array:
+    """Per-client keys from absolute ids — subset/order independent."""
+    ids = jnp.asarray(np.asarray(client_ids, np.int64) & 0x7FFFFFFF,
+                      jnp.int32)
+    return jax.vmap(lambda c: jax.random.fold_in(key, c))(ids)
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def corrupt_tree(local: Params, base: Params, flag, key, *, kind: str,
+                 scale) -> Params:
+    """One client's corruption. `flag` (bool scalar, may be a tracer)
+    gates the attack; honest clients pass through unchanged. `key` seeds
+    the gauss noise (per-leaf via fold_in). Traceable, so it composes
+    with `lax.scan` (the vectorized CFL pass corrupts in-scan)."""
+    if kind not in ATTACKS:
+        raise ValueError(f"unknown attack {kind!r} (expected {ATTACKS})")
+    if kind in ("none", "label_flip"):      # label_flip acts at data layer
+        return local
+    scale = jnp.asarray(scale, jnp.float32)
+    flag = jnp.asarray(flag, bool)
+    leaves, treedef = jax.tree_util.tree_flatten(local)
+    base_leaves = jax.tree_util.tree_flatten(base)[0]
+    out = []
+    for i, (l, b) in enumerate(zip(leaves, base_leaves)):
+        l32, b32 = l.astype(jnp.float32), b.astype(jnp.float32)
+        if kind == "sign_flip":
+            atk = b32 - scale * (l32 - b32)
+        elif kind == "model_replace":
+            atk = b32 + scale * (l32 - b32)
+        else:                               # gauss
+            noise = jax.random.normal(jax.random.fold_in(key, i), l.shape,
+                                      jnp.float32)
+            atk = l32 + scale * noise
+        out.append(jnp.where(flag, atk, l32).astype(l.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def corrupt_stacked(stacked: Params, base_stacked: Params, flags,
+                    keys, *, kind: str, scale) -> Params:
+    """Vectorized corruption over the leading client axis: row c of every
+    leaf is corrupted iff flags[c], with noise keyed by keys[c] (derive
+    via `client_keys` from absolute ids for engine parity)."""
+    return jax.vmap(
+        lambda l, b, f, k: corrupt_tree(l, b, f, k, kind=kind, scale=scale)
+    )(stacked, base_stacked, jnp.asarray(flags, bool), keys)
+
+
+def corrupt_clients(client_params: Sequence[Params],
+                    base_params: Sequence[Params],
+                    client_ids: Sequence[int], mask: np.ndarray, *,
+                    kind: str, scale: float, seed: int, event: int,
+                    ) -> list:
+    """Loop-engine helper: corrupt a *list* of client pytrees in place of
+    the stacked path. `base_params` is the per-client list of round-start
+    models (same length as `client_params` — repeat a shared model
+    explicitly; sniffing a single pytree here would misread list-rooted
+    params); `mask` is indexed by absolute client id. The key derivation
+    matches `corrupt_stacked` exactly (parity contract)."""
+    if kind in ("none", "label_flip") or not np.any(mask):
+        return list(client_params)
+    if len(base_params) != len(client_params):
+        raise ValueError(
+            f"base_params must list one round-start model per client "
+            f"({len(base_params)} != {len(client_params)})")
+    key = event_key(seed, event)
+    out = []
+    for p, b, c in zip(client_params, base_params, client_ids):
+        if mask[c]:
+            ck = jax.random.fold_in(key, int(c) & 0x7FFFFFFF)
+            p = corrupt_tree(p, b, True, ck, kind=kind, scale=scale)
+        out.append(p)
+    return out

@@ -140,29 +140,56 @@ def predict_clients(stacked_params, images, *, stacked_apply_fn):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("loss_fn", "apply_fn", "lr", "momentum"))
+                   static_argnames=("loss_fn", "apply_fn", "lr", "momentum",
+                                    "attack", "defense", "clip_tau"))
 def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
-                   loss_fn, apply_fn, lr, momentum):
+                   loss_fn, apply_fn, lr, momentum, attack="none",
+                   attack_scale=1.0, attack_flags=None, attack_keys=None,
+                   defense="none", clip_tau=10.0):
     """One CFL round — the sequential client-to-client continual pass — as
     a single `lax.scan` over clients in visit order.
 
     data leaves: (C, T, B, ...) already permuted into visit order;
     eval_images/labels: (C, n, ...) in the same order. The merge is the
     kernel-backed `cfl_merge_stacked` (C=2 weighted reduction).
+
+    Adversarial axis (DESIGN.md §8): each visit's base model is the
+    carried scan state, so corruption MUST happen inside the scan —
+    `attack_flags`/`attack_keys` are per-visit (visit-order-permuted)
+    scan inputs, the upload is corrupted between local training and the
+    merge, and `defense="norm_clip"` clips the (possibly corrupted)
+    delta before folding it in. Local accuracy is evaluated on the
+    honest local model — attackers train honestly and corrupt only the
+    upload.
+
     Returns (final model, losses (C, T), post-train local accs (C,))."""
-    from repro.core import strategies   # deferred: strategies is kernel-level
+    from repro.core import attacks, strategies   # deferred: kernel-level
     opt = optimizers.sgd(lr, momentum=momentum)
+    C = jax.tree.leaves(data)[0].shape[0]
+    if attack_flags is None:
+        attack_flags = jnp.zeros((C,), bool)
+    if attack_keys is None:
+        attack_keys = jax.random.split(jax.random.PRNGKey(0), C)
 
     def visit(model, inputs):
-        cdata, ex, ey = inputs
+        cdata, ex, ey, flag, key = inputs
         local, losses, _ = _local_sgd_scan(model, cdata, opt, loss_fn)
         preds = jnp.argmax(apply_fn(local, ex), axis=-1)
         acc = jnp.mean((preds == ey).astype(jnp.float32))
-        model = strategies.cfl_merge_stacked(model, local, alpha)
+        if attack not in ("none", "label_flip"):
+            local = attacks.corrupt_tree(local, model, flag, key,
+                                         kind=attack, scale=attack_scale)
+        if defense == "norm_clip":
+            model = strategies.defended_cfl_merge(model, local, alpha,
+                                                  clip_tau)
+        else:
+            model = strategies.cfl_merge_stacked(model, local, alpha)
         return model, (losses, acc)
 
     model, (losses, accs) = jax.lax.scan(
-        visit, model, (data, eval_images, eval_labels))
+        visit, model,
+        (data, eval_images, eval_labels, jnp.asarray(attack_flags, bool),
+         attack_keys))
     return model, losses, accs
 
 
@@ -244,9 +271,15 @@ class VectorizedClientEngine:
         return np.asarray(jnp.mean(
             (preds == self.eval_y[idx]).astype(jnp.float32), axis=1))
 
-    def cfl_round(self, model, order, data, alpha):
+    def cfl_round(self, model, order, data, alpha, *, attack="none",
+                  attack_scale=1.0, attack_flags=None, attack_keys=None,
+                  defense="none", clip_tau=10.0):
         idx = jnp.asarray(np.asarray(order))
         return cfl_round_scan(model, data, self.eval_x[idx], self.eval_y[idx],
                               alpha, loss_fn=self.loss_fn,
                               apply_fn=self.apply_fn, lr=self.fl.lr,
-                              momentum=self.fl.momentum)
+                              momentum=self.fl.momentum, attack=attack,
+                              attack_scale=attack_scale,
+                              attack_flags=attack_flags,
+                              attack_keys=attack_keys, defense=defense,
+                              clip_tau=clip_tau)

@@ -2,10 +2,18 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Tuple
 
 STRATEGIES = ("hfl", "afl", "cfl")
 ENGINES = ("loop", "vectorized")
+
+# Adversarial axis (DESIGN.md §8). Canonical names live here (the only
+# dependency-free core module) so `core.attacks`, `core.robust`,
+# `core.scenarios`, and this config all validate against one vocabulary.
+ATTACKS = ("none", "sign_flip", "gauss", "label_flip", "model_replace")
+DEFENSES = ("none", "median", "trimmed_mean", "norm_clip", "krum",
+            "multi_krum")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +58,20 @@ class FLConfig:
     # pod-scale trainer
     local_steps: int = 4           # K local steps between aggregation events
     aggregate_every: int = 1       # rounds between aggregation events
+    # adversarial clients + robust aggregation (DESIGN.md §8)
+    attack: str = "none"           # none | sign_flip | gauss | label_flip
+                                   # | model_replace (core/attacks.py)
+    attack_fraction: float = 0.25  # fraction of clients that are Byzantine
+    attack_scale: float = 1.0      # attack magnitude (flip/boost factor,
+                                   # gaussian sigma)
+    defense: str = "none"          # none | median | trimmed_mean |
+                                   # norm_clip | krum | multi_krum
+                                   # (core/robust.py; which defense is
+                                   # valid at which aggregation event is
+                                   # strategy-dependent — DESIGN.md §8)
+    defense_f: int = 0             # assumed Byzantine count (0 = derive
+                                   # from attack_fraction, floor 1)
+    clip_tau: float = 10.0         # norm_clip: max L2 of an update delta
     # simulation engine
     engine: str = "loop"           # loop       — per-client Python loop
                                    #              (paper-faithful timing: one
@@ -63,9 +85,24 @@ class FLConfig:
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
         assert self.engine in ENGINES, self.engine
+        assert self.attack in ATTACKS, self.attack
+        assert self.defense in DEFENSES, self.defense
         assert self.num_clients % self.num_groups == 0, \
             "clients must divide evenly into groups"
 
     @property
     def clients_per_group(self) -> int:
         return self.num_clients // self.num_groups
+
+    def resolved_defense_f(self, event_size: Optional[int] = None) -> int:
+        """The Byzantine count the defense assumes at one aggregation
+        event: explicit `defense_f` if set, else `attack_fraction` of the
+        event's client count (floor 1 — the field's 0.25 default also
+        sizes defense-only runs) — clamped to the breakdown point
+        `(n-1)//2` the event can actually tolerate. `event_size` is the
+        number of clients aggregated (an HFL tier-1 group sees only its
+        own slice of the federation; defaults to the full federation)."""
+        n = self.num_clients if event_size is None else event_size
+        f = self.defense_f if self.defense_f > 0 else max(
+            1, math.ceil(self.attack_fraction * n))
+        return max(0, min(f, (n - 1) // 2))

@@ -1,0 +1,174 @@
+"""Byzantine-robust aggregation — the defense half of the adversarial
+subsystem (DESIGN.md §8; attacks live in `core/attacks.py`).
+
+All defenses operate on the stacked `(C, N)` ravel layout shared with the
+`fedavg_agg` kernel path (`kernels/ops.py::stacked_ravel`):
+
+  median        coordinate-wise median — `kernels/robust_agg.py` kernel
+                (rank-select; sort-based reference on CPU). Breakdown
+                point f < C/2. Ignores sample weights (order statistics
+                have no weighted analogue here — documented trade-off).
+  trimmed_mean  coordinate-wise mean with the f smallest and f largest
+                values per coordinate removed. Same kernel, same
+                breakdown point, closer to FedAvg when benign.
+  norm_clip     weighted mean of update deltas with each client's delta
+                L2-clipped to `tau` (needs a `center` — the model clients
+                pulled at round start). Bounds per-client influence
+                rather than excluding outliers; the only defense that
+                applies to low-redundancy merge events (CFL / async,
+                where a single update is folded into the server model).
+  krum          Krum (Blanchard et al. 2017): select the client whose
+                summed squared distance to its C - f - 2 nearest peers is
+                minimal — host-side scoring over a stacked pairwise-
+                distance operator (one Gram matmul), selection via the
+                fedavg kernel with a one-hot weight vector.
+  multi_krum    average of the m = C - f best-scored clients (same
+                scores, uniform weights through the fedavg kernel).
+
+`robust_aggregate` dispatches on the defense name at the matrix level;
+`robust_aggregate_stacked` is the pytree-level entry used by
+`core/strategies.py`. Masking-based secure aggregation composes with
+FedAvg only — median/trimmed/Krum need plaintext updates (see
+`core/secure_agg.py` and DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.core.fl_types import DEFENSES
+
+Params = Any
+
+__all__ = ["DEFENSES", "pairwise_sq_dists", "krum_scores", "krum_select",
+           "norm_clip_factors", "robust_aggregate",
+           "robust_aggregate_stacked", "clip_deltas_stacked",
+           "clip_update"]
+
+
+def _norm_weights(C: int, weights):
+    w = (jnp.ones((C,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    return w / jnp.sum(w)
+
+
+# ---------------------------------------------------------------------------
+# stacked operators (matrix level)
+# ---------------------------------------------------------------------------
+
+def pairwise_sq_dists(mat) -> jnp.ndarray:
+    """(C, N) -> (C, C) squared L2 distances via the Gram expansion
+    ||x_i - x_j||^2 = ||x_i||^2 + ||x_j||^2 - 2 x_i . x_j (one matmul
+    over the stacked layout instead of C^2 row passes)."""
+    x = mat.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    d = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.maximum(d, 0.0)
+
+
+def krum_scores(mat, f: int) -> jnp.ndarray:
+    """(C,) Krum scores: sum of each client's C - f - 2 smallest squared
+    distances to OTHER clients (lower = more central). Clamped so at
+    least one neighbor counts even when C < f + 3."""
+    C = mat.shape[0]
+    n_near = max(1, min(C - 2, C - f - 2)) if C > 2 else 1
+    d = pairwise_sq_dists(mat)
+    d = d.at[jnp.arange(C), jnp.arange(C)].set(jnp.inf)   # exclude self
+    return jnp.sum(jnp.sort(d, axis=1)[:, :n_near], axis=1)
+
+
+def krum_select(mat, f: int, m: int = 1) -> jnp.ndarray:
+    """Indices of the m best-scored clients (m=1: classic Krum)."""
+    return jnp.argsort(krum_scores(mat, f))[:m]
+
+
+def norm_clip_factors(deltas, tau: float) -> jnp.ndarray:
+    """(C,) per-row scale factors min(1, tau / ||delta_c||)."""
+    norms = jnp.linalg.norm(deltas.astype(jnp.float32), axis=1)
+    return jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
+
+
+def robust_aggregate(mat, defense: str, *, weights=None, f: int = 1,
+                     tau: float = 10.0, center=None, interpret=None
+                     ) -> jnp.ndarray:
+    """One aggregation event on the raveled (C, N) stack -> (N,).
+
+    `f` is the assumed Byzantine count (median derives its own maximal
+    trim); `center` is the round-start model row (N,), required by
+    norm_clip. `interpret=None` follows the kernel wrappers' backend
+    dispatch (native TPU / reference CPU); True forces interpret mode."""
+    from repro.kernels import ops as kops
+    C = mat.shape[0]
+    if defense not in DEFENSES:
+        raise ValueError(f"unknown defense {defense!r} "
+                         f"(expected one of {DEFENSES})")
+    if defense == "none":
+        return kops.fedavg_aggregate(mat, _norm_weights(C, weights),
+                                     interpret=interpret)
+    if defense == "median":
+        return kops.median_aggregate(mat, interpret=interpret)
+    if defense == "trimmed_mean":
+        return kops.trimmed_mean_aggregate(mat, min(f, (C - 1) // 2),
+                                           interpret=interpret)
+    if defense == "norm_clip":
+        if center is None:
+            raise ValueError("norm_clip needs the round-start model "
+                             "(center=...) to form update deltas")
+        center = center.astype(jnp.float32)
+        deltas = mat.astype(jnp.float32) - center[None, :]
+        w = _norm_weights(C, weights) * norm_clip_factors(deltas, tau)
+        return (center + kops.fedavg_aggregate(deltas, w,
+                                               interpret=interpret)
+                ).astype(mat.dtype)
+    # krum / multi_krum: host-side scoring, kernel-backed selection
+    m = 1 if defense == "krum" else max(1, C - f)
+    sel = krum_select(mat, f, m)
+    w = jnp.zeros((C,), jnp.float32).at[sel].set(1.0 / m)
+    return kops.fedavg_aggregate(mat, w, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# pytree-level wrappers (what strategies.py calls)
+# ---------------------------------------------------------------------------
+
+def robust_aggregate_stacked(stacked: Params, defense: str, *, weights=None,
+                             f: int = 1, tau: float = 10.0,
+                             center: Optional[Params] = None,
+                             interpret=None) -> Params:
+    """Defended aggregation of a stacked pytree: ravel -> robust reduce ->
+    unravel, mirroring `kops.fedavg_aggregate_stacked`. `center` is a
+    single (unstacked) pytree."""
+    from repro.kernels import ops as kops
+    mat = kops.stacked_ravel(stacked)
+    center_row = None
+    if center is not None:
+        import jax
+        center_row = kops.stacked_ravel(
+            jax.tree.map(lambda l: l[None], center))[0]
+    vec = robust_aggregate(mat, defense, weights=weights, f=f, tau=tau,
+                           center=center_row, interpret=interpret)
+    return kops.tree_unravel(stacked, vec)
+
+
+def clip_update(base: Params, update: Params, tau: float) -> Params:
+    """Single-update norm clip (the loop engine's pre-merge defense):
+    `clip_deltas_stacked` at C=1."""
+    import jax
+    clipped = clip_deltas_stacked(
+        base, jax.tree.map(lambda l: l[None], update), tau)
+    return jax.tree.map(lambda l: l[0], clipped)
+
+
+def clip_deltas_stacked(base: Params, stacked: Params, tau: float) -> Params:
+    """L2-clip every client's update delta against `base` to `tau` and
+    return the re-based stacked pytree — the pre-merge defense for
+    low-redundancy merge events (CFL sequential pass, async arrivals).
+    Used identically by both engines, so parity is structural."""
+    import jax
+    from repro.kernels import ops as kops
+    base_row = kops.stacked_ravel(jax.tree.map(lambda l: l[None], base))
+    mat = kops.stacked_ravel(stacked)
+    deltas = mat - base_row
+    clipped = base_row + deltas * norm_clip_factors(deltas, tau)[:, None]
+    return kops.stacked_unravel(stacked, clipped)

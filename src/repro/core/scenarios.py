@@ -6,6 +6,7 @@ future-work directions) spans:
 
     strategy x partition (iid / Dirichlet-alpha) x topology
              x heterogeneity (speed model, dropout, staleness decay)
+             x adversary (attack type/fraction -> defense; DESIGN.md §8)
              x engine (loop / vectorized)
 
 Every spec resolves to a runnable configuration (`resolve`) and every run
@@ -23,7 +24,11 @@ import dataclasses
 import json
 from typing import Dict, List, Optional, Tuple, Union
 
-RESULT_SCHEMA_VERSION = 1
+from repro.core.fl_types import ATTACKS, DEFENSES
+
+# v2: adds the "attack" block (attack type + attacked-client ids +
+# defense) — v1 documents are still readable through `load_result`
+RESULT_SCHEMA_VERSION = 2
 
 # topology is the communication graph the strategy induces; the pairing is
 # validated so a spec can't claim e.g. a ring under HFL
@@ -34,6 +39,18 @@ TOPOLOGY_BY_STRATEGY = {
     "async": ("event",),
 }
 PARTITIONS = ("iid", "dirichlet")
+
+# which defenses the strategy's aggregation event supports (DESIGN.md §8;
+# mirrors simulation.DEFENSES_BY_EVENT): selection/scoring defenses need
+# a redundant client set, redundancy-1 merges (cfl/async) can only
+# norm-clip, gossip neighborhoods are too small for Krum scoring
+DEFENSES_BY_STRATEGY = {
+    ("hfl", "hierarchical"): DEFENSES,
+    ("afl", "star"): DEFENSES,
+    ("afl", "ring"): ("none", "median", "trimmed_mean"),
+    ("cfl", "sequential"): ("none", "norm_clip"),
+    ("async", "event"): ("none", "norm_clip"),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +74,7 @@ class ScenarioSpec:
     local_epochs: int = 1
     local_batch_size: int = 32
     lr: float = 0.05
+    momentum: float = 0.9
     participation: float = 1.0
     gossip_neighbors: int = 2
     merge_alpha: float = 0.5
@@ -67,6 +85,13 @@ class ScenarioSpec:
     staleness_decay: float = 0.5
     updates_per_client: int = 2
     tick: float = 1.0
+    # adversarial clients + robust aggregation (DESIGN.md §8)
+    attack: str = "none"             # core/attacks.py
+    attack_fraction: float = 0.25
+    attack_scale: float = 1.0
+    defense: str = "none"            # core/robust.py
+    defense_f: int = 0               # 0 = derive from attack_fraction
+    clip_tau: float = 10.0
     seed: int = 0
 
     def __post_init__(self):
@@ -81,6 +106,15 @@ class ScenarioSpec:
             raise ValueError(f"unknown partition {self.partition!r}")
         if self.engine not in ("loop", "vectorized"):
             raise ValueError(f"unknown engine {self.engine!r}")
+        if self.attack not in ATTACKS:
+            raise ValueError(f"unknown attack {self.attack!r} "
+                             f"(expected one of {ATTACKS})")
+        allowed_d = DEFENSES_BY_STRATEGY[(self.strategy, self.topology)]
+        if self.defense not in allowed_d:
+            raise ValueError(
+                f"{self.name}: defense {self.defense!r} does not apply to "
+                f"the {self.strategy}/{self.topology} aggregation event "
+                f"(expected one of {allowed_d}; DESIGN.md §8)")
 
     def to_fl_config(self):
         """The underlying FLConfig: async runs on the CFL continual-merge
@@ -91,10 +125,13 @@ class ScenarioSpec:
             num_clients=self.num_clients, num_groups=self.num_groups,
             rounds=self.rounds, local_epochs=self.local_epochs,
             local_batch_size=self.local_batch_size, lr=self.lr,
-            participation=self.participation,
+            momentum=self.momentum, participation=self.participation,
             afl_mode="gossip" if self.topology == "ring" else "fedavg",
             gossip_neighbors=self.gossip_neighbors,
             merge_alpha=self.merge_alpha, seed=self.seed,
+            attack=self.attack, attack_fraction=self.attack_fraction,
+            attack_scale=self.attack_scale, defense=self.defense,
+            defense_f=self.defense_f, clip_tau=self.clip_tau,
             engine=self.engine)
 
     def asdict(self) -> Dict:
@@ -175,10 +212,69 @@ register(ScenarioSpec(
     strategy="async", topology="event", engine="loop",
     speed_model="lognormal", tick=0.0))
 
+# adversarial axis — attack x defense x architecture (DESIGN.md §8).
+# The 32-client sign-flip family is the ISSUE 3 acceptance measurement:
+# same data/schedule/seed, only the attack/defense toggles differ, so the
+# macro-F1 deltas isolate the aggregation rule (recovery run checked into
+# experiments/attacks/).
+# plain SGD (no momentum) at a larger step: momentum + tiny shards makes
+# even the CLEAN 32-client run unstable past ~10 rounds, and robust
+# aggregation's quantile bias shrinks the effective step (the larger lr
+# compensates — calibrated so defended runs recover the no-attack F1)
+_ACC32 = dict(strategy="afl", topology="star", participation=1.0,
+              num_clients=32, n_train=3072, n_test=512, rounds=10,
+              local_epochs=2, lr=0.08, momentum=0.0)
+register(ScenarioSpec(
+    "attack-none-32c-vec", "32-client no-attack baseline of the "
+    "acceptance family (recovery reference)", **_ACC32))
+register(ScenarioSpec(
+    "attack-signflip-fedavg-32c-vec", "25% sign-flip attackers vs PLAIN "
+    "FedAvg — demonstrates the degradation robust aggregation prevents",
+    attack="sign_flip", attack_scale=4.0, **_ACC32))
+register(ScenarioSpec(
+    "attack-signflip-median-32c-vec", "25% sign-flip attackers vs "
+    "coordinate-wise median (robust_agg kernel)",
+    attack="sign_flip", attack_scale=4.0, defense="median", **_ACC32))
+register(ScenarioSpec(
+    "attack-signflip-trimmed-32c-vec", "25% sign-flip attackers vs "
+    "trimmed mean (robust_agg kernel, f from attack fraction)",
+    attack="sign_flip", attack_scale=4.0, defense="trimmed_mean",
+    **_ACC32))
+# defense coverage across the other architectures / aggregation events
+register(ScenarioSpec(
+    "attack-gauss-hfl-krum-vec", "centralized HFL with Gaussian-noise "
+    "attackers; Krum selection at each group server (tier 1)",
+    strategy="hfl", topology="hierarchical", num_clients=16, n_train=1024,
+    local_epochs=2, attack="gauss", attack_scale=3.0, defense="krum"))
+register(ScenarioSpec(
+    "attack-replace-cfl-clip-vec", "sequential CFL with a boosted "
+    "model-replacement attacker; norm-clipped continual merges",
+    strategy="cfl", topology="sequential", attack="model_replace",
+    attack_fraction=0.15, attack_scale=10.0, defense="norm_clip",
+    clip_tau=3.0))
+register(ScenarioSpec(
+    "attack-labelflip-afl-trimmed-loop", "data-layer label-flip "
+    "poisoning under the loop engine; trimmed-mean aggregation",
+    strategy="afl", topology="star", engine="loop", participation=1.0,
+    attack="label_flip", defense="trimmed_mean"))
+register(ScenarioSpec(
+    "attack-signflip-gossip-median-vec", "decentralized ring gossip "
+    "where each node median-mixes its neighborhood (Byzantine neighbors "
+    "bounded without any server)",
+    strategy="afl", topology="ring", participation=1.0,
+    attack="sign_flip", attack_scale=4.0, defense="median"))
+register(ScenarioSpec(
+    "attack-gauss-async-clip-vec", "async staleness merges under "
+    "Gaussian attackers; every arriving delta norm-clipped",
+    strategy="async", topology="event", speed_model="uniform",
+    attack="gauss", attack_scale=3.0, defense="norm_clip", clip_tau=3.0))
+
 # the CI bench-smoke grid: one sync-centralized, one sync-decentralized,
-# one async-heterogeneous scenario (see .github/workflows/ci.yml)
+# one async-heterogeneous, one adversarial scenario (see
+# .github/workflows/ci.yml)
 CI_SMOKE_GRID: Tuple[str, ...] = (
-    "iid-hfl-vec", "ring-gossip-vec", "async-straggler-vec")
+    "iid-hfl-vec", "ring-gossip-vec", "async-straggler-vec",
+    "attack-replace-cfl-clip-vec")
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +314,28 @@ def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
     else:
         r = sim.run()
         units = spec.rounds
+    attack_block = None
+    if spec.attack != "none" or spec.defense != "none":
+        # the Byzantine allowance actually applied at the aggregation
+        # event, not the federation-level resolution: HFL defends per
+        # group, AFL per sampled participant set
+        fl = sim.fl
+        if spec.strategy == "hfl":
+            event_size = fl.clients_per_group
+        elif spec.strategy == "afl":
+            event_size = max(1, int(round(fl.participation
+                                          * fl.num_clients)))
+        else:
+            event_size = fl.num_clients
+        attack_block = {
+            "attack": spec.attack,
+            "fraction": spec.attack_fraction,
+            "scale": spec.attack_scale,
+            "attacked_clients": [int(c) for c in sim.attackers],
+            "defense": spec.defense,
+            "defense_f": fl.resolved_defense_f(event_size),
+            "clip_tau": spec.clip_tau,
+        }
     return {
         "schema_version": RESULT_SCHEMA_VERSION,
         "scenario": spec.name,
@@ -235,7 +353,22 @@ def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
                              if r.build_time_s > 0 else 0.0),
         },
         "async": async_block,
+        "attack": attack_block,
     }
+
+
+def load_result(doc: Dict) -> Dict:
+    """Normalize a result document to the CURRENT schema. v1 documents
+    (pre-adversarial) carry no "attack" key — they read as unattacked v2
+    documents, so consumers (CI baseline compare, experiments tooling)
+    never branch on schema_version themselves."""
+    v = doc.get("schema_version")
+    if v == RESULT_SCHEMA_VERSION:
+        return doc
+    if v == 1:
+        return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
+                "attack": None}
+    raise ValueError(f"unknown result schema_version {v!r}")
 
 
 def main(argv: Optional[List[str]] = None):
@@ -254,9 +387,11 @@ def main(argv: Optional[List[str]] = None):
     if args.list or not (args.run or args.grid):
         for n in names():
             s = REGISTRY[n]
-            print(f"{n:22s} {s.strategy}/{s.topology}/{s.engine:10s} "
-                  f"partition={s.partition:9s} clients={s.num_clients}  "
-                  f"{s.description}")
+            adv = ("clean" if s.attack == "none" and s.defense == "none"
+                   else f"{s.attack}->{s.defense}")
+            print(f"{n:34s} {s.strategy}/{s.topology}/{s.engine:10s} "
+                  f"partition={s.partition:9s} clients={s.num_clients:<3d} "
+                  f"{adv:24s} {s.description}")
         return
 
     todo = list(args.run or []) + (list(CI_SMOKE_GRID) if args.grid else [])

@@ -12,7 +12,21 @@ from noise.
 
 The masked aggregate equals plain FedAvg *exactly* when weights are equal
 (masks cancel termwise). For weighted aggregation, weighting is applied
-client-side before masking (standard practice).
+client-side before masking (standard practice). The same holds for the
+vectorized engine's kernel-backed path: `secure_fedavg` over a client
+forest matches `kernels.ops.fedavg_aggregate_stacked` of the plaintext
+stack to float tolerance (pinned in tests/test_attacks_robust.py).
+
+Masking composes with LINEAR aggregation only. The Byzantine-robust
+aggregators (`core/robust.py`: median, trimmed mean, Krum) are
+selections over per-client order statistics / distances, which the
+pairwise masks destroy — each individual masked upload is (by design)
+indistinguishable from noise, so its coordinate ranks and pairwise
+distances are meaningless and masks do NOT cancel within a trimmed
+subset. Robust defenses therefore require plaintext updates; privacy
+and Byzantine robustness must be traded off per deployment (norm_clip
+of *masked* deltas is equally ineffective — the mask dominates every
+norm). See DESIGN.md §8.
 """
 from __future__ import annotations
 

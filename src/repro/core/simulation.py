@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import attacks
 from repro.core import engine as engine_mod
 from repro.core import strategies, topology
 from repro.core.fl_types import FLConfig
@@ -102,6 +103,21 @@ def _batched(x, y, batch_size, rng):
             "label": jnp.asarray(y[sel].reshape(nb, batch_size))}
 
 
+# which defenses make sense at each strategy's aggregation event
+# (DESIGN.md §8): selection/scoring defenses need a redundant client set;
+# redundancy-1 merge events (CFL continual pass, async arrivals) can only
+# bound per-update influence; gossip neighborhoods support coordinate
+# selection but are too small for Krum scoring.
+DEFENSES_BY_EVENT = {
+    "hfl": ("none", "median", "trimmed_mean", "norm_clip", "krum",
+            "multi_krum"),
+    "afl-fedavg": ("none", "median", "trimmed_mean", "norm_clip", "krum",
+                   "multi_krum"),
+    "afl-gossip": ("none", "median", "trimmed_mean"),
+    "cfl": ("none", "norm_clip"),
+}
+
+
 class FederatedSimulation:
     """Python-level multi-client FL simulation on a single host."""
 
@@ -112,14 +128,25 @@ class FederatedSimulation:
         self.rng = np.random.default_rng(fl.seed)
         key = jax.random.PRNGKey(fl.seed)
         self.init_params = (model_init or cnn_mod.init_cnn)(key)
-        xtr, ytr = dataset["train"]
-        self.parts = iid_partition(ytr, fl.num_clients, seed=fl.seed)
-        self.client_data = [(xtr[p], ytr[p]) for p in self.parts]
-        self.weights = [len(p) for p in self.parts]
+        event = (fl.strategy if fl.strategy != "afl"
+                 else f"afl-{fl.afl_mode}")
+        if fl.defense not in DEFENSES_BY_EVENT[event]:
+            raise ValueError(
+                f"defense {fl.defense!r} does not apply to the {event} "
+                f"aggregation event (valid: {DEFENSES_BY_EVENT[event]}; "
+                f"DESIGN.md §8)")
+        # Byzantine subset: drawn from a dedicated generator (never the
+        # schedule rng) so the attack axis leaves the DESIGN.md §4 parity
+        # contract intact
+        self.attack_mask = (
+            attacks.attacker_mask(fl.num_clients, fl.attack_fraction,
+                                  fl.seed)
+            if fl.attack != "none" else np.zeros(fl.num_clients, bool))
+        self.attackers = np.flatnonzero(self.attack_mask)
         self.opt = optimizers.sgd(fl.lr, momentum=fl.momentum)
-        self.vec = (engine_mod.VectorizedClientEngine(
-                        fl, self.client_data, self.weights)
-                    if fl.engine == "vectorized" else None)
+        xtr, ytr = dataset["train"]
+        self._install_clients(iid_partition(ytr, fl.num_clients,
+                                            seed=fl.seed))
 
     # -- local work ---------------------------------------------------------
     def _local_train(self, params, cid):
@@ -174,13 +201,57 @@ class FederatedSimulation:
     def set_partition(self, parts):
         """Re-partition the train split (e.g. Dirichlet non-IID) after
         construction; rebuilds the vectorized engine state if active."""
+        self._install_clients(parts)
+
+    def _install_clients(self, parts):
+        """Materialize per-client shards from a partition: label_flip
+        poisons attacker shards HERE (data-layer attack — the poisoned
+        shard is what both engines batch from, so parity is structural),
+        and the vectorized engine state is (re)built on the final data."""
         xtr, ytr = self.dataset["train"]
         self.parts = parts
-        self.client_data = [(xtr[p], ytr[p]) for p in parts]
+        self.client_data = []
+        for c, p in enumerate(parts):
+            y = ytr[p]
+            if self.fl.attack == "label_flip" and self.attack_mask[c]:
+                y = attacks.flip_labels(y)
+            self.client_data.append((xtr[p], y))
         self.weights = [len(p) for p in parts]
-        if self.vec is not None:
-            self.vec = engine_mod.VectorizedClientEngine(
-                self.fl, self.client_data, self.weights)
+        self.vec = (engine_mod.VectorizedClientEngine(
+                        self.fl, self.client_data, self.weights)
+                    if self.fl.engine == "vectorized" else None)
+
+    # -- adversarial axis ---------------------------------------------------
+    def _defense_kwargs(self, event_size=None) -> Dict[str, Any]:
+        """kwargs for the defended aggregation operators, with the
+        Byzantine allowance resolved for this event's client count."""
+        fl = self.fl
+        return {"defense": fl.defense,
+                "f": fl.resolved_defense_f(event_size),
+                "tau": fl.clip_tau}
+
+    def _corrupt_stacked(self, stacked, base, client_ids, event: int):
+        """Corrupt attacker rows of a trained stack (vectorized engine);
+        noise keys derive from (seed, event, absolute client id)."""
+        fl = self.fl
+        flags = self.attack_mask[np.asarray(client_ids)]
+        if fl.attack in ("none", "label_flip") or not flags.any():
+            return stacked
+        keys = attacks.client_keys(attacks.event_key(fl.seed, event),
+                                   client_ids)
+        return attacks.corrupt_stacked(stacked, base, flags, keys,
+                                       kind=fl.attack,
+                                       scale=fl.attack_scale)
+
+    def _corrupt_clients(self, client_list, base_list, client_ids,
+                         event: int):
+        """Loop-engine twin of `_corrupt_stacked` (same key derivation).
+        `base_list` holds each client's round-start model."""
+        fl = self.fl
+        return attacks.corrupt_clients(
+            client_list, base_list, client_ids, self.attack_mask,
+            kind=fl.attack, scale=fl.attack_scale, seed=fl.seed,
+            event=event)
 
     # -- strategies ---------------------------------------------------------
     def _warmup(self):
@@ -193,9 +264,23 @@ class FederatedSimulation:
         _sgd_epoch(self.init_params, self.opt.init(self.init_params), data,
                    (self.fl.lr, self.fl.momentum))
         self._warmup_predicts()
+        self._warmup_attack()
         # local-shard train-accuracy eval shape
         n_eval = min(len(x), 512)
         _predict(self.init_params, jnp.asarray(x[:n_eval]))
+
+    def _warmup_attack(self):
+        """Compile the loop engine's per-client corruption / clip programs
+        (jitted on shapes + attack kind) outside the build window."""
+        fl = self.fl
+        if fl.attack not in ("none", "label_flip") and len(self.attackers):
+            attacks.corrupt_tree(self.init_params, self.init_params, True,
+                                 attacks.event_key(fl.seed, 0),
+                                 kind=fl.attack, scale=fl.attack_scale)
+        if fl.defense == "norm_clip":
+            from repro.core import robust
+            robust.clip_update(self.init_params, self.init_params,
+                               fl.clip_tau)
 
     def _warmup_predicts(self):
         """Compile the classification/eval `_predict` shapes (shared by
@@ -291,33 +376,43 @@ class FederatedSimulation:
         groups = topology.hierarchical_groups(fl.num_clients, fl.num_groups)
         group_models = [self.init_params] * fl.num_groups
         global_model = self.init_params
+        defkw = self._defense_kwargs(fl.clients_per_group)
         train_acc = 0.0
         for rnd in range(fl.rounds):
-            clients = [None] * fl.num_clients
+            starts = list(group_models)      # round-start (attack base /
+            clients = [None] * fl.num_clients        # norm_clip centers)
             accs, losses = [], []
             for gi, g in enumerate(groups):
                 for c in g:
-                    clients[c], loss, acc = self._local_train(group_models[gi], c)
+                    clients[c], loss, acc = self._local_train(starts[gi], c)
                     accs.append(acc)
                     losses.append(loss)
-            # tier 1 every round: group servers aggregate their clients
+            # Byzantine uploads: corrupted between training & aggregation
+            clients = self._corrupt_clients(
+                clients, [starts[gi] for gi, g in enumerate(groups)
+                          for _ in g], range(fl.num_clients), rnd)
+            # tier 1 every round: group servers aggregate their clients —
+            # the defense boundary (DESIGN.md §8)
             group_models = [
-                strategies.fedavg([clients[c] for c in g],
-                                  weights=[self.weights[c] for c in g])
-                for g in groups]
+                strategies.defended_fedavg(
+                    [clients[c] for c in g],
+                    weights=[self.weights[c] for c in g],
+                    center=starts[gi], **defkw)
+                for gi, g in enumerate(groups)]
             # tier 2 with dissemination lag: the global server aggregates
             # and pushes back only every `hfl_global_every` rounds (groups
             # refine independently in between — paper Fig. 1's hierarchy)
             if (rnd + 1) % fl.hfl_global_every == 0 or rnd == fl.rounds - 1:
-                global_model = strategies.hfl_aggregate(clients, groups,
-                                                        self.weights)
+                global_model = strategies.hfl_aggregate(
+                    clients, groups, self.weights, centers=starts, **defkw)
                 group_models = [global_model] * fl.num_groups
             train_acc = float(np.mean(accs))
             self._track(curves, accs, losses, global_model)
         # served model: global server re-aggregates at classification time
-        final_clients = clients
-        served = lambda: strategies.hfl_aggregate(final_clients, groups,
-                                                  self.weights)
+        final_clients, final_starts = clients, starts
+        served = lambda: strategies.hfl_aggregate(
+            final_clients, groups, self.weights, centers=final_starts,
+            **defkw)
         return served, train_acc
 
     def _run_afl(self, curves):
@@ -330,24 +425,43 @@ class FederatedSimulation:
         for rnd in range(fl.rounds):
             participants = topology.sample_participants(
                 self.rng, fl.num_clients, fl.participation)
+            start = global_model             # round-start (base / center)
             locals_, accs, losses = [], [], []
             for c in participants:
-                p, loss, acc = self._local_train(global_model, c)
+                p, loss, acc = self._local_train(start, c)
                 locals_.append(p)
                 accs.append(acc)
                 losses.append(loss)
+            locals_ = self._corrupt_clients(
+                locals_, [start] * len(participants), participants, rnd)
+            defkw = self._defense_kwargs(len(participants))
             if fl.afl_mode == "gossip":
+                # defended mixing bounds Byzantine neighbors; the final
+                # consensus average over mixed models stays plain
                 nbrs = topology.ring_neighbors(len(locals_),
                                                fl.gossip_neighbors)
-                locals_ = strategies.gossip_round(locals_, nbrs)
-            global_model = strategies.fedavg(
-                locals_, weights=[self.weights[c] for c in participants])
+                locals_ = strategies.gossip_round(
+                    locals_, nbrs, defense=fl.defense, f=defkw["f"])
+                global_model = strategies.fedavg(
+                    locals_,
+                    weights=[self.weights[c] for c in participants])
+            else:
+                global_model = strategies.defended_fedavg(
+                    locals_,
+                    weights=[self.weights[c] for c in participants],
+                    center=start, **defkw)
             train_acc = float(np.mean(accs))
             self._track(curves, accs, losses, global_model)
-        last_locals = locals_
-        last_parts = participants
-        served = lambda: strategies.fedavg(
-            last_locals, weights=[self.weights[c] for c in last_parts])
+        last_locals, last_parts, last_start = locals_, participants, start
+        last_defkw = self._defense_kwargs(len(last_parts))
+        served = lambda: (
+            strategies.fedavg(last_locals,
+                              weights=[self.weights[c] for c in last_parts])
+            if fl.afl_mode == "gossip" else
+            strategies.defended_fedavg(
+                last_locals,
+                weights=[self.weights[c] for c in last_parts],
+                center=last_start, **last_defkw))
         return served, train_acc
 
     def _run_cfl(self, curves):
@@ -356,11 +470,24 @@ class FederatedSimulation:
         fl = self.fl
         model = self.init_params
         train_acc = 0.0
+        attacking = fl.attack not in ("none", "label_flip")
         for rnd in range(fl.rounds):
             order = self.rng.permutation(fl.num_clients)
+            key = attacks.event_key(fl.seed, rnd)
             accs, losses = [], []
             for c in order:
                 local, loss, acc = self._local_train(model, c)
+                if attacking and self.attack_mask[c]:
+                    # base = the model this visit pulled (the carried
+                    # state), exactly the in-scan base of the vectorized
+                    # pass
+                    local = attacks.corrupt_tree(
+                        local, model, True,
+                        jax.random.fold_in(key, int(c)), kind=fl.attack,
+                        scale=fl.attack_scale)
+                if fl.defense == "norm_clip":
+                    from repro.core import robust
+                    local = robust.clip_update(model, local, fl.clip_tau)
                 model = strategies.cfl_merge(model, local, fl.merge_alpha)
                 accs.append(acc)
                 losses.append(loss)
@@ -385,15 +512,19 @@ class FederatedSimulation:
         group_stack = engine_mod.replicate_tree(self.init_params,
                                                 fl.num_groups)
         global_model = self.init_params
+        defkw = self._defense_kwargs(fl.clients_per_group)
         train_acc = 0.0
         for rnd in range(rounds):
             data = eng.batched_clients(rng, all_clients, fl.local_epochs)
+            start_groups = group_stack       # (G, ...) round-start models
             params = engine_mod.repeat_groups(group_stack,
                                               fl.clients_per_group)
+            base = params                    # per-client round-start stack
             params, losses, _ = eng.train(params, data)
             accs = eng.local_accs(params, all_clients)
+            params = self._corrupt_stacked(params, base, all_clients, rnd)
             group_stack, group_w = strategies.hfl_tier1_stacked(
-                params, fl.num_groups, w)
+                params, fl.num_groups, w, centers=start_groups, **defkw)
             if (rnd + 1) % fl.hfl_global_every == 0 or rnd == rounds - 1:
                 global_model = strategies.fedavg_stacked(group_stack, group_w)
                 group_stack = engine_mod.replicate_tree(global_model,
@@ -402,9 +533,9 @@ class FederatedSimulation:
             self._track(curves, accs,
                         np.asarray(losses[:, -eng.nb:]).mean(axis=1),
                         global_model)
-        final_params = params
+        final_params, final_starts = params, start_groups
         served = lambda: strategies.hfl_aggregate_stacked(
-            final_params, fl.num_groups, w)
+            final_params, fl.num_groups, w, centers=final_starts, **defkw)
         return served, train_acc
 
     def _run_afl_vec(self, curves, rng, rounds):
@@ -416,22 +547,33 @@ class FederatedSimulation:
             participants = topology.sample_participants(
                 rng, fl.num_clients, fl.participation)
             data = eng.batched_clients(rng, participants, fl.local_epochs)
-            params = engine_mod.replicate_tree(global_model,
-                                               len(participants))
-            params, losses, _ = eng.train(params, data)
+            start = global_model             # round-start (base / center)
+            base = engine_mod.replicate_tree(start, len(participants))
+            params, losses, _ = eng.train(base, data)
             accs = eng.local_accs(params, participants)
+            params = self._corrupt_stacked(params, base, participants, rnd)
+            defkw = self._defense_kwargs(len(participants))
+            pw = w[participants]
             if fl.afl_mode == "gossip":
                 nbrs = topology.ring_neighbors(len(participants),
                                                fl.gossip_neighbors)
-                params = strategies.gossip_stacked(params, nbrs)
-            pw = w[participants]
-            global_model = strategies.afl_aggregate_stacked(params, pw)
+                params = strategies.gossip_stacked(
+                    params, nbrs, defense=fl.defense, f=defkw["f"])
+                global_model = strategies.afl_aggregate_stacked(params, pw)
+            else:
+                global_model = strategies.defended_aggregate_stacked(
+                    params, pw, center=start, **defkw)
             train_acc = float(np.mean(accs))
             self._track(curves, accs,
                         np.asarray(losses[:, -eng.nb:]).mean(axis=1),
                         global_model)
-        last_params, last_w = params, pw
-        served = lambda: strategies.afl_aggregate_stacked(last_params, last_w)
+        last_params, last_w, last_start = params, pw, start
+        last_defkw = self._defense_kwargs(len(participants))
+        served = lambda: (
+            strategies.afl_aggregate_stacked(last_params, last_w)
+            if fl.afl_mode == "gossip" else
+            strategies.defended_aggregate_stacked(
+                last_params, last_w, center=last_start, **last_defkw))
         return served, train_acc
 
     def _run_cfl_vec(self, curves, rng, rounds):
@@ -441,8 +583,15 @@ class FederatedSimulation:
         for rnd in range(rounds):
             order = rng.permutation(fl.num_clients)
             data = eng.batched_clients(rng, order, fl.local_epochs)
-            model, losses, accs = eng.cfl_round(model, order, data,
-                                                fl.merge_alpha)
+            # per-visit attack inputs, permuted into visit order; keys
+            # derive from absolute ids so they match the loop engine
+            keys = attacks.client_keys(attacks.event_key(fl.seed, rnd),
+                                       order)
+            model, losses, accs = eng.cfl_round(
+                model, order, data, fl.merge_alpha, attack=fl.attack,
+                attack_scale=fl.attack_scale,
+                attack_flags=self.attack_mask[order], attack_keys=keys,
+                defense=fl.defense, clip_tau=fl.clip_tau)
             train_acc = float(np.mean(np.asarray(accs)))
             self._track(curves, np.asarray(accs),
                         np.asarray(losses[:, -eng.nb:]).mean(axis=1),

@@ -52,16 +52,41 @@ def fedavg(client_params: List[Params],
         *client_params)
 
 
+def defended_fedavg(client_params: List[Params],
+                    weights: Optional[Sequence[float]] = None, *,
+                    defense: str = "none", f: int = 1, tau: float = 10.0,
+                    center: Optional[Params] = None) -> Params:
+    """Host-level robust FedAvg (loop engine's aggregation events): stack
+    the client list and dispatch through `core.robust` — exactly the
+    stacked engine's defended operator, so the engines share one defense
+    implementation (DESIGN.md §8)."""
+    if defense in ("none", None):
+        return fedavg(client_params, weights)
+    from repro.core import robust
+    from repro.core.engine import stack_forest
+    return robust.robust_aggregate_stacked(
+        stack_forest(list(client_params)), defense, weights=weights,
+        f=f, tau=tau, center=center)
+
+
 def hfl_aggregate(client_params: List[Params], groups: List[List[int]],
-                  weights: Optional[Sequence[float]] = None) -> Params:
+                  weights: Optional[Sequence[float]] = None, *,
+                  defense: str = "none", f: int = 1, tau: float = 10.0,
+                  centers: Optional[List[Params]] = None) -> Params:
     """Two-tier FedAvg: per-group aggregate, then global over group models,
-    weighted by group sample counts."""
+    weighted by group sample counts. A defense applies at tier 1 — the
+    group server is the first aggregation boundary Byzantine clients hit;
+    tier 2 averages group SERVER models, which the threat model trusts
+    (DESIGN.md §8). `centers` (per-group round-start models) feed
+    norm_clip; `f` is the per-group Byzantine allowance."""
     w = (np.ones(len(client_params)) if weights is None
          else np.asarray(weights, np.float64))
     group_models, group_w = [], []
-    for g in groups:
-        group_models.append(fedavg([client_params[c] for c in g],
-                                   weights=[w[c] for c in g]))
+    for gi, g in enumerate(groups):
+        group_models.append(defended_fedavg(
+            [client_params[c] for c in g], weights=[w[c] for c in g],
+            defense=defense, f=f, tau=tau,
+            center=None if centers is None else centers[gi]))
         group_w.append(sum(w[c] for c in g))
     return fedavg(group_models, weights=group_w)
 
@@ -76,13 +101,17 @@ def afl_aggregate(client_params: List[Params], participants: Sequence[int],
 
 
 def gossip_round(client_params: List[Params],
-                 neighbors: List[List[int]]) -> List[Params]:
+                 neighbors: List[List[int]], *,
+                 defense: str = "none", f: int = 1) -> List[Params]:
     """One synchronous gossip exchange: every client averages with its
-    ring neighbors. Returns the new per-client model list."""
+    ring neighbors — or, defended, takes the coordinate-wise median /
+    trimmed mean of its neighborhood (each honest node bounds what a
+    Byzantine neighbor can inject; norm_clip/krum don't apply to the
+    tiny neighborhood sets). Returns the new per-client model list."""
     out = []
     for c, nbrs in enumerate(neighbors):
         members = [client_params[c]] + [client_params[j] for j in nbrs]
-        out.append(fedavg(members))
+        out.append(defended_fedavg(members, defense=defense, f=f))
     return out
 
 
@@ -120,11 +149,35 @@ def fedavg_stacked(stacked: Params, weights=None, *,
         stacked, _stacked_weights(n, weights), interpret=interpret)
 
 
+def defended_aggregate_stacked(stacked: Params, weights=None, *,
+                               defense: str = "none", f: int = 1,
+                               tau: float = 10.0, center=None,
+                               interpret=None) -> Params:
+    """One defended aggregation event on the stack: plain kernel FedAvg
+    when `defense` is "none", else the `core.robust` operator family
+    (median / trimmed-mean selection kernel, norm_clip with `center`,
+    Krum). The single dispatch point every strategy's robust variant
+    funnels through."""
+    if defense in ("none", None):
+        return fedavg_stacked(stacked, weights, interpret=interpret)
+    from repro.core import robust
+    return robust.robust_aggregate_stacked(
+        stacked, defense, weights=weights, f=f, tau=tau, center=center,
+        interpret=interpret)
+
+
 def hfl_tier1_stacked(stacked: Params, num_groups: int, weights=None, *,
-                      interpret=None):
+                      defense: str = "none", f: int = 1, tau: float = 10.0,
+                      centers: Params = None, interpret=None):
     """Group-server aggregation over the contiguous equal-size groups of
     `topology.hierarchical_groups`: (C, ...) -> ((G, ...) group models,
-    (G,) group sample-weight totals) — one kernel call per group."""
+    (G,) group sample-weight totals) — one kernel call per group.
+
+    A defense applies here, at the first aggregation boundary Byzantine
+    clients reach (DESIGN.md §8): each group server robust-aggregates its
+    own slice. `centers` is the (G, ...) stacked round-start group models
+    (norm_clip's reference); `f` is the per-group Byzantine allowance."""
+    from repro.core import robust
     from repro.kernels import ops as kops
     mat = kops.stacked_ravel(stacked)
     C = mat.shape[0]
@@ -133,23 +186,35 @@ def hfl_tier1_stacked(stacked: Params, num_groups: int, weights=None, *,
     per = C // num_groups
     w = (jnp.ones((C,), jnp.float32) if weights is None
          else jnp.asarray(weights, jnp.float32))
+    center_rows = (kops.stacked_ravel(centers) if centers is not None
+                   else None)
     rows, totals = [], []
     for g in range(num_groups):
         wg = w[g * per:(g + 1) * per]
-        rows.append(kops.fedavg_aggregate(
-            mat[g * per:(g + 1) * per], wg / jnp.sum(wg),
-            interpret=interpret))
+        gmat = mat[g * per:(g + 1) * per]
+        if defense in ("none", None):
+            rows.append(kops.fedavg_aggregate(gmat, wg / jnp.sum(wg),
+                                              interpret=interpret))
+        else:
+            rows.append(robust.robust_aggregate(
+                gmat, defense, weights=wg, f=f, tau=tau,
+                center=None if center_rows is None else center_rows[g],
+                interpret=interpret))
         totals.append(jnp.sum(wg))
     return (kops.stacked_unravel(stacked, jnp.stack(rows)),
             jnp.stack(totals))
 
 
 def hfl_aggregate_stacked(stacked: Params, num_groups: int, weights=None, *,
+                          defense: str = "none", f: int = 1,
+                          tau: float = 10.0, centers: Params = None,
                           interpret=None) -> Params:
-    """Two-tier HFL on the stack: tier-1 group kernels, tier-2 kernel over
-    the (G, ...) group models weighted by group totals."""
+    """Two-tier HFL on the stack: tier-1 group kernels (optionally
+    defended), tier-2 kernel over the (G, ...) group models weighted by
+    group totals (group servers are trusted — DESIGN.md §8)."""
     groups, gw = hfl_tier1_stacked(stacked, num_groups, weights,
-                                   interpret=interpret)
+                                   defense=defense, f=f, tau=tau,
+                                   centers=centers, interpret=interpret)
     return fedavg_stacked(groups, gw, interpret=interpret)
 
 
@@ -166,18 +231,42 @@ def afl_aggregate_stacked(stacked: Params, weights=None, participate=None, *,
     return fedavg_stacked(stacked, w, interpret=interpret)
 
 
-def gossip_stacked(stacked: Params, neighbors: List[List[int]]) -> Params:
-    """Synchronous ring gossip on the stack: a (C, C) row-stochastic
-    mixing matrix (self + neighbors, uniform) applied to the raveled
-    parameter matrix. Matches host `gossip_round` exactly."""
+def gossip_stacked(stacked: Params, neighbors: List[List[int]], *,
+                   defense: str = "none", f: int = 1) -> Params:
+    """Synchronous ring gossip on the stack. Undefended: a (C, C)
+    row-stochastic mixing matrix (self + neighbors, uniform) applied to
+    the raveled parameter matrix — matches host `gossip_round` exactly.
+
+    Defended (median / trimmed_mean): each client takes the trimmed mean
+    of its gathered neighborhood instead. That is no longer a linear
+    mixing (selection per coordinate per neighborhood), so it runs as one
+    batched sort over the (C, K, N) gathered tensor rather than the
+    selection kernel — neighborhoods are tiny (K = degree + 1), the
+    client axis provides the parallelism. Matches the defended host
+    `gossip_round` exactly (equal-size ring neighborhoods)."""
     from repro.kernels import ops as kops
     mat = kops.stacked_ravel(stacked)
     C = mat.shape[0]
-    mix = np.zeros((C, C), np.float32)
-    for c, nbrs in enumerate(neighbors):
-        members = [c] + list(nbrs)
-        mix[c, members] = 1.0 / len(members)
-    return kops.stacked_unravel(stacked, jnp.asarray(mix) @ mat)
+    if defense in ("none", None):
+        mix = np.zeros((C, C), np.float32)
+        for c, nbrs in enumerate(neighbors):
+            members = [c] + list(nbrs)
+            mix[c, members] = 1.0 / len(members)
+        return kops.stacked_unravel(stacked, jnp.asarray(mix) @ mat)
+    if defense not in ("median", "trimmed_mean"):
+        raise ValueError(f"gossip mixing supports median/trimmed_mean "
+                         f"defenses, not {defense!r} (DESIGN.md §8)")
+    sizes = {len(n) for n in neighbors}
+    if len(sizes) != 1:
+        raise ValueError("defended gossip needs equal-size neighborhoods "
+                         "(ring topology)")
+    K = sizes.pop() + 1
+    idx = np.stack([np.asarray([c] + list(nbrs))
+                    for c, nbrs in enumerate(neighbors)])       # (C, K)
+    gathered = jnp.sort(mat[jnp.asarray(idx)], axis=1)          # (C, K, N)
+    t = (K - 1) // 2 if defense == "median" else min(f, (K - 1) // 2)
+    mixed = jnp.mean(gathered[:, t:K - t], axis=1)
+    return kops.stacked_unravel(stacked, mixed)
 
 
 def cfl_merge_stacked(global_params: Params, client_params: Params,
@@ -190,6 +279,21 @@ def cfl_merge_stacked(global_params: Params, client_params: Params,
     alpha = jnp.asarray(alpha, jnp.float32)
     return fedavg_stacked(stacked, jnp.stack([1.0 - alpha, alpha]),
                           interpret=interpret)
+
+
+def defended_cfl_merge(global_params: Params, client_params: Params,
+                       alpha, tau: float, *, interpret=None) -> Params:
+    """norm_clip-defended continual merge: the arriving update's delta is
+    L2-clipped against the current global model before the EMA fold — the
+    only defense available at a redundancy-1 merge event (DESIGN.md §8).
+    Traceable (used inside the vectorized CFL scan); the loop engine
+    applies the identical clip before its host `cfl_merge`."""
+    from repro.core import robust
+    clipped = robust.clip_deltas_stacked(
+        global_params, jax.tree.map(lambda l: l[None], client_params), tau)
+    return cfl_merge_stacked(global_params,
+                             jax.tree.map(lambda l: l[0], clipped),
+                             alpha, interpret=interpret)
 
 
 def staleness_batch_weights(alphas) -> jnp.ndarray:

@@ -20,10 +20,20 @@ def iid_partition(labels: np.ndarray, num_clients: int, seed=0
 
 
 def dirichlet_partition(labels: np.ndarray, num_clients: int, alpha=0.5,
-                        seed=0, min_per_client=8) -> List[np.ndarray]:
-    rng = np.random.default_rng(seed)
+                        seed=0, min_per_client=8,
+                        max_attempts=100) -> List[np.ndarray]:
+    """Resamples (reseeding deterministically) until every client holds at
+    least `min_per_client` samples, for at most `max_attempts` draws: a
+    small `alpha` with many clients can make the floor vanishingly
+    unlikely, and the old unbounded loop would spin forever."""
+    if min_per_client * num_clients > len(labels):
+        raise ValueError(
+            f"min_per_client={min_per_client} x {num_clients} clients "
+            f"needs {min_per_client * num_clients} samples, but only "
+            f"{len(labels)} are available")
     n_classes = int(labels.max()) + 1
-    while True:
+    for attempt in range(max_attempts):
+        rng = np.random.default_rng(seed + attempt)
         parts = [[] for _ in range(num_clients)]
         for c in range(n_classes):
             idx_c = np.where(labels == c)[0]
@@ -34,8 +44,12 @@ def dirichlet_partition(labels: np.ndarray, num_clients: int, alpha=0.5,
                 parts[cid].extend(chunk)
         if min(len(p) for p in parts) >= min_per_client:
             return [np.sort(np.array(p)) for p in parts]
-        seed += 1
-        rng = np.random.default_rng(seed)
+    raise RuntimeError(
+        f"dirichlet_partition: no draw satisfied min_per_client="
+        f"{min_per_client} in {max_attempts} attempts (alpha={alpha}, "
+        f"num_clients={num_clients}, n={len(labels)}) — the skew makes "
+        f"the floor infeasible; raise alpha, lower min_per_client, or "
+        f"reduce num_clients")
 
 
 def partition_stats(labels: np.ndarray, parts: List[np.ndarray]):

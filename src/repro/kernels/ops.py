@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.kernels import fedavg_agg as _fa
 from repro.kernels import flash_attention as _fl
+from repro.kernels import robust_agg as _ra
 from repro.kernels import ssm_scan as _ss
 from repro.kernels import ref
 
@@ -28,6 +29,25 @@ def on_cpu() -> bool:
 def fedavg_aggregate(stacked, weights, *, interpret=None):
     interpret = on_cpu() if interpret is None else interpret
     return _fa.fedavg_agg(stacked, weights, interpret=interpret)
+
+
+# -- robust aggregation (trimmed mean / median) -------------------------------
+# The selection kernel is O(C^2) compares per element; its interpret-mode
+# emulation is far slower than the sort-based reference, so on CPU the
+# default is the REFERENCE path (production fallback) and tests opt into
+# the kernel with interpret=True — unlike fedavg_aggregate, whose
+# interpret-mode cost is negligible.
+
+def trimmed_mean_aggregate(stacked, trim, *, interpret=None):
+    if interpret is None and on_cpu():
+        return ref.trimmed_mean_ref(stacked, trim)
+    return _ra.trimmed_mean_agg(stacked, trim,
+                                interpret=bool(interpret))
+
+
+def median_aggregate(stacked, *, interpret=None):
+    return trimmed_mean_aggregate(stacked, (stacked.shape[0] - 1) // 2,
+                                  interpret=interpret)
 
 
 # The flatten/ravel path: every aggregation event in the vectorized engine

@@ -16,6 +16,22 @@ def fedavg_agg_ref(stacked, weights):
                       stacked.astype(jnp.float32)).astype(stacked.dtype)
 
 
+def trimmed_mean_ref(stacked, trim: int):
+    """Sort-based oracle for the rank-select `robust_agg` kernel (also the
+    production CPU fallback): mean over the order statistics of rank
+    trim..C-trim-1 per coordinate. Tie values are interchangeable, so the
+    sort- and rank-based selections sum identically."""
+    C = stacked.shape[0]
+    if not 0 <= 2 * trim < C:
+        raise ValueError(f"trim={trim} invalid for C={C} clients")
+    s = jnp.sort(stacked.astype(jnp.float32), axis=0)
+    return jnp.mean(s[trim:C - trim], axis=0).astype(stacked.dtype)
+
+
+def median_ref(stacked):
+    return trimmed_mean_ref(stacked, (stacked.shape[0] - 1) // 2)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0):
     """q: (BH, S, d), k/v: (BH, T, d) — plain softmax attention."""
     BH, S, d = q.shape

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: coordinate-wise trimmed-mean / median aggregation —
+the robust counterpart of `fedavg_agg` (DESIGN.md §8).
+
+    theta_g[n] = mean over the order statistics of rank lo..hi-1 of
+                 {theta[c, n] : c in clients}
+
+Trimming the `f` smallest and `f` largest values per coordinate
+(lo = f, hi = C - f) bounds the influence of up to f Byzantine clients;
+lo = (C-1)//2 with hi = C - lo is exactly the coordinate-wise median for
+odd AND even C (one or two surviving order statistics).
+
+This is the repo's first selection kernel: there is no sort primitive on
+the VPU, and a sorting network would serialize O(C log^2 C) dependent
+compare-exchange stages. Instead each value's rank is computed directly —
+rank[c, n] = #{j : x[j, n] < x[c, n], ties broken by client index} — via
+a fori_loop over the C client rows, each step a fully-vectorized (C, B)
+compare+accumulate on the VPU. O(C^2) compares per element, but C is the
+client count (tens to hundreds) while N is the parameter count
+(millions), so the kernel stays memory-bound like `fedavg_agg` until
+C approaches ~1000; ranks are a permutation of 0..C-1 per coordinate, so
+rank-window masking selects exactly the kept order statistics with no
+data movement.
+
+Tiling: 1-D blocks of the flattened parameter vector, like `fedavg_agg`.
+Each grid step loads a (C, BLOCK) tile into VMEM plus a same-shape int32
+rank accumulator; the default block is scaled down with C to keep the
+working set (~3 fp32/int32 copies of the tile) inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = 8192
+_TILE_BUDGET = 512 * 1024          # floats per (C, BLOCK) tile
+
+
+def _trimmed_kernel(x_ref, o_ref, *, lo: int, hi: int):
+    # x_ref: (C, BLOCK) VMEM tile; o_ref: (BLOCK,)
+    x = x_ref[...].astype(jnp.float32)
+    C = x.shape[0]
+    cid = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+
+    def count(j, rank):
+        xj = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=0)     # (1, BLOCK)
+        less = (xj < x) | ((xj == x) & (j < cid))
+        return rank + less.astype(jnp.int32)
+
+    rank = jax.lax.fori_loop(0, C, count,
+                             jnp.zeros(x.shape, jnp.int32))
+    keep = ((rank >= lo) & (rank < hi)).astype(jnp.float32)
+    o_ref[...] = (jnp.sum(x * keep, axis=0) / (hi - lo)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "block", "interpret"))
+def trimmed_mean_agg(stacked, trim: int, *, block=DEFAULT_BLOCK,
+                     interpret=False):
+    """stacked: (C, N) client-stacked flat parameters. Returns the (N,)
+    coordinate-wise mean of the order statistics with the `trim` smallest
+    and `trim` largest per coordinate removed (trim=0 is the plain mean;
+    trim=(C-1)//2 is the median). Requires 0 <= 2*trim < C."""
+    C, N = stacked.shape
+    if not 0 <= 2 * trim < C:
+        raise ValueError(f"trim={trim} invalid for C={C} clients "
+                         f"(need 0 <= 2*trim < C)")
+    lo, hi = trim, C - trim
+    # scale the tile down with C so (C, BLOCK) x {fp32 data, int32 ranks,
+    # fp32 compare temps} stays well inside VMEM
+    block = min(block, max(128, _TILE_BUDGET // max(C, 1) // 128 * 128))
+    block = min(block, max(128, N))
+    pad = (-N) % block
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    Np = N + pad
+
+    out = pl.pallas_call(
+        functools.partial(_trimmed_kernel, lo=lo, hi=hi),
+        grid=(Np // block,),
+        in_specs=[pl.BlockSpec((C, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), stacked.dtype),
+        interpret=interpret,
+    )(stacked)
+    return out[:N]
+
+
+def median_agg(stacked, *, block=DEFAULT_BLOCK, interpret=False):
+    """Coordinate-wise median: maximal trim. Odd C keeps the single middle
+    order statistic; even C averages the two middle ones."""
+    C = stacked.shape[0]
+    return trimmed_mean_agg(stacked, (C - 1) // 2, block=block,
+                            interpret=interpret)

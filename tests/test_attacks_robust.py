@@ -1,0 +1,421 @@
+"""Adversarial-client subsystem: attack transforms, robust aggregation
+kernels and their properties, engine parity under attack, and the
+secure-aggregation composition contract (DESIGN.md §8)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks, robust, scenarios, secure_agg, strategies
+from repro.core.engine import stack_forest
+from repro.core.fl_types import FLConfig
+from repro.core.simulation import FederatedSimulation
+from repro.data.synthetic import mnist_like
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.robust_agg import median_agg, trimmed_mean_agg
+
+
+def _mat(C, N, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(C, N)).astype(np.float32))
+
+
+def _trees(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))}
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# robust_agg kernel vs host reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C,N,trim", [
+    (4, 300, 1),            # even C
+    (5, 1000, 2),           # odd C, maximal trim (median)
+    (8, 8192, 3),           # exact block boundary
+    (8, 8192 + 7, 3),       # pad path
+    (1, 64, 0),             # single client, no trim
+    (3, 129, 1),
+])
+def test_trimmed_kernel_matches_host_reference(C, N, trim):
+    """The rank-select Pallas kernel (interpret mode) against the
+    sort-based host oracle — the ISSUE 3 float-tolerance acceptance."""
+    x = _mat(C, N)
+    np.testing.assert_allclose(
+        np.asarray(trimmed_mean_agg(x, trim, interpret=True)),
+        np.asarray(ref.trimmed_mean_ref(x, trim)), atol=1e-6)
+
+
+def test_trimmed_kernel_handles_ties():
+    """Duplicated values across clients: index tie-breaking keeps the
+    rank field a permutation, and tied values are interchangeable, so
+    the kernel still matches the sort-based reference exactly."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(0, 3, size=(6, 500)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(trimmed_mean_agg(x, 2, interpret=True)),
+        np.asarray(ref.trimmed_mean_ref(x, 2)), atol=1e-6)
+
+
+@pytest.mark.parametrize("C", [4, 5])
+def test_median_kernel_even_and_odd(C):
+    x = _mat(C, 257, seed=C)
+    np.testing.assert_allclose(
+        np.asarray(median_agg(x, interpret=True)),
+        np.median(np.asarray(x), axis=0), atol=1e-6)
+
+
+def test_trimmed_kernel_rejects_bad_trim():
+    with pytest.raises(ValueError, match="trim"):
+        trimmed_mean_agg(_mat(4, 64), 2, interpret=True)
+    with pytest.raises(ValueError, match="trim"):
+        ref.trimmed_mean_ref(_mat(4, 64), 2)
+
+
+# ---------------------------------------------------------------------------
+# breakdown-point properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("f", [1, 2, 3])
+@pytest.mark.parametrize("defense", ["median", "trimmed_mean"])
+def test_breakdown_point_identical_benign(defense, f):
+    """2f+1 clients, f sending ARBITRARY updates: when the f+1 benign
+    clients agree, median/trimmed-mean return exactly the benign value —
+    the attackers are powerless below the breakdown point."""
+    C, N = 2 * f + 1, 200
+    rng = np.random.default_rng(f)
+    benign = rng.normal(size=(1, N)).astype(np.float32)
+    evil = (rng.normal(size=(f, N)) * 1e6).astype(np.float32)
+    mat = jnp.asarray(np.vstack([np.repeat(benign, f + 1, axis=0), evil]))
+    out = robust.robust_aggregate(mat, defense, f=f)
+    np.testing.assert_allclose(np.asarray(out), benign[0], atol=1e-5)
+
+
+@pytest.mark.parametrize("defense", ["median", "trimmed_mean"])
+def test_breakdown_point_bounded_by_benign_range(defense):
+    """General benign values: with f of 2f+1 arbitrary, the aggregate
+    stays inside the benign coordinate-wise envelope."""
+    f, N = 3, 300
+    rng = np.random.default_rng(9)
+    benign = rng.normal(size=(f + 1, N)).astype(np.float32)
+    evil = (rng.normal(size=(f, N)) * 1e5).astype(np.float32)
+    mat = jnp.asarray(np.vstack([benign, evil]))
+    out = np.asarray(robust.robust_aggregate(mat, defense, f=f))
+    assert (out >= benign.min(axis=0) - 1e-5).all()
+    assert (out <= benign.max(axis=0) + 1e-5).all()
+
+
+def test_krum_selects_honest_under_sign_flip():
+    """Honest clients cluster; sign-flipped uploads sit far away. Krum's
+    nearest-neighbor score must pick an honest client, and multi-Krum's
+    selection must exclude every attacker."""
+    rng = np.random.default_rng(0)
+    C, N, f = 10, 120, 3
+    base = rng.normal(size=(N,)).astype(np.float32)
+    honest = base + 0.05 * rng.normal(size=(C - f, N)).astype(np.float32)
+    flipped = base - 4.0 * (honest[:f] - base)       # sign-flip of updates
+    mat = jnp.asarray(np.vstack([honest, flipped]))
+    assert int(robust.krum_select(mat, f)[0]) < C - f
+    multi = np.asarray(robust.krum_select(mat, f, m=C - f))
+    assert (multi < C - f).all()
+
+
+def test_no_attack_parity_with_fedavg():
+    """Defenses degenerate to plain FedAvg on clean inputs: trim 0 is the
+    mean, multi-Krum keeping everyone is the mean, and norm_clip with a
+    huge tau never clips."""
+    mat = _mat(6, 400, seed=1)
+    w = jnp.full((6,), 1.0 / 6)
+    mean = np.asarray(kops.fedavg_aggregate(mat, w))
+    np.testing.assert_allclose(
+        np.asarray(kops.trimmed_mean_aggregate(mat, 0)), mean, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(robust.robust_aggregate(mat, "multi_krum", f=0)),
+        mean, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(robust.robust_aggregate(
+            mat, "norm_clip", tau=1e9, center=jnp.zeros(mat.shape[1]))),
+        mean, atol=1e-5)
+
+
+def test_norm_clip_bounds_delta_influence():
+    """A boosted replacement update is clipped to tau, so the aggregate
+    cannot move further than tau from the center."""
+    C, N, tau = 4, 100, 0.5
+    rng = np.random.default_rng(2)
+    center = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+    mat = jnp.asarray(center + rng.normal(size=(C, N)).astype(np.float32)
+                      * 100.0)
+    out = robust.robust_aggregate(mat, "norm_clip", tau=tau, center=center)
+    assert float(jnp.linalg.norm(out - center)) <= tau + 1e-4
+
+
+def test_robust_aggregate_validates_inputs():
+    mat = _mat(4, 50)
+    with pytest.raises(ValueError, match="unknown defense"):
+        robust.robust_aggregate(mat, "prayer")
+    with pytest.raises(ValueError, match="center"):
+        robust.robust_aggregate(mat, "norm_clip")
+
+
+# ---------------------------------------------------------------------------
+# attack transforms
+# ---------------------------------------------------------------------------
+
+def test_attacker_ids_deterministic_and_bounded():
+    a = attacks.attacker_ids(32, 0.25, seed=0)
+    b = attacks.attacker_ids(32, 0.25, seed=0)
+    np.testing.assert_array_equal(a, b)
+    assert len(a) == 8
+    assert len(attacks.attacker_ids(4, 1.0, seed=1)) == 3   # >=1 honest
+    assert len(attacks.attacker_ids(8, 0.0, seed=1)) == 0
+
+
+def test_label_flip_is_involution():
+    y = np.arange(10, dtype=np.int32)
+    np.testing.assert_array_equal(attacks.flip_labels(attacks.flip_labels(y)),
+                                  y)
+    assert attacks.flip_labels(np.array([0]))[0] == 9
+
+
+def test_sign_flip_and_replace_algebra():
+    local = {"w": jnp.full((2,), 3.0)}
+    base = {"w": jnp.full((2,), 1.0)}
+    key = jax.random.PRNGKey(0)
+    flip = attacks.corrupt_tree(local, base, True, key, kind="sign_flip",
+                                scale=2.0)
+    np.testing.assert_allclose(np.asarray(flip["w"]), -3.0)  # 1 - 2*(3-1)
+    rep = attacks.corrupt_tree(local, base, True, key, kind="model_replace",
+                               scale=10.0)
+    np.testing.assert_allclose(np.asarray(rep["w"]), 21.0)   # 1 + 10*(3-1)
+    clean = attacks.corrupt_tree(local, base, False, key, kind="sign_flip",
+                                 scale=2.0)
+    np.testing.assert_allclose(np.asarray(clean["w"]), 3.0)
+
+
+def test_corrupt_stacked_matches_per_client():
+    """The vmapped stacked corruption and the loop engine's per-client
+    path produce identical uploads (the rng-parity contract's attack
+    clause) — including gauss, whose noise is keyed by absolute id."""
+    rng = np.random.default_rng(5)
+    stacked = {"w": jnp.asarray(rng.normal(size=(5, 7)).astype(np.float32))}
+    base = {"w": jnp.zeros((5, 7), jnp.float32)}
+    mask = np.array([True, False, True, False, True])
+    for kind in ("sign_flip", "gauss", "model_replace"):
+        keys = attacks.client_keys(attacks.event_key(3, 1), np.arange(5))
+        vec = attacks.corrupt_stacked(stacked, base, mask, keys,
+                                      kind=kind, scale=1.5)
+        lst = attacks.corrupt_clients(
+            [{"w": stacked["w"][i]} for i in range(5)],
+            [{"w": base["w"][0]}] * 5, list(range(5)), mask, kind=kind,
+            scale=1.5, seed=3, event=1)
+        for i in range(5):
+            np.testing.assert_allclose(np.asarray(vec["w"][i]),
+                                       np.asarray(lst[i]["w"]), atol=1e-6,
+                                       err_msg=f"{kind} row {i}")
+
+
+# ---------------------------------------------------------------------------
+# defended strategy operators
+# ---------------------------------------------------------------------------
+
+def test_defended_fedavg_matches_stacked_dispatch():
+    trees = _trees(5, seed=2)
+    host = strategies.defended_fedavg(trees, defense="median")
+    stacked = robust.robust_aggregate_stacked(stack_forest(trees), "median")
+    np.testing.assert_allclose(np.asarray(host["w"]),
+                               np.asarray(stacked["w"]), atol=1e-6)
+
+
+def test_defended_gossip_matches_host():
+    """Stacked defended gossip (batched sort) against the host per-client
+    robust neighborhood aggregation."""
+    from repro.core import topology
+    trees = _trees(6, seed=4)
+    nbrs = topology.ring_neighbors(6, 2)
+    host = strategies.gossip_round(trees, nbrs, defense="median")
+    stacked = strategies.gossip_stacked(stack_forest(trees), nbrs,
+                                        defense="median")
+    for i in range(6):
+        np.testing.assert_allclose(np.asarray(host[i]["w"]),
+                                   np.asarray(stacked["w"][i]), atol=1e-6)
+    with pytest.raises(ValueError, match="gossip"):
+        strategies.gossip_stacked(stack_forest(trees), nbrs, defense="krum")
+
+
+def test_defended_cfl_merge_clips_then_merges():
+    base = {"w": jnp.zeros((3,), jnp.float32)}
+    client = {"w": jnp.asarray([30.0, 0.0, 40.0])}   # ||delta|| = 50
+    out = strategies.defended_cfl_merge(base, client, alpha=1.0, tau=5.0)
+    np.testing.assert_allclose(np.asarray(out["w"]), [3.0, 0.0, 4.0],
+                               atol=1e-5)
+
+
+def test_hfl_tier1_defense_per_group():
+    """One Byzantine client per group: defended tier-1 recovers each
+    group's benign consensus exactly."""
+    benign = {"w": jnp.ones((2,), jnp.float32)}
+    evil = {"w": jnp.full((2,), 1e6, jnp.float32)}
+    stacked = stack_forest([benign, benign, evil,
+                            evil, benign, benign])     # groups of 3
+    groups, gw = strategies.hfl_tier1_stacked(stacked, 2, defense="median",
+                                              f=1)
+    np.testing.assert_allclose(np.asarray(groups["w"]),
+                               np.ones((2, 2)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine parity under attack (loop == vectorized, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy,kw", [
+    ("afl", dict(attack="sign_flip", attack_scale=2.0, defense="median")),
+    ("hfl", dict(attack="gauss", attack_scale=0.5,
+                 defense="trimmed_mean")),
+    ("cfl", dict(attack="model_replace", attack_scale=5.0,
+                 defense="norm_clip", clip_tau=2.0)),
+])
+def test_engine_parity_under_attack(strategy, kw):
+    ds = mnist_like(seed=1, n_train=256, n_test=128)
+    res = {}
+    for eng in ("loop", "vectorized"):
+        fl = FLConfig(strategy=strategy, num_clients=4, num_groups=2,
+                      rounds=2, local_epochs=1, local_batch_size=32,
+                      lr=0.05, seed=0, participation=1.0, engine=eng,
+                      attack_fraction=0.25, **kw)
+        res[eng] = FederatedSimulation(fl, ds).run()
+    assert res["loop"].test_accuracy == pytest.approx(
+        res["vectorized"].test_accuracy, abs=0.02)
+    assert res["loop"].train_accuracy == pytest.approx(
+        res["vectorized"].train_accuracy, abs=0.02)
+
+
+def test_defense_event_validation():
+    ds = mnist_like(seed=1, n_train=128, n_test=64)
+    with pytest.raises(ValueError, match="does not apply"):
+        FederatedSimulation(FLConfig(strategy="cfl", num_clients=4,
+                                     num_groups=2, defense="krum"), ds)
+    with pytest.raises(ValueError, match="does not apply"):
+        FederatedSimulation(FLConfig(strategy="afl", afl_mode="gossip",
+                                     num_clients=4, num_groups=2,
+                                     defense="multi_krum"), ds)
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation composition (satellite)
+# ---------------------------------------------------------------------------
+
+def test_secure_fedavg_matches_stacked_kernel_path():
+    """Pairwise-masked FedAvg equals the vectorized engine's kernel-backed
+    `fedavg_aggregate_stacked` for equal weights: masks cancel in the
+    SUM, so masking composes with any LINEAR aggregation — including the
+    Pallas ravel path."""
+    trees = _trees(6, seed=7)
+    masked = secure_agg.secure_fedavg(trees, base_seed=11)
+    kernel = kops.fedavg_aggregate_tree(trees, jnp.full((6,), 1.0 / 6))
+    for leaf in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(masked[leaf]),
+                                   np.asarray(kernel[leaf]), atol=5e-4)
+
+
+def test_masking_breaks_robust_selection():
+    """The documented incompatibility (DESIGN.md §8): median over MASKED
+    uploads is garbage even though their sum is exact — robust defenses
+    need plaintext updates."""
+    trees = _trees(5, seed=8)
+    participants = list(range(5))
+    masked = [secure_agg.mask_update(p, i, participants, base_seed=3,
+                                     weight=1.0 / 5)
+              for i, p in enumerate(trees)]
+    true_median = robust.robust_aggregate_stacked(stack_forest(trees),
+                                                  "median")
+    masked_median = robust.robust_aggregate_stacked(stack_forest(masked),
+                                                    "median")
+    err = float(jnp.linalg.norm(masked_median["w"] - true_median["w"]))
+    signal = float(jnp.linalg.norm(true_median["w"]))
+    assert err > 3 * signal
+
+
+# ---------------------------------------------------------------------------
+# scenarios: adversarial axis + schema v2 (satellite)
+# ---------------------------------------------------------------------------
+
+def test_attack_scenarios_registered_across_architectures():
+    specs = [scenarios.get(n) for n in scenarios.names()
+             if scenarios.get(n).attack != "none"]
+    assert len(specs) >= 6
+    assert {s.strategy for s in specs} >= {"hfl", "afl", "cfl", "async"}
+    assert {s.defense for s in specs} >= {
+        "none", "median", "trimmed_mean", "norm_clip", "krum"}
+    assert {s.attack for s in specs} == {
+        "sign_flip", "gauss", "label_flip", "model_replace"}
+
+
+def test_attack_spec_validation():
+    with pytest.raises(ValueError, match="unknown attack"):
+        scenarios.ScenarioSpec("bad", "x", attack="ddos")
+    with pytest.raises(ValueError, match="does not apply"):
+        scenarios.ScenarioSpec("bad", "x", strategy="cfl",
+                               topology="sequential", defense="median")
+    with pytest.raises(ValueError, match="does not apply"):
+        scenarios.ScenarioSpec("bad", "x", strategy="afl", topology="ring",
+                               defense="krum")
+
+
+def test_result_schema_v2_attack_block():
+    spec = scenarios.ScenarioSpec(
+        "tiny-attacked", "schema smoke", strategy="afl", topology="star",
+        engine="vectorized", num_clients=4, n_train=128, n_test=64,
+        rounds=1, participation=1.0, attack="sign_flip",
+        attack_fraction=0.25, attack_scale=2.0, defense="median")
+    res = scenarios.run_scenario(spec)
+    assert res["schema_version"] == 2
+    blk = res["attack"]
+    assert blk["attack"] == "sign_flip" and blk["defense"] == "median"
+    assert blk["attacked_clients"] == [
+        int(c) for c in attacks.attacker_ids(4, 0.25, seed=0)]
+    assert blk["defense_f"] >= 1
+    import json
+    json.dumps(res)
+
+
+def test_result_schema_v1_backward_compat_read():
+    """v1 documents (pre-adversarial) normalize to v2 with a null attack
+    block; current documents pass through; unknown versions fail loud."""
+    v1 = {"schema_version": 1, "scenario": "old", "metrics": {"f1": 0.5}}
+    doc = scenarios.load_result(v1)
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
+    assert doc["attack"] is None
+    assert doc["metrics"]["f1"] == 0.5
+    v2 = {"schema_version": 2, "scenario": "new", "attack": None}
+    assert scenarios.load_result(v2) is v2
+    with pytest.raises(ValueError, match="schema_version"):
+        scenarios.load_result({"schema_version": 99})
+
+
+# ---------------------------------------------------------------------------
+# dirichlet_partition bounded retry (satellite)
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_partition_infeasible_floor_raises():
+    from repro.data.partition import dirichlet_partition
+    labels = np.random.default_rng(0).integers(0, 10, 100).astype(np.int32)
+    with pytest.raises(ValueError, match="min_per_client"):
+        dirichlet_partition(labels, num_clients=8, min_per_client=50)
+    with pytest.raises(RuntimeError, match="attempts"):
+        dirichlet_partition(labels, num_clients=10, alpha=0.01,
+                            min_per_client=10, max_attempts=3)
+
+
+def test_dirichlet_partition_still_succeeds():
+    from repro.data.partition import dirichlet_partition
+    labels = np.random.default_rng(0).integers(0, 10, 600).astype(np.int32)
+    parts = dirichlet_partition(labels, num_clients=4, alpha=0.5,
+                                min_per_client=8)
+    assert sum(len(p) for p in parts) == 600
+    assert min(len(p) for p in parts) >= 8

@@ -40,9 +40,12 @@ def test_every_spec_resolves_to_fl_config():
 
 
 def test_ci_smoke_grid_is_registered():
-    assert len(scenarios.CI_SMOKE_GRID) == 3
+    assert len(scenarios.CI_SMOKE_GRID) == 4
     for name in scenarios.CI_SMOKE_GRID:
         assert name in scenarios.REGISTRY
+    # the grid carries one adversarial scenario (ISSUE 3 satellite)
+    assert any(scenarios.get(n).attack != "none"
+               for n in scenarios.CI_SMOKE_GRID)
 
 
 def test_spec_validation():
@@ -101,12 +104,25 @@ def test_run_scenario_result_schema():
     json.dumps(res)                        # must be JSON-serializable
 
 
+def test_result_schema_v2_backward_compat_read():
+    """Schema bump contract (DESIGN.md §6): v1 documents (no attack
+    block) normalize through `load_result` to the current version, so
+    every consumer reads one shape."""
+    v1 = {"schema_version": 1, "scenario": "legacy",
+          "metrics": {"test_accuracy": 0.9}, "async": None}
+    doc = scenarios.load_result(v1)
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2
+    assert doc["attack"] is None
+    assert doc["metrics"]["test_accuracy"] == 0.9
+
+
 def test_run_scenario_sync_has_null_async_block():
     spec = scenarios.ScenarioSpec(
         "tiny-cfl", "schema smoke", strategy="cfl", topology="sequential",
         engine="loop", num_clients=4, n_train=128, n_test=64, rounds=1)
     res = scenarios.run_scenario(spec)
     assert res["async"] is None
+    assert res["attack"] is None          # clean run: v2 null attack block
     assert res["spec"]["rounds"] == 1
     json.dumps(res)
 
