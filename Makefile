@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test deps lint bench bench-engines scenarios bench-ci attack-demo
+.PHONY: test deps lint bench bench-engines scenarios bench-ci attack-demo \
+        strategy-demo
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -19,10 +20,17 @@ bench:
 bench-engines:
 	$(PY) -m benchmarks.kernel_bench --scale full
 
-# the registry + the CI smoke grid (mirrors the bench-smoke job's grid)
+# the registry + the CI smoke grid (mirrors the bench-smoke job's grid);
+# results land under the shared output-dir convention (experiments/)
 scenarios:
 	$(PY) -m repro.core.scenarios --list
-	$(PY) -m repro.core.scenarios --grid ci
+	$(PY) -m repro.core.scenarios --grid ci --json ci_grid.json
+
+# the PR 4 strategy plugins end-to-end by registry name: FedProx under
+# label skew + FedAdam's server optimizer over the kernel-backed
+# aggregate (both also run in the CI smoke grid)
+strategy-demo:
+	$(PY) -m repro.core.scenarios --run fedprox-dirichlet-vec fedadam-iid-vec
 
 # one adversarial scenario end-to-end: 25% sign-flip attackers at 32
 # clients, defended by the trimmed-mean selection kernel (DESIGN.md §8;

@@ -11,8 +11,11 @@ SPEEDUP ratio (dimensionless, so portable across runner hardware — raw
 wall-clock from a laptop baseline would flap on every CI machine change;
 absolute throughputs are still recorded for trend tracking), failing when
 a speedup falls more than `--tolerance` (default 25%) below the committed
-baseline, or when the async speedup at quick scale drops below the 2x
-acceptance floor.
+baseline, when the async speedup at quick scale drops below the 2x
+acceptance floor, or when the generic round driver's ABSOLUTE sync round
+throughput falls more than `--driver-tolerance` (default 5%) below the
+baseline's (the ISSUE 4 driver-overhead gate; same host core count and
+scale only, so hardware swaps don't trip it).
 
     PYTHONPATH=src python -m benchmarks.ci_bench --scale quick \
         --out BENCH_ci.json --baseline benchmarks/BENCH_baseline.json --check
@@ -113,7 +116,7 @@ def run(scale):
     }
 
 
-def compare(new, baseline, tolerance=0.25):
+def compare(new, baseline, tolerance=0.25, driver_tolerance=0.05):
     """Gate the run against the committed baseline. Returns a list of
     failure strings (empty = pass). The "robust" section gates only when
     both documents carry it (pre-ISSUE-3 baselines don't)."""
@@ -128,6 +131,24 @@ def compare(new, baseline, tolerance=0.25):
             failures.append(
                 f"{section} throughput regression: "
                 f"speedup {got:.2f}x < baseline {want:.2f}x - {tolerance:.0%}")
+    # driver-overhead gate (ISSUE 4): the generic round driver must keep
+    # >=95% of the baseline's ABSOLUTE sync round throughput per engine.
+    # Unlike the dimensionless speedup ratios above, this compares raw
+    # throughput, so it only gates when both documents were measured at
+    # the same scale on a host with the same core count (otherwise
+    # hardware changes, not driver overhead, would trip it).
+    same_host = (new.get("host", {}).get("cpus")
+                 == baseline.get("host", {}).get("cpus")
+                 and new.get("scale") == baseline.get("scale"))
+    if same_host:
+        for key in ("loop_rounds_per_s", "vectorized_rounds_per_s"):
+            got = new["sync"].get(key)
+            want = baseline["sync"].get(key)
+            if got and want and got < want * (1.0 - driver_tolerance):
+                failures.append(
+                    f"driver overhead regression: sync {key} "
+                    f"{got:.4f}/s < baseline {want:.4f}/s "
+                    f"- {driver_tolerance:.0%}")
     if new["scale"] == "quick" and new["async"]["speedup"] < ASYNC_SPEEDUP_FLOOR:
         failures.append(
             f"async speedup {new['async']['speedup']:.2f}x below the "
@@ -146,6 +167,10 @@ def main(argv=None):
     ap.add_argument("--baseline", default=None,
                     help="committed baseline JSON to compare against")
     ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--driver-tolerance", type=float, default=0.05,
+                    help="max generic-driver round-throughput loss vs "
+                         "the baseline's absolute sync rounds/s (same "
+                         "host + scale only)")
     ap.add_argument("--check", action="store_true",
                     help="exit 1 on regression vs the baseline")
     args = ap.parse_args(argv)
@@ -158,7 +183,8 @@ def main(argv=None):
     if args.baseline:
         with open(args.baseline) as f:
             base = json.load(f)
-        failures = compare(doc, base, args.tolerance)
+        failures = compare(doc, base, args.tolerance,
+                           args.driver_tolerance)
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)
         if failures:

@@ -74,17 +74,19 @@ def bench_ssm():
 
 def bench_aggregation_strategies():
     """Host-level aggregation operators at CNN scale (paper's hot ops)."""
-    from repro.core import strategies, topology
+    from repro.core import aggregation, topology
     from repro.models.cnn import init_cnn
     clients = [init_cnn(jax.random.PRNGKey(i)) for i in range(10)]
     groups = topology.hierarchical_groups(10, 2)
     nbrs = topology.ring_neighbors(10, 2)
     rows = []
     for name, fn in [
-        ("fedavg_10c", lambda: strategies.fedavg(clients)),
-        ("hfl_two_tier_10c", lambda: strategies.hfl_aggregate(clients, groups)),
-        ("gossip_round_10c", lambda: strategies.gossip_round(clients, nbrs)),
-        ("cfl_merge", lambda: strategies.cfl_merge(clients[0], clients[1], 0.5)),
+        ("fedavg_10c", lambda: aggregation.fedavg(clients)),
+        ("hfl_two_tier_10c",
+         lambda: aggregation.hfl_aggregate(clients, groups)),
+        ("gossip_round_10c", lambda: aggregation.gossip_round(clients, nbrs)),
+        ("cfl_merge",
+         lambda: aggregation.cfl_merge(clients[0], clients[1], 0.5)),
     ]:
         fn()
         t0 = time.perf_counter()
@@ -174,11 +176,14 @@ def measure_sync_round(clients, rounds=2):
 
 
 def measure_async(clients, updates=2):
-    """Loop vs vectorized `AsyncResult`s of the tick-batched async
-    runtime under uniform speeds (full-federation arrival batches — the
-    batched kernel merge's best case). THE async protocol shape, shared
-    with the CI gate like `measure_sync_round`."""
-    from repro.core.async_agg import AsyncSimulation
+    """Loop vs vectorized results of the tick-batched async runtime
+    under uniform speeds (full-federation arrival batches — the batched
+    kernel merge's best case), run through the async Strategy plugin on
+    the generic driver. THE async protocol shape, shared with the CI
+    gate like `measure_sync_round`. Returns per-engine objects with
+    `.merges`/`.batches`/`.build_time_s` (FLResult extras surfaced)."""
+    import types
+
     from repro.core.fl_types import FLConfig
     from repro.core.simulation import FederatedSimulation
     from repro.data.synthetic import mnist_like
@@ -186,13 +191,14 @@ def measure_async(clients, updates=2):
     ds = mnist_like(n_train=clients * 64, n_test=128)
     per = {}
     for eng in ("loop", "vectorized"):
-        fl = FLConfig(strategy="cfl", num_clients=clients, num_groups=2,
+        fl = FLConfig(strategy="async", num_clients=clients, num_groups=2,
                       local_epochs=1, local_batch_size=32, lr=0.05, seed=0,
-                      engine=eng)
-        per[eng] = AsyncSimulation(FederatedSimulation(fl, ds),
-                                   updates_per_client=updates,
-                                   speed_model="uniform", tick=1.0,
-                                   engine=eng).run()
+                      participation=1.0, updates_per_client=updates,
+                      speed_model="uniform", tick=1.0, engine=eng)
+        r = FederatedSimulation(fl, ds).run()
+        per[eng] = types.SimpleNamespace(
+            merges=r.extra["merges"], batches=r.extra["batches"],
+            build_time_s=r.build_time_s)
     return per
 
 

@@ -1,12 +1,14 @@
 """End-to-end federated training driver — the paper's experiment as a
-runnable example: train the §2.4 CNN across clients under any of the
-three aggregation strategies, report the full metric suite, and dump
-per-round accuracy/loss curves (paper Figs. 9/11).
+runnable example: train the §2.4 CNN across clients under any REGISTERED
+Strategy plugin (the paper's hfl/afl/cfl, the async runtime, fedprox,
+fedavgm/fedadam, or a third-party plugin — `repro.api`), report the full
+metric suite, and dump per-round accuracy/loss curves (paper Figs. 9/11).
 
     PYTHONPATH=src python examples/federated_image_classification.py \
         --strategy cfl --dataset fashion --rounds 10 --clients 10 --curves
 Beyond-paper options: --non-iid (Dirichlet label skew), --gossip
-(decentralized ring aggregation for AFL), the adversarial axis
+(decentralized ring aggregation for AFL), strategy-plugin knobs
+(--prox-mu, --server-lr/--server-momentum), the adversarial axis
 (--attack/--attack-fraction/--attack-scale toggles Byzantine clients,
 --defense/--clip-tau selects the robust aggregator — DESIGN.md §8), and
 the scenario registry: `--list-scenarios` / `--scenario NAME` runs a
@@ -25,15 +27,15 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.fl_types import FLConfig
-from repro.core.simulation import FederatedSimulation
+from repro import api
 from repro.data.synthetic import DATASETS
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--strategy", choices=["hfl", "afl", "cfl"],
-                    default="cfl")
+    ap.add_argument("--strategy", choices=api.strategy_names(),
+                    default="cfl",
+                    help="any registered Strategy plugin (repro.api)")
     ap.add_argument("--dataset", choices=["mnist", "fashion"],
                     default="mnist")
     ap.add_argument("--clients", type=int, default=10)
@@ -48,6 +50,16 @@ def main():
     ap.add_argument("--non-iid", action="store_true",
                     help="Dirichlet(0.5) label-skew partition (paper §4 "
                          "future work, implemented here)")
+    ap.add_argument("--prox-mu", type=float, default=0.01,
+                    help="fedprox: proximal term weight mu")
+    ap.add_argument("--server-lr", type=float, default=1.0,
+                    help="fedavgm/fedadam: server optimizer step size")
+    ap.add_argument("--server-momentum", type=float, default=0.9,
+                    help="fedavgm: server momentum")
+    ap.add_argument("--outdir", default=None,
+                    help="output root for curves/results (default: the "
+                         "shared convention, experiments/ or "
+                         "$REPRO_OUTPUT_DIR)")
     from repro.core.fl_types import ATTACKS, DEFENSES
     ap.add_argument("--attack", choices=ATTACKS, default="none",
                     help="Byzantine client attack (core/attacks.py): a "
@@ -92,17 +104,19 @@ def main():
 
     ds = DATASETS[args.dataset](n_train=args.n_train,
                                 n_test=max(500, args.n_train // 5))
-    fl = FLConfig(strategy=args.strategy, num_clients=args.clients,
-                  num_groups=args.groups, rounds=args.rounds,
-                  local_epochs=args.local_epochs,
-                  participation=args.participation,
-                  merge_alpha=args.merge_alpha, lr=args.lr,
-                  afl_mode="gossip" if args.gossip else "fedavg",
-                  attack=args.attack,
-                  attack_fraction=args.attack_fraction,
-                  attack_scale=args.attack_scale, defense=args.defense,
-                  clip_tau=args.clip_tau, engine=args.engine)
-    sim = FederatedSimulation(fl, ds)
+    fl = api.FLConfig(strategy=args.strategy, num_clients=args.clients,
+                      num_groups=args.groups, rounds=args.rounds,
+                      local_epochs=args.local_epochs,
+                      participation=args.participation,
+                      merge_alpha=args.merge_alpha, lr=args.lr,
+                      afl_mode="gossip" if args.gossip else "fedavg",
+                      prox_mu=args.prox_mu, server_lr=args.server_lr,
+                      server_momentum=args.server_momentum,
+                      attack=args.attack,
+                      attack_fraction=args.attack_fraction,
+                      attack_scale=args.attack_scale, defense=args.defense,
+                      clip_tau=args.clip_tau, engine=args.engine)
+    sim = api.FederatedSimulation(fl, ds)
     if args.non_iid:
         from repro.data.partition import dirichlet_partition
         _, ytr = ds["train"]
@@ -127,7 +141,13 @@ def main():
         print("   " + " ".join(f"{v:4d}" for v in row))
 
     if args.curves:
-        path = f"curves_{args.strategy}_{args.dataset}.csv"
+        # one output-dir convention for every curve/result writer
+        name = f"curves_{args.strategy}_{args.dataset}.csv"
+        if args.outdir:
+            path = os.path.join(args.outdir, "curves", name)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+        else:
+            path = api.output_path("curves", name)
         with open(path, "w", newline="") as f:
             w = csv.writer(f)
             w.writerow(["round", "train_acc", "train_loss", "test_acc"])

@@ -1,0 +1,69 @@
+"""repro.api — the stable public surface of the evaluation framework.
+
+One import gives everything a user (or a third-party strategy plugin)
+needs; internal module layout may shift underneath, this surface will
+not (tests/test_api_surface.py snapshots it):
+
+  Configuration    FLConfig, ATTACKS, DEFENSES, ENGINES, STRATEGIES
+  Strategy plugins Strategy, RoundPlan, LocalSpec, register_strategy,
+                   get_strategy, strategy_names, STRATEGY_REGISTRY,
+                   STRATEGY_REGISTRY_VERSION
+  Driver           FederatedSimulation (the generic round driver),
+                   FLResult
+  Scenarios        ScenarioSpec, register_scenario, get_scenario,
+                   scenario_names, run_scenario, load_result,
+                   RESULT_SCHEMA_VERSION, CI_SMOKE_GRID, output_path
+  Aggregation ops  ops (the kernel-backed host/stacked/mesh operator
+                   module, `repro.core.aggregation`)
+
+Minimal plugin example (no core edits — see
+tests/test_plugin_strategy.py for the full version):
+
+    from repro import api
+
+    @api.register_strategy
+    class MyStrategy(api.Strategy):
+        name = "my-strategy"
+        topologies = ("star",)
+        defenses = {"star": ("none", "median")}
+        def init_state(self, sim): ...
+        def select_participants(self, sim, state, event, rng): ...
+        def aggregate_event(self, sim, state, plan, uploads): ...
+        def round_model(self, state): ...
+
+    api.run_scenario(api.ScenarioSpec(
+        "mine", "demo", strategy="my-strategy", topology="star"))
+
+Legacy import paths (`repro.core.simulation.DEFENSES_BY_EVENT`,
+`repro.core.strategies.<operator>`, `repro.core.async_agg.
+AsyncSimulation`) keep working through deprecation shims that emit
+DeprecationWarning.
+"""
+from __future__ import annotations
+
+from repro.core import aggregation as ops
+from repro.core.fl_types import (ATTACKS, DEFENSES, ENGINES, STRATEGIES,
+                                 FLConfig)
+from repro.core.scenarios import (CI_SMOKE_GRID, RESULT_SCHEMA_VERSION,
+                                  ScenarioSpec, load_result, output_path,
+                                  run_scenario)
+from repro.core.scenarios import get as get_scenario
+from repro.core.scenarios import names as scenario_names
+from repro.core.scenarios import register as register_scenario
+from repro.core.simulation import FederatedSimulation, FLResult
+from repro.core.strategies import (STRATEGY_REGISTRY,
+                                   STRATEGY_REGISTRY_VERSION, LocalSpec,
+                                   RoundPlan, Strategy, get_strategy,
+                                   register_strategy, strategy_names)
+
+__all__ = sorted([
+    "ATTACKS", "DEFENSES", "ENGINES", "STRATEGIES", "FLConfig",
+    "Strategy", "RoundPlan", "LocalSpec", "register_strategy",
+    "get_strategy", "strategy_names", "STRATEGY_REGISTRY",
+    "STRATEGY_REGISTRY_VERSION",
+    "FederatedSimulation", "FLResult",
+    "ScenarioSpec", "register_scenario", "get_scenario", "scenario_names",
+    "run_scenario", "load_result", "RESULT_SCHEMA_VERSION",
+    "CI_SMOKE_GRID", "output_path",
+    "ops",
+])

@@ -1,0 +1,458 @@
+"""Aggregation operators — the paper's contribution as composable ops.
+
+(Formerly `core/strategies.py`; that module now hosts the Strategy
+plugin API and re-exports these names with a DeprecationWarning.)
+
+Two implementations of the same math, validated against each other in
+tests:
+
+* HOST level — operates on a *list* of client parameter pytrees (the
+  paper-faithful simulation on CPU; arbitrary client counts).
+* MESH level — operates inside `shard_map` where the leading "clients"
+  axis of every parameter is sharded over a mesh axis; aggregation
+  lowers to `jax.lax` collectives (psum / collective_permute), which is
+  what the multi-pod dry-run compiles and the roofline's collective
+  term measures:
+
+      HFL  -> two psums (axis_index_groups tier, then global tier)
+              [multi-pod: psum over "data" then psum over "pod"]
+      AFL  -> masked weighted psum (fedavg mode)
+              ring collective_permute exchange (gossip mode)
+      CFL  -> psum + EMA continual merge (see DESIGN.md §2 adaptation)
+
+All operators implement Eq. (5): theta_g = sum_c (n_c / N) theta_c,
+generalized with per-client weights / participation masks.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+
+Params = Any
+
+
+# ===========================================================================
+# host-level (list-of-pytrees) operators — used by the paper simulation
+# ===========================================================================
+
+def fedavg(client_params: List[Params],
+           weights: Optional[Sequence[float]] = None,
+           use_kernel: bool = False) -> Params:
+    """Weighted parameter average over clients (Eq. 5)."""
+    n = len(client_params)
+    w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
+    w = (w / w.sum()).astype(np.float32)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.fedavg_aggregate_tree(client_params, jnp.asarray(w))
+    return jax.tree.map(
+        lambda *leaves: sum(wi * l for wi, l in zip(w, leaves)),
+        *client_params)
+
+
+def defended_fedavg(client_params: List[Params],
+                    weights: Optional[Sequence[float]] = None, *,
+                    defense: str = "none", f: int = 1, tau: float = 10.0,
+                    center: Optional[Params] = None) -> Params:
+    """Host-level robust FedAvg (loop engine's aggregation events): stack
+    the client list and dispatch through `core.robust` — exactly the
+    stacked engine's defended operator, so the engines share one defense
+    implementation (DESIGN.md §8)."""
+    if defense in ("none", None):
+        return fedavg(client_params, weights)
+    from repro.core import robust
+    from repro.core.engine import stack_forest
+    return robust.robust_aggregate_stacked(
+        stack_forest(list(client_params)), defense, weights=weights,
+        f=f, tau=tau, center=center)
+
+
+def hfl_aggregate(client_params: List[Params], groups: List[List[int]],
+                  weights: Optional[Sequence[float]] = None, *,
+                  defense: str = "none", f: int = 1, tau: float = 10.0,
+                  centers: Optional[List[Params]] = None) -> Params:
+    """Two-tier FedAvg: per-group aggregate, then global over group models,
+    weighted by group sample counts. A defense applies at tier 1 — the
+    group server is the first aggregation boundary Byzantine clients hit;
+    tier 2 averages group SERVER models, which the threat model trusts
+    (DESIGN.md §8). `centers` (per-group round-start models) feed
+    norm_clip; `f` is the per-group Byzantine allowance."""
+    w = (np.ones(len(client_params)) if weights is None
+         else np.asarray(weights, np.float64))
+    group_models, group_w = [], []
+    for gi, g in enumerate(groups):
+        group_models.append(defended_fedavg(
+            [client_params[c] for c in g], weights=[w[c] for c in g],
+            defense=defense, f=f, tau=tau,
+            center=None if centers is None else centers[gi]))
+        group_w.append(sum(w[c] for c in g))
+    return fedavg(group_models, weights=group_w)
+
+
+def afl_aggregate(client_params: List[Params], participants: Sequence[int],
+                  weights: Optional[Sequence[float]] = None) -> Params:
+    """FedAvg over the sampled participant subset (paper's AFL round)."""
+    w = (np.ones(len(client_params)) if weights is None
+         else np.asarray(weights, np.float64))
+    return fedavg([client_params[c] for c in participants],
+                  weights=[w[c] for c in participants])
+
+
+def gossip_round(client_params: List[Params],
+                 neighbors: List[List[int]], *,
+                 defense: str = "none", f: int = 1) -> List[Params]:
+    """One synchronous gossip exchange: every client averages with its
+    ring neighbors — or, defended, takes the coordinate-wise median /
+    trimmed mean of its neighborhood (each honest node bounds what a
+    Byzantine neighbor can inject; norm_clip/krum don't apply to the
+    tiny neighborhood sets). Returns the new per-client model list."""
+    out = []
+    for c, nbrs in enumerate(neighbors):
+        members = [client_params[c]] + [client_params[j] for j in nbrs]
+        out.append(defended_fedavg(members, defense=defense, f=f))
+    return out
+
+
+def cfl_merge(global_params: Params, client_params: Params,
+              alpha: float) -> Params:
+    """Continual merge: theta_g <- (1-alpha) theta_g + alpha theta_c."""
+    return jax.tree.map(
+        lambda g, c: ((1.0 - alpha) * g.astype(jnp.float32)
+                      + alpha * c.astype(jnp.float32)).astype(g.dtype),
+        global_params, client_params)
+
+
+# ===========================================================================
+# stacked-array operators — the vectorized engine's aggregation events
+# ===========================================================================
+# These operate on ONE pytree whose leaves carry a leading client axis
+# (core/engine.py). Every weighted reduction lowers onto the Pallas
+# `fedavg_agg` kernel through the ravel path in kernels/ops.py (interpret
+# mode on CPU, native on TPU); gossip is a dense mixing matmul (each
+# output row mixes several inputs — not a single weighted reduction).
+
+
+def _stacked_weights(n: int, weights) -> jnp.ndarray:
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    return w / jnp.sum(w)
+
+
+def fedavg_stacked(stacked: Params, weights=None, *,
+                   interpret=None) -> Params:
+    """Kernel-backed Eq. (5) over a stacked federation -> single pytree."""
+    from repro.kernels import ops as kops
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    return kops.fedavg_aggregate_stacked(
+        stacked, _stacked_weights(n, weights), interpret=interpret)
+
+
+def defended_aggregate_stacked(stacked: Params, weights=None, *,
+                               defense: str = "none", f: int = 1,
+                               tau: float = 10.0, center=None,
+                               interpret=None) -> Params:
+    """One defended aggregation event on the stack: plain kernel FedAvg
+    when `defense` is "none", else the `core.robust` operator family
+    (median / trimmed-mean selection kernel, norm_clip with `center`,
+    Krum). The single dispatch point every strategy's robust variant
+    funnels through."""
+    if defense in ("none", None):
+        return fedavg_stacked(stacked, weights, interpret=interpret)
+    from repro.core import robust
+    return robust.robust_aggregate_stacked(
+        stacked, defense, weights=weights, f=f, tau=tau, center=center,
+        interpret=interpret)
+
+
+def hfl_tier1_stacked(stacked: Params, num_groups: int, weights=None, *,
+                      defense: str = "none", f: int = 1, tau: float = 10.0,
+                      centers: Params = None, interpret=None):
+    """Group-server aggregation over the contiguous equal-size groups of
+    `topology.hierarchical_groups`: (C, ...) -> ((G, ...) group models,
+    (G,) group sample-weight totals) — one kernel call per group.
+
+    A defense applies here, at the first aggregation boundary Byzantine
+    clients reach (DESIGN.md §8): each group server robust-aggregates its
+    own slice. `centers` is the (G, ...) stacked round-start group models
+    (norm_clip's reference); `f` is the per-group Byzantine allowance."""
+    from repro.core import robust
+    from repro.kernels import ops as kops
+    mat = kops.stacked_ravel(stacked)
+    C = mat.shape[0]
+    if C % num_groups:
+        raise ValueError(f"{C} clients not divisible into {num_groups} groups")
+    per = C // num_groups
+    w = (jnp.ones((C,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    center_rows = (kops.stacked_ravel(centers) if centers is not None
+                   else None)
+    rows, totals = [], []
+    for g in range(num_groups):
+        wg = w[g * per:(g + 1) * per]
+        gmat = mat[g * per:(g + 1) * per]
+        if defense in ("none", None):
+            rows.append(kops.fedavg_aggregate(gmat, wg / jnp.sum(wg),
+                                              interpret=interpret))
+        else:
+            rows.append(robust.robust_aggregate(
+                gmat, defense, weights=wg, f=f, tau=tau,
+                center=None if center_rows is None else center_rows[g],
+                interpret=interpret))
+        totals.append(jnp.sum(wg))
+    return (kops.stacked_unravel(stacked, jnp.stack(rows)),
+            jnp.stack(totals))
+
+
+def hfl_aggregate_stacked(stacked: Params, num_groups: int, weights=None, *,
+                          defense: str = "none", f: int = 1,
+                          tau: float = 10.0, centers: Params = None,
+                          interpret=None) -> Params:
+    """Two-tier HFL on the stack: tier-1 group kernels (optionally
+    defended), tier-2 kernel over the (G, ...) group models weighted by
+    group totals (group servers are trusted — DESIGN.md §8)."""
+    groups, gw = hfl_tier1_stacked(stacked, num_groups, weights,
+                                   defense=defense, f=f, tau=tau,
+                                   centers=centers, interpret=interpret)
+    return fedavg_stacked(groups, gw, interpret=interpret)
+
+
+def afl_aggregate_stacked(stacked: Params, weights=None, participate=None, *,
+                          interpret=None) -> Params:
+    """Masked FedAvg over sampled participants: `participate` is a (C,)
+    0/1 mask folded into the kernel weights (non-participants contribute
+    zero; at least one participant required)."""
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    if participate is not None:
+        w = w * jnp.asarray(participate, jnp.float32)
+    return fedavg_stacked(stacked, w, interpret=interpret)
+
+
+def gossip_stacked(stacked: Params, neighbors: List[List[int]], *,
+                   defense: str = "none", f: int = 1) -> Params:
+    """Synchronous ring gossip on the stack. Undefended: a (C, C)
+    row-stochastic mixing matrix (self + neighbors, uniform) applied to
+    the raveled parameter matrix — matches host `gossip_round` exactly.
+
+    Defended (median / trimmed_mean): each client takes the trimmed mean
+    of its gathered neighborhood instead. That is no longer a linear
+    mixing (selection per coordinate per neighborhood), so it runs as one
+    batched sort over the (C, K, N) gathered tensor rather than the
+    selection kernel — neighborhoods are tiny (K = degree + 1), the
+    client axis provides the parallelism. Matches the defended host
+    `gossip_round` exactly (equal-size ring neighborhoods)."""
+    from repro.kernels import ops as kops
+    mat = kops.stacked_ravel(stacked)
+    C = mat.shape[0]
+    if defense in ("none", None):
+        mix = np.zeros((C, C), np.float32)
+        for c, nbrs in enumerate(neighbors):
+            members = [c] + list(nbrs)
+            mix[c, members] = 1.0 / len(members)
+        return kops.stacked_unravel(stacked, jnp.asarray(mix) @ mat)
+    if defense not in ("median", "trimmed_mean"):
+        raise ValueError(f"gossip mixing supports median/trimmed_mean "
+                         f"defenses, not {defense!r} (DESIGN.md §8)")
+    sizes = {len(n) for n in neighbors}
+    if len(sizes) != 1:
+        raise ValueError("defended gossip needs equal-size neighborhoods "
+                         "(ring topology)")
+    K = sizes.pop() + 1
+    idx = np.stack([np.asarray([c] + list(nbrs))
+                    for c, nbrs in enumerate(neighbors)])       # (C, K)
+    gathered = jnp.sort(mat[jnp.asarray(idx)], axis=1)          # (C, K, N)
+    t = (K - 1) // 2 if defense == "median" else min(f, (K - 1) // 2)
+    mixed = jnp.mean(gathered[:, t:K - t], axis=1)
+    return kops.stacked_unravel(stacked, mixed)
+
+
+def cfl_merge_stacked(global_params: Params, client_params: Params,
+                      alpha, *, interpret=None) -> Params:
+    """Continual merge as a C=2 kernel reduction with weights
+    (1-alpha, alpha) — same math as host `cfl_merge`, kernel-routed.
+    Traceable (alpha may be a tracer), so it composes with lax.scan."""
+    stacked = jax.tree.map(lambda g, c: jnp.stack([g, c]),
+                           global_params, client_params)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    return fedavg_stacked(stacked, jnp.stack([1.0 - alpha, alpha]),
+                          interpret=interpret)
+
+
+def defended_cfl_merge(global_params: Params, client_params: Params,
+                       alpha, tau: float, *, interpret=None) -> Params:
+    """norm_clip-defended continual merge: the arriving update's delta is
+    L2-clipped against the current global model before the EMA fold — the
+    only defense available at a redundancy-1 merge event (DESIGN.md §8).
+    Traceable (used inside the vectorized CFL scan); the loop engine
+    applies the identical clip before its host `cfl_merge`."""
+    from repro.core import robust
+    clipped = robust.clip_deltas_stacked(
+        global_params, jax.tree.map(lambda l: l[None], client_params), tau)
+    return cfl_merge_stacked(global_params,
+                             jax.tree.map(lambda l: l[0], clipped),
+                             alpha, interpret=interpret)
+
+
+def staleness_batch_weights(alphas) -> jnp.ndarray:
+    """Weights that make ONE weighted reduction equal k SEQUENTIAL
+    continual merges with rates alphas[0..k-1] (in that order):
+
+        theta <- (1-a_i) theta + a_i theta_i   for i = 0..k-1
+
+    composes to  theta * prod_j (1-a_j)
+                 + sum_i theta_i * a_i * prod_{j>i} (1-a_j),
+
+    so the returned (k+1,) vector is [prod(1-a), a_0*suffix_0, ...,
+    a_{k-1}*1] with suffix_i = prod_{j>i}(1-a_j). The entries telescope
+    to sum exactly 1 — no renormalization needed (DESIGN.md §5)."""
+    a = jnp.asarray(alphas, jnp.float32)
+    keep = jnp.cumprod((1.0 - a)[::-1])[::-1]         # prod_{j>=i}(1-a_j)
+    suffix = jnp.concatenate([keep[1:], jnp.ones((1,), jnp.float32)])
+    return jnp.concatenate([keep[:1], a * suffix])
+
+
+def async_batch_merge(global_params: Params, stacked_updates: Params,
+                      alphas, *, interpret=None) -> Params:
+    """Batched staleness-aware merge: fold k same-tick client arrivals
+    (leading axis k, per-arrival rates `alphas`) into the server model in
+    one kernel pass — exactly equivalent to k sequential `cfl_merge`
+    calls (tests/test_async_engine.py pins the equivalence)."""
+    from repro.kernels import ops as kops
+    return kops.merge_aggregate_stacked(
+        global_params, stacked_updates, staleness_batch_weights(alphas),
+        interpret=interpret)
+
+
+# ===========================================================================
+# mesh-level (inside shard_map) operators — pod-scale FL
+# ===========================================================================
+
+def _axis_size(name: str) -> int:
+    """Static mesh-axis size inside shard_map — `jax.lax.axis_size` on new
+    jax, `jax.core.axis_frame` (which returns the size) on 0.4.x."""
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(name))
+    return int(jax.core.axis_frame(name))
+
+
+def _wavg_psum(params, weight, axes):
+    """Weighted mean over mesh axes: psum(w*theta)/psum(w)."""
+    total_w = jax.lax.psum(weight, axes)
+    return jax.tree.map(
+        lambda p: (jax.lax.psum(p.astype(jnp.float32) * weight, axes)
+                   / total_w).astype(p.dtype),
+        params)
+
+
+def mesh_hfl(params, weight, *, client_axis="data",
+             num_groups: int = 2, pod_axis: Optional[str] = None):
+    """Two-tier hierarchical aggregation.
+
+    Single-pod: tier 1 over `axis_index_groups` partitions of the client
+    axis, tier 2 over the full client axis. Multi-pod: tier 1 over the
+    intra-pod client axis, tier 2 over the pod axis — the exact
+    clients -> group-server -> global-server schedule of paper Fig. 1.
+    """
+    if pod_axis is not None:
+        group = _wavg_psum(params, weight, client_axis)          # tier 1
+        gw = jax.lax.psum(weight, client_axis)
+        return jax.tree.map(                                      # tier 2
+            lambda p: (jax.lax.psum(p.astype(jnp.float32) * gw, pod_axis)
+                       / jax.lax.psum(gw, pod_axis)).astype(p.dtype),
+            group)
+
+    axis_size = _axis_size(client_axis)
+    groups = topology.mesh_axis_groups(axis_size, num_groups)
+    # tier 1: group-server aggregate — partial collectives over the
+    # axis_index_groups partition where the backend supports them, else a
+    # one-hot-masked full psum: every device contributes its weighted
+    # params into its group's slot of a (G, ...) expansion, the full-axis
+    # psum produces all G group sums at once, and each device reads back
+    # its own group's row (identical math, 0.4.x-shard_map portable).
+    try:
+        gw = jax.lax.psum(weight, client_axis, axis_index_groups=groups)
+        group = jax.tree.map(
+            lambda p: (jax.lax.psum(p.astype(jnp.float32) * weight,
+                                    client_axis, axis_index_groups=groups)
+                       / gw).astype(p.dtype),
+            params)
+    except NotImplementedError:
+        per = axis_size // num_groups
+        idx = jax.lax.axis_index(client_axis)
+        onehot = (jnp.arange(num_groups) == idx // per).astype(jnp.float32)
+        gw = jnp.tensordot(onehot,
+                           jax.lax.psum(onehot * weight, client_axis), axes=1)
+
+        def tier1(p):
+            e = (onehot.reshape((num_groups,) + (1,) * p.ndim)
+                 * (p.astype(jnp.float32) * weight))
+            return (jnp.tensordot(onehot, jax.lax.psum(e, client_axis),
+                                  axes=1) / gw).astype(p.dtype)
+
+        group = jax.tree.map(tier1, params)
+    # tier 2: global-server aggregate over group models. Each group model
+    # is replicated across its (equal-size) group, so the gw-weighted sum
+    # over the full axis overcounts numerator AND denominator by exactly
+    # the group size — the factors cancel and this is the correct
+    # group-weight-weighted mean (pinned against host `hfl_aggregate` in
+    # test_fl_mesh_dryrun.py::test_mesh_hfl_matches_host).
+    return jax.tree.map(
+        lambda p: (jax.lax.psum(p.astype(jnp.float32) * gw, client_axis)
+                   / jax.lax.psum(gw, client_axis) ).astype(p.dtype),
+        group)
+
+
+def mesh_afl_fedavg(params, weight, participate, *, client_axis="data",
+                    pod_axis: Optional[str] = None):
+    """Masked FedAvg over sampled participants. Non-participants keep the
+    aggregate too (they would fetch it lazily in a real deployment; at pod
+    scale every device holds the consensus model after the collective)."""
+    axes = (client_axis,) if pod_axis is None else (client_axis, pod_axis)
+    m = participate.astype(jnp.float32) * weight
+    return _wavg_psum(params, m, axes)
+
+
+def mesh_afl_gossip(params, *, client_axis="data", steps: int = 1):
+    """Ring gossip: each client averages with its +-1 ring neighbors via
+    collective_permute — O(2 * |params|) link traffic per step, no global
+    collective. Iterating converges to the consensus mean."""
+    n = _axis_size(client_axis)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+
+    def one_step(p):
+        def mix(x):
+            x32 = x.astype(jnp.float32)
+            left = jax.lax.ppermute(x32, client_axis, perm=fwd)
+            right = jax.lax.ppermute(x32, client_axis, perm=bwd)
+            return ((x32 + left + right) / 3.0).astype(x.dtype)
+        return jax.tree.map(mix, p)
+
+    for _ in range(steps):
+        params = one_step(params)
+    return params
+
+
+def mesh_cfl(params, global_params, weight, alpha, *, client_axis="data",
+             pod_axis: Optional[str] = None):
+    """Continual merge at pod scale: the federation mean is folded into
+    each client's evolving model with rate alpha (EMA of the consensus),
+    and the running global model is updated likewise. Returns
+    (new_client_params, new_global_params)."""
+    axes = (client_axis,) if pod_axis is None else (client_axis, pod_axis)
+    mean = _wavg_psum(params, weight, axes)
+    new_global = jax.tree.map(
+        lambda g, m: ((1 - alpha) * g.astype(jnp.float32)
+                      + alpha * m.astype(jnp.float32)).astype(g.dtype),
+        global_params, mean)
+    new_client = jax.tree.map(
+        lambda c, g: ((1 - alpha) * c.astype(jnp.float32)
+                      + alpha * g.astype(jnp.float32)).astype(c.dtype),
+        params, new_global)
+    return new_client, new_global

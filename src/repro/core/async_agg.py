@@ -1,5 +1,4 @@
-"""Staleness-aware asynchronous aggregation — the paper's future-work
-direction 2 ("Heterogeneity and Scalability").
+"""Staleness-aware asynchronous aggregation — async as a Strategy plugin.
 
 Heterogeneous clients finish local training at different times. Instead
 of synchronous rounds (stragglers stall everyone), the server merges each
@@ -12,36 +11,36 @@ arriving update immediately, down-weighted by its staleness:
 Xie et al. 2019 polynomial staleness). This composes with the paper's CFL
 (it *is* CFL's continual merge with a staleness-adaptive alpha).
 
-`AsyncSimulation` models heterogeneity with per-client speed models, a
-participation sampler, and a dropout process over an event timeline —
-build time becomes the makespan of the slowest surviving path, not
-sum-of-rounds, which is the scalability argument the paper gestures at.
-
 Tick-batch protocol (DESIGN.md §5): arrivals are grouped by (optionally
-tick-quantized) finish time. All clients in a batch train from the model
-at batch start and their updates merge in arrival order. The protocol is
-engine-independent host logic; the two engines differ only in how a batch
-executes:
+tick-quantized) finish time into batches; all clients in a batch train
+from the model at batch start and their updates merge in arrival order.
+The timeline is pure host logic, identical for both engines.
 
-* "loop"       — per-client jit dispatch via `sim._local_train`, one
-                 `cfl_merge` host call per arrival (paper-faithful
-                 per-device timing surface).
-* "vectorized" — the batch trains as ONE stacked vmap-of-scan dispatch
-                 (core/engine.py) and merges through ONE kernel-backed
-                 weighted reduction (`strategies.async_batch_merge`, a
-                 weighted variant of the fedavg ravel path) whose
-                 composed weights reproduce the sequential merges
-                 exactly, so the engines agree to float tolerance.
+Since PR 4 the protocol is expressed as `AsyncStrategy` — a plugin on
+the generic round driver (`core/strategies.py` protocol, DESIGN.md §9):
+each tick batch is one aggregation event; `select_participants` walks
+the precomputed timeline and computes per-arrival staleness rates; the
+merge is ONE kernel-backed weighted reduction
+(`aggregation.async_batch_merge`) whose composed weights reproduce the
+sequential FedAsync folds exactly, under BOTH engines. Heterogeneity =
+named speed models (`make_speeds`), participation sampling, and a
+dropout process over the precomputed arrival timeline.
+
+`AsyncSimulation` remains as a thin deprecated wrapper over the
+strategy (legacy surface; emits DeprecationWarning).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import strategies, topology
-from repro.core.metrics import Timer, classification_metrics
+from repro.core import aggregation as agg
+from repro.core import strategies as strat_mod
+from repro.core import topology
+from repro.core.strategies import RoundPlan
 
 
 def staleness_alpha(alpha: float, staleness: int, decay: float = 0.5
@@ -80,6 +79,255 @@ def make_speeds(model: str, num_clients: int, rng: np.random.Generator, *,
     return s
 
 
+# ---------------------------------------------------------------------------
+# timeline (schedule-rng half of the DESIGN.md §4 parity contract)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AsyncTimeline:
+    """The full precomputed arrival schedule of one async run."""
+    speeds: np.ndarray
+    participants: Tuple[int, ...]
+    n_updates: np.ndarray
+    dropped_clients: Tuple[int, ...]
+    batches: List[Tuple[float, List[int]]]   # [(time, [client, ...]), ...]
+
+
+def build_timeline(num_clients: int, seed: int, *, speeds=None,
+                   speed_model: str = "lognormal",
+                   participation: float = 1.0, dropout: float = 0.0,
+                   updates_per_client: int = 4,
+                   tick: float = 0.0) -> AsyncTimeline:
+    """Schedule rng consumed in a fixed order (speeds, participation,
+    dropout) so two runs with the same seed build the same timeline
+    regardless of engine. Client c's k-th arrival lands at the
+    (tick-quantized) cumulative time of k+1 local rounds; dropped
+    clients stop producing arrivals after their rng-chosen failure
+    point (at least one participant always survives)."""
+    rng = np.random.default_rng(seed)
+    speeds = (np.asarray(speeds, float) if speeds is not None
+              else make_speeds(speed_model, num_clients, rng))
+    parts = topology.sample_participants(rng, num_clients, participation)
+    participants = tuple(int(c) for c in parts)
+    n_updates = np.zeros(num_clients, int)
+    n_updates[list(participants)] = updates_per_client
+    dropped: Tuple[int, ...] = ()
+    if dropout > 0 and len(participants) > 1:
+        n_drop = min(int(round(dropout * len(participants))),
+                     len(participants) - 1)
+        if n_drop:
+            victims = rng.choice(np.asarray(participants), n_drop,
+                                 replace=False)
+            n_updates[victims] = rng.integers(0, updates_per_client,
+                                              size=n_drop)
+            dropped = tuple(int(v) for v in np.sort(victims))
+
+    def _quantize(t: float) -> float:
+        if tick <= 0:
+            return t
+        return float(np.ceil(round(t / tick, 9)) * tick)
+
+    arrivals: Dict[float, List[int]] = {}
+    for c in range(num_clients):
+        t = 0.0
+        for _ in range(int(n_updates[c])):
+            t = _quantize(t + float(speeds[c]))
+            arrivals.setdefault(t, []).append(c)
+    batches = [(t, sorted(arrivals[t])) for t in sorted(arrivals)]
+    return AsyncTimeline(speeds, participants, n_updates, dropped, batches)
+
+
+# ---------------------------------------------------------------------------
+# async as a Strategy plugin
+# ---------------------------------------------------------------------------
+
+@strat_mod.register_strategy
+class AsyncStrategy(strat_mod.Strategy):
+    """Event-driven async FL on the generic round driver: one aggregation
+    event per tick batch. `select_participants` consumes the timeline and
+    derives per-arrival staleness rates; `aggregate_event` folds the
+    batch through the kernel-backed `async_batch_merge` (algebraically
+    equal to the sequential FedAsync merges — DESIGN.md §5) after the
+    optional norm_clip of each arriving delta. Build time is the
+    makespan-shaped sum over batches; per-batch curve tracking is off so
+    the timing surface stays the merge path, not test-set evals.
+
+    Configuration comes from the FLConfig async fields
+    (`staleness_alpha/decay`, `updates_per_client`, `speed_model`,
+    `dropout`, `tick`, plus `participation`), each overridable per
+    instance (the deprecated `AsyncSimulation` wrapper and plugin users
+    pass overrides directly)."""
+
+    name = "async"
+    topologies = ("event",)
+    defenses = {"event": ("none", "norm_clip")}
+    track_curves = False
+    mean_train_acc_over_events = True
+    timeline_result = True
+
+    def __init__(self, fl, *, alpha=None, decay=None, speeds=None,
+                 updates_per_client=None, speed_model=None,
+                 participation=None, dropout=None, tick=None):
+        super().__init__(fl)
+        pick = lambda v, d: d if v is None else v
+        self.alpha = pick(alpha, fl.staleness_alpha)
+        self.decay = pick(decay, fl.staleness_decay)
+        self.timeline = build_timeline(
+            fl.num_clients, fl.seed, speeds=speeds,
+            speed_model=pick(speed_model, fl.speed_model),
+            participation=pick(participation, fl.participation),
+            dropout=pick(dropout, fl.dropout),
+            updates_per_client=pick(updates_per_client,
+                                    fl.updates_per_client),
+            tick=pick(tick, fl.tick))
+
+    def init_state(self, sim):
+        return {"model": sim.init_params, "server_step": 0,
+                "base_version": np.zeros(self.fl.num_clients, int),
+                "staleness": [], "makespan": 0.0}
+
+    def num_events(self, sim) -> int:
+        return len(self.timeline.batches)
+
+    def select_participants(self, sim, state, event, rng):
+        t, clients = self.timeline.batches[event]
+        taus = [state["server_step"] + i - int(state["base_version"][c])
+                for i, c in enumerate(clients)]
+        plan = RoundPlan(list(clients),
+                         [state["model"]] * len(clients), event,
+                         alphas=[staleness_alpha(self.alpha, tau,
+                                                 self.decay)
+                                 for tau in taus])
+        plan.meta["taus"] = taus
+        plan.meta["time"] = t
+        from repro.core import engine as engine_mod
+        model, k = state["model"], len(clients)
+        plan.meta["bases_stacked_fn"] = (
+            lambda: engine_mod.replicate_tree(model, k))
+        return plan
+
+    def aggregate_event(self, sim, state, plan, uploads):
+        fl = self.fl
+        model = state["model"]
+        if fl.defense == "norm_clip":
+            # every arriving delta is clipped against the batch-start
+            # model BEFORE the staleness merge — the batched-merge weight
+            # algebra (and thus engine parity) stays untouched
+            from repro.core import robust
+            uploads = robust.clip_deltas_stacked(model, uploads,
+                                                 fl.clip_tau)
+        model = agg.async_batch_merge(
+            model, uploads, np.asarray(plan.alphas, np.float32))
+        state["model"] = model
+        state["server_step"] += len(plan.participants)
+        # the batch is atomic: every member pulls the post-batch model
+        state["base_version"][plan.participants] = state["server_step"]
+        state["staleness"].extend(plan.meta["taus"])
+        state["makespan"] = plan.meta["time"]
+        return state
+
+    def round_model(self, state):
+        return state["model"]
+
+    def served_fn(self, sim, state):
+        model = state["model"]        # continually-merged: serving-ready
+        return lambda: model
+
+    def extra_result(self, sim, state):
+        tl = self.timeline
+        return {"merges": state["server_step"],
+                "batches": len(tl.batches),
+                "mean_staleness": (float(np.mean(state["staleness"]))
+                                   if state["staleness"] else 0.0),
+                "makespan": state["makespan"],
+                "dropped_clients": list(tl.dropped_clients),
+                "participants": list(tl.participants),
+                "final_model": state["model"]}
+
+    # -- warmup -------------------------------------------------------------
+    def warmup(self, sim):
+        """Compile every program the timed loop will dispatch: the
+        train/eval jits and, vectorized, one dry batch per DISTINCT batch
+        size with a throwaway rng (shapes are what matter; `sim.rng` is
+        untouched)."""
+        fl = self.fl
+        if sim.vec is None:
+            import jax.numpy as jnp
+
+            from repro.core import engine as engine_mod
+            from repro.core.simulation import _batched, _predict, _sgd_epoch
+            sim.warmup_loop(self)
+            # the loop engine merges through the same kernel-backed
+            # batched reduction as the vectorized engine (PR 4): compile
+            # it (plus corruption/clip) for every DISTINCT batch size
+            from repro.core import attacks
+            for k in sorted({len(cs) for _, cs in self.timeline.batches}):
+                stacked = engine_mod.replicate_tree(sim.init_params, k)
+                if fl.attack not in ("none", "label_flip"):
+                    attacks.corrupt_stacked(
+                        stacked, stacked, np.ones(k, bool),
+                        attacks.client_keys(
+                            attacks.event_key(fl.seed, 0), list(range(k))),
+                        kind=fl.attack, scale=fl.attack_scale)
+                if fl.defense == "norm_clip":
+                    from repro.core import robust
+                    robust.clip_deltas_stacked(sim.init_params, stacked,
+                                               fl.clip_tau)
+                agg.async_batch_merge(sim.init_params, stacked,
+                                      np.full(k, self.alpha, np.float32))
+            # warmup_loop compiles a fixed 2-batch epoch and client 0's
+            # eval shape; also compile the ACTUAL per-shard epoch and
+            # local-eval shapes the timed _local_train calls dispatch
+            # (shards may be uneven), so build time never includes XLA
+            # compile
+            rng = np.random.default_rng(0)
+            B = fl.local_batch_size
+            done_nb, done_eval = set(), set()
+            for c in np.nonzero(self.timeline.n_updates)[0]:
+                x, y = sim.client_data[c]
+                nb = len(x) // B
+                if nb not in done_nb:
+                    done_nb.add(nb)
+                    data = _batched(x, y, B, rng)
+                    _sgd_epoch(sim.init_params,
+                               sim.opt.init(sim.init_params), data,
+                               (fl.lr, fl.momentum))
+                n_eval = min(len(x), 512)
+                if n_eval not in done_eval:
+                    done_eval.add(n_eval)
+                    _predict(sim.init_params, jnp.asarray(x[:n_eval]))
+            return
+        sim._warmup_predicts()
+        from repro.core import attacks
+        from repro.core import engine as engine_mod
+        eng = sim.vec
+        rng = np.random.default_rng(0)
+        for k in sorted({len(cs) for _, cs in self.timeline.batches}):
+            clients = list(range(k))
+            data = eng.batched_clients(rng, clients, fl.local_epochs)
+            stacked = engine_mod.replicate_tree(sim.init_params, k)
+            stacked, _, _ = eng.train(stacked, data)
+            eng.local_accs(stacked, clients)
+            if fl.attack not in ("none", "label_flip"):
+                # all-flags-on so the corruption program compiles even
+                # when the dry client ids aren't attackers
+                attacks.corrupt_stacked(
+                    stacked, stacked, np.ones(k, bool),
+                    attacks.client_keys(attacks.event_key(fl.seed, 0),
+                                        clients),
+                    kind=fl.attack, scale=fl.attack_scale)
+            if fl.defense == "norm_clip":
+                from repro.core import robust
+                robust.clip_deltas_stacked(sim.init_params, stacked,
+                                           fl.clip_tau)
+            agg.async_batch_merge(sim.init_params, stacked,
+                                  np.full(k, self.alpha, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# deprecated legacy surface
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass
 class AsyncResult:
     test_accuracy: float
@@ -99,235 +347,67 @@ class AsyncResult:
 
 
 class AsyncSimulation:
-    """Event-driven async FL over the same client substrate as
-    `FederatedSimulation` (reuses its local-training machinery).
-
-    Heterogeneity knobs:
-      speeds / speed_model — per-client step times (see `make_speeds`).
-      participation        — fraction of clients sampled into the run
-                             (at-least-one floor, like AFL rounds).
-      dropout              — fraction of *participants* that fail at an
-                             rng-chosen point in their update sequence
-                             (possibly before contributing anything); at
-                             least one participant always survives.
-      tick                 — arrival-time quantization grid (0 = exact
-                             float collisions only). Bigger ticks mean
-                             bigger same-tick batches.
-      engine               — "loop" | "vectorized" | None (inherit the
-                             wrapped simulation's `fl.engine`).
-    """
+    """DEPRECATED wrapper: event-driven async FL over a
+    `FederatedSimulation`'s client substrate. Use
+    `FLConfig(strategy="async", ...)` (or `repro.api.run_scenario` with
+    an async scenario) instead — the run path is `AsyncStrategy` on the
+    generic round driver either way; this class only adapts the legacy
+    constructor/`AsyncResult` surface."""
 
     def __init__(self, sync_sim, alpha=0.6, decay=0.5, speeds=None,
                  updates_per_client=4, *, speed_model="lognormal",
                  participation=1.0, dropout=0.0, tick=0.0,
                  engine: Optional[str] = None):
-        self.sim = sync_sim              # a FederatedSimulation
-        self.alpha = alpha
-        self.decay = decay
-        self.updates_per_client = updates_per_client
-        self.tick = tick
+        warnings.warn(
+            "AsyncSimulation is deprecated: async is a Strategy plugin "
+            "now — use FLConfig(strategy='async') or repro.api "
+            "(run_scenario / FederatedSimulation)",
+            DeprecationWarning, stacklevel=2)
         self.engine = engine if engine is not None else sync_sim.fl.engine
         if self.engine not in ("loop", "vectorized"):
             raise ValueError(f"unknown engine {self.engine!r} "
                              f"(expected 'loop' or 'vectorized')")
-        C = sync_sim.fl.num_clients
-        # Schedule rng: consumed in a fixed order (speeds, participation,
-        # dropout) so two instances with the same seed build the same
-        # timeline regardless of engine — the parity contract's first half
-        # (DESIGN.md §4).
-        rng = np.random.default_rng(sync_sim.fl.seed)
-        self.speeds = (np.asarray(speeds, float) if speeds is not None
-                       else make_speeds(speed_model, C, rng))
-        parts = topology.sample_participants(rng, C, participation)
-        self.participants = tuple(int(c) for c in parts)
-        self.n_updates = np.zeros(C, int)
-        self.n_updates[list(self.participants)] = updates_per_client
-        dropped: Tuple[int, ...] = ()
-        if dropout > 0 and len(self.participants) > 1:
-            n_drop = min(int(round(dropout * len(self.participants))),
-                         len(self.participants) - 1)
-            if n_drop:
-                victims = rng.choice(np.asarray(self.participants), n_drop,
-                                     replace=False)
-                self.n_updates[victims] = rng.integers(
-                    0, updates_per_client, size=n_drop)
-                dropped = tuple(int(v) for v in np.sort(victims))
-        self.dropped_clients = dropped
-
-    # -- schedule -----------------------------------------------------------
-    def _quantize(self, t: float) -> float:
-        if self.tick <= 0:
-            return t
-        return float(np.ceil(round(t / self.tick, 9)) * self.tick)
+        self.sim = sync_sim
+        self.strategy = AsyncStrategy(
+            sync_sim.fl, alpha=alpha, decay=decay, speeds=speeds,
+            updates_per_client=updates_per_client, speed_model=speed_model,
+            participation=participation, dropout=dropout, tick=tick)
+        tl = self.strategy.timeline
+        self.speeds = tl.speeds
+        self.participants = tl.participants
+        self.n_updates = tl.n_updates
+        self.dropped_clients = tl.dropped_clients
+        self.alpha, self.decay, self.tick = alpha, decay, tick
+        self.updates_per_client = updates_per_client
 
     def schedule(self) -> List[Tuple[float, List[int]]]:
-        """The full arrival timeline, grouped into same-tick batches:
-        [(time, [client, ...]), ...] in time order, clients id-sorted
-        within a batch. Client c's k-th arrival lands at the (quantized)
-        cumulative time of k+1 local rounds; dropped clients simply stop
-        producing arrivals after their failure point."""
-        arrivals: Dict[float, List[int]] = {}
-        for c in range(self.sim.fl.num_clients):
-            t = 0.0
-            for _ in range(int(self.n_updates[c])):
-                t = self._quantize(t + float(self.speeds[c]))
-                arrivals.setdefault(t, []).append(c)
-        return [(t, sorted(arrivals[t])) for t in sorted(arrivals)]
+        return [(t, list(cs)) for t, cs in self.strategy.timeline.batches]
 
-    # -- batch execution (the engine split) ---------------------------------
-    # Adversarial axis (DESIGN.md §8): attacker arrivals are corrupted
-    # against the batch-start model (the base every member pulled — the
-    # batch is atomic), keyed by (seed, batch index, absolute client id)
-    # so both engines inject identical corruption. The only defense at
-    # this low-redundancy merge event is norm_clip: every arriving delta
-    # is clipped against the batch-start model BEFORE the staleness
-    # merge, which leaves the batched-merge weight algebra (and thus
-    # engine parity) untouched — only the merged VALUES change.
-
-    def _train_batch_loop(self, model, clients: Sequence[int],
-                          alphas: Sequence[float], event: int):
-        sim = self.sim
-        base = model
-        locals_, accs = [], []
-        for c in clients:
-            p, _, acc = sim._local_train(model, c)
-            locals_.append(p)
-            accs.append(acc)
-        locals_ = sim._corrupt_clients(locals_, [base] * len(clients),
-                                       clients, event)
-        if sim.fl.defense == "norm_clip":
-            from repro.core import robust
-            locals_ = [robust.clip_update(base, p, sim.fl.clip_tau)
-                       for p in locals_]
-        for p, a in zip(locals_, alphas):
-            model = strategies.cfl_merge(model, p, a)
-        return model, accs
-
-    def _train_batch_vec(self, model, clients: Sequence[int],
-                         alphas: Sequence[float], event: int):
-        from repro.core import engine as engine_mod
-        sim = self.sim
-        eng = self._vec
-        data = eng.batched_clients(sim.rng, clients, sim.fl.local_epochs)
-        base = engine_mod.replicate_tree(model, len(clients))
-        stacked, _, _ = eng.train(base, data)
-        accs = eng.local_accs(stacked, clients)
-        stacked = sim._corrupt_stacked(stacked, base, clients, event)
-        if sim.fl.defense == "norm_clip":
-            from repro.core import robust
-            stacked = robust.clip_deltas_stacked(model, stacked,
-                                                 sim.fl.clip_tau)
-        model = strategies.async_batch_merge(model, stacked,
-                                             np.asarray(alphas, np.float32))
-        return model, list(accs)
-
-    # -- warmup -------------------------------------------------------------
-    def _warmup(self, batch_sizes: Sequence[int]):
-        """Compile every program the timed loop will dispatch: the
-        train/eval jits, and (vectorized) one dry batch per DISTINCT batch
-        size with a throwaway rng — shapes are what matter, `sim.rng` is
-        untouched."""
-        sim = self.sim
-        if self.engine == "loop":
-            import jax.numpy as jnp
-
-            from repro.core.simulation import _batched, _predict, _sgd_epoch
-            sim._warmup()
-            # sim._warmup compiles a fixed 2-batch epoch and client 0's
-            # eval shape; also compile the ACTUAL per-shard epoch and
-            # local-eval shape(s) the timed _local_train calls dispatch
-            # (shards may be uneven), so loop build time never includes
-            # XLA compile
-            rng = np.random.default_rng(0)
-            B = sim.fl.local_batch_size
-            done_nb, done_eval = set(), set()
-            for c in np.nonzero(self.n_updates)[0]:
-                x, y = sim.client_data[c]
-                nb = len(x) // B
-                # no skip for shapes sim._warmup may have covered: a
-                # duplicate dispatch is a jit cache hit, costing ~nothing
-                if nb not in done_nb:
-                    done_nb.add(nb)
-                    data = _batched(x, y, B, rng)
-                    _sgd_epoch(sim.init_params,
-                               sim.opt.init(sim.init_params), data,
-                               (sim.fl.lr, sim.fl.momentum))
-                n_eval = min(len(x), 512)
-                if n_eval not in done_eval:
-                    done_eval.add(n_eval)
-                    _predict(sim.init_params, jnp.asarray(x[:n_eval]))
-            return
-        sim._warmup_predicts()
-        from repro.core import attacks
-        from repro.core import engine as engine_mod
-        eng = self._vec
-        rng = np.random.default_rng(0)
-        for k in sorted(set(batch_sizes)):
-            clients = list(range(k))
-            data = eng.batched_clients(rng, clients, sim.fl.local_epochs)
-            stacked = engine_mod.replicate_tree(sim.init_params, k)
-            stacked, _, _ = eng.train(stacked, data)
-            eng.local_accs(stacked, clients)
-            if sim.fl.attack not in ("none", "label_flip"):
-                # all-flags-on so the corruption program compiles even
-                # when the dry client ids aren't attackers
-                attacks.corrupt_stacked(
-                    stacked, stacked, np.ones(k, bool),
-                    attacks.client_keys(attacks.event_key(sim.fl.seed, 0),
-                                        clients),
-                    kind=sim.fl.attack, scale=sim.fl.attack_scale)
-            strategies.async_batch_merge(
-                sim.init_params, stacked,
-                np.full(k, self.alpha, np.float32))
-
-    # -- driver -------------------------------------------------------------
     def run(self) -> AsyncResult:
         sim = self.sim
-        if self.engine == "vectorized":
+        prev_strategy, prev_vec = sim.strategy, sim.vec
+        if self.engine == "vectorized" and sim.vec is None:
             from repro.core import engine as engine_mod
-            self._vec = sim.vec or engine_mod.VectorizedClientEngine(
+            sim.vec = engine_mod.VectorizedClientEngine(
                 sim.fl, sim.client_data, sim.weights)
-        batches = self.schedule()
-        self._warmup([len(cs) for _, cs in batches])
-        run_batch = (self._train_batch_vec if self.engine == "vectorized"
-                     else self._train_batch_loop)
-
-        model = sim.init_params
-        server_step = 0
-        base_version = np.zeros(sim.fl.num_clients, int)
-        staleness_log: List[int] = []
-        acc_log: List[float] = []
-        t = 0.0
-        timer = Timer()
-        with timer:
-            for bi, (t, clients) in enumerate(batches):
-                taus = [server_step + i - int(base_version[c])
-                        for i, c in enumerate(clients)]
-                alphas = [staleness_alpha(self.alpha, tau, self.decay)
-                          for tau in taus]
-                model, accs = run_batch(model, clients, alphas, bi)
-                server_step += len(clients)
-                # the batch is atomic: every member pulls the post-batch
-                # model for its next local round
-                base_version[clients] = server_step
-                staleness_log.extend(taus)
-                acc_log.extend(float(a) for a in accs)
-        self.final_model = model
-
-        class_timer = Timer()
-        with class_timer:
-            preds = sim._eval(model)
-        y_true = sim.dataset["test"][1]
-        m = classification_metrics(y_true, preds, 10)
+        elif self.engine == "loop":
+            sim.vec = None
+        sim.strategy = self.strategy
+        try:
+            r = sim.run()
+        finally:
+            # the wrapped sim keeps its own engine/strategy state: this
+            # wrapper's engine override must not leak into later runs
+            sim.strategy, sim.vec = prev_strategy, prev_vec
+        self.final_model = r.extra.get("final_model")
+        e = r.extra
         return AsyncResult(
-            test_accuracy=m["accuracy"], merges=server_step,
-            mean_staleness=(float(np.mean(staleness_log))
-                            if staleness_log else 0.0),
-            makespan=t,
-            train_accuracy=(float(np.mean(acc_log)) if acc_log else 0.0),
-            batches=len(batches), build_time_s=timer.elapsed,
-            classification_time_s=class_timer.elapsed,
-            precision=m["precision"], recall=m["recall"], f1=m["f1"],
-            balanced_accuracy=m["balanced_accuracy"],
-            dropped_clients=self.dropped_clients,
-            participants=self.participants)
+            test_accuracy=r.test_accuracy, merges=e["merges"],
+            mean_staleness=e["mean_staleness"], makespan=e["makespan"],
+            train_accuracy=r.train_accuracy, batches=e["batches"],
+            build_time_s=r.build_time_s,
+            classification_time_s=r.classification_time_s,
+            precision=r.precision, recall=r.recall, f1=r.f1,
+            balanced_accuracy=r.balanced_accuracy,
+            dropped_clients=tuple(e["dropped_clients"]),
+            participants=tuple(e["participants"]))

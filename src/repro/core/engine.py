@@ -21,15 +21,15 @@ Pieces:
   makes loop/vectorized parity exact rather than statistical;
   DESIGN.md §4).
 
-Aggregation itself lives in `core/strategies.py` (stacked-array section)
-and lowers onto the Pallas `fedavg_agg` kernel via the ravel path in
+Aggregation itself lives in `core/aggregation.py` (stacked-array
+section) and lowers onto the Pallas `fedavg_agg` kernel via the ravel path in
 `kernels/ops.py`.
 
 Consumers: `FederatedSimulation`'s vectorized runners (synchronous
 rounds) and the heterogeneous async runtime (`core/async_agg.py`), whose
 tick batches train through `batched_clients`/`train` with an arbitrary
 client subset per dispatch and merge through the kernel-backed
-`strategies.async_batch_merge`.
+`aggregation.async_batch_merge`.
 """
 from __future__ import annotations
 
@@ -96,7 +96,8 @@ def _local_sgd_scan(params, data, opt, loss_fn):
 
 @functools.partial(jax.jit, static_argnames=("stacked_loss_fn", "lr",
                                              "momentum"))
-def train_clients(stacked_params, data, *, stacked_loss_fn, lr, momentum):
+def train_clients(stacked_params, data, *, stacked_loss_fn, lr, momentum,
+                  extra=None):
     """All clients' local training as ONE compiled scan over batches.
 
     data leaves: (C, T, B, ...) with T = local_epochs * batches_per_epoch.
@@ -109,6 +110,12 @@ def train_clients(stacked_params, data, *, stacked_loss_fn, lr, momentum):
     kernels lowers to C sequential convolutions on CPU and its backward
     pass dominates the round time ~40x.
 
+    `extra` (optional, traced) is passed through as the loss's third
+    argument — a Strategy's per-client loss context with a leading client
+    axis (FedProx: the (C, ...) round-start models its proximal term
+    references). The loss function object itself must stay stable across
+    rounds: it keys the jit cache.
+
     Returns (new stacked params, per-batch losses (C, T), accs (C, T))."""
     opt = optimizers.sgd(lr, momentum=momentum)
 
@@ -116,7 +123,10 @@ def train_clients(stacked_params, data, *, stacked_loss_fn, lr, momentum):
         params, opt_state = carry
 
         def total_loss(p):
-            loss_c, acc_c = stacked_loss_fn(p, batch)
+            if extra is None:
+                loss_c, acc_c = stacked_loss_fn(p, batch)
+            else:
+                loss_c, acc_c = stacked_loss_fn(p, batch, extra)
             return jnp.sum(loss_c), (loss_c, acc_c)
 
         (_, (loss_c, acc_c)), grads = jax.value_and_grad(
@@ -163,7 +173,7 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
     upload.
 
     Returns (final model, losses (C, T), post-train local accs (C,))."""
-    from repro.core import attacks, strategies   # deferred: kernel-level
+    from repro.core import aggregation, attacks  # deferred: kernel-level
     opt = optimizers.sgd(lr, momentum=momentum)
     C = jax.tree.leaves(data)[0].shape[0]
     if attack_flags is None:
@@ -180,10 +190,10 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
             local = attacks.corrupt_tree(local, model, flag, key,
                                          kind=attack, scale=attack_scale)
         if defense == "norm_clip":
-            model = strategies.defended_cfl_merge(model, local, alpha,
-                                                  clip_tau)
+            model = aggregation.defended_cfl_merge(model, local, alpha,
+                                                   clip_tau)
         else:
-            model = strategies.cfl_merge_stacked(model, local, alpha)
+            model = aggregation.cfl_merge_stacked(model, local, alpha)
         return model, (losses, acc)
 
     model, (losses, accs) = jax.lax.scan(
@@ -257,10 +267,12 @@ class VectorizedClientEngine:
         return {"image": jnp.asarray(imgs), "label": jnp.asarray(labs)}
 
     # -- compiled-program wrappers ------------------------------------------
-    def train(self, stacked_params, data):
-        return train_clients(stacked_params, data,
-                             stacked_loss_fn=self.stacked_loss_fn,
-                             lr=self.fl.lr, momentum=self.fl.momentum)
+    def train(self, stacked_params, data, *, stacked_loss_fn=None,
+              extra=None):
+        return train_clients(
+            stacked_params, data,
+            stacked_loss_fn=stacked_loss_fn or self.stacked_loss_fn,
+            lr=self.fl.lr, momentum=self.fl.momentum, extra=extra)
 
     def local_accs(self, stacked_params, client_ids) -> np.ndarray:
         """Post-training local-shard accuracy per client — the paper's

@@ -27,7 +27,7 @@ All defenses operate on the stacked `(C, N)` ravel layout shared with the
 
 `robust_aggregate` dispatches on the defense name at the matrix level;
 `robust_aggregate_stacked` is the pytree-level entry used by
-`core/strategies.py`. Masking-based secure aggregation composes with
+`core/aggregation.py`. Masking-based secure aggregation composes with
 FedAvg only — median/trimmed/Krum need plaintext updates (see
 `core/secure_agg.py` and DESIGN.md §8).
 """
@@ -129,7 +129,7 @@ def robust_aggregate(mat, defense: str, *, weights=None, f: int = 1,
 
 
 # ---------------------------------------------------------------------------
-# pytree-level wrappers (what strategies.py calls)
+# pytree-level wrappers (what aggregation.py calls)
 # ---------------------------------------------------------------------------
 
 def robust_aggregate_stacked(stacked: Params, defense: str, *, weights=None,

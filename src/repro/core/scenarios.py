@@ -9,6 +9,12 @@ future-work directions) spans:
              x adversary (attack type/fraction -> defense; DESIGN.md §8)
              x engine (loop / vectorized)
 
+`strategy` may be ANY name in the Strategy plugin registry
+(`core/strategies.py`): the paper's hfl/afl/cfl, the async runtime, the
+PR 4 plugins (fedprox, fedavgm, fedadam), or a third-party plugin
+registered before the spec is built — topology and defense validity are
+read off the strategy class itself (DESIGN.md §9).
+
 Every spec resolves to a runnable configuration (`resolve`) and every run
 emits one stable result-JSON document (`run_scenario`, schema in
 DESIGN.md §6) so `examples/`, `benchmarks/run.py`, and the CI bench-smoke
@@ -22,35 +28,53 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.fl_types import ATTACKS, DEFENSES
+from repro.core.strategies import (STRATEGY_REGISTRY_VERSION, get_strategy,
+                                   strategy_names)
 
-# v2: adds the "attack" block (attack type + attacked-client ids +
-# defense) — v1 documents are still readable through `load_result`
-RESULT_SCHEMA_VERSION = 2
+# v2.1: adds the "strategy" block (plugin name + registry version).
+# v2 added the "attack" block. Older documents are still readable
+# through `load_result`.
+RESULT_SCHEMA_VERSION = 2.1
 
-# topology is the communication graph the strategy induces; the pairing is
-# validated so a spec can't claim e.g. a ring under HFL
-TOPOLOGY_BY_STRATEGY = {
-    "hfl": ("hierarchical",),
-    "afl": ("star", "ring"),
-    "cfl": ("sequential",),
-    "async": ("event",),
-}
+# One output-dir convention for every result/curve writer: the example
+# CLI's curves, `--json` grid dumps, and experiment artifacts all land
+# under this root (env-overridable), so nothing strays into the repo
+# root anymore.
+OUTPUT_DIR = os.environ.get("REPRO_OUTPUT_DIR", "experiments")
+
+
+def output_path(*parts: str) -> str:
+    """Join under the shared output root, creating directories."""
+    path = os.path.join(OUTPUT_DIR, *parts)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    return path
+
+
 PARTITIONS = ("iid", "dirichlet")
 
-# which defenses the strategy's aggregation event supports (DESIGN.md §8;
-# mirrors simulation.DEFENSES_BY_EVENT): selection/scoring defenses need
-# a redundant client set, redundancy-1 merges (cfl/async) can only
-# norm-clip, gossip neighborhoods are too small for Krum scoring
+
+def _topologies(strategy: str) -> Tuple[str, ...]:
+    """Valid communication graphs, read off the registered Strategy."""
+    return get_strategy(strategy).topologies
+
+
+def _defenses(strategy: str, topology: str) -> Tuple[str, ...]:
+    """Valid defenses at the strategy/topology aggregation event
+    (declared on the Strategy class — DESIGN.md §8/§9)."""
+    return get_strategy(strategy).defenses.get(topology, ("none",))
+
+
+# Static snapshots of the shipped strategies' declarations (backwards-
+# compatible view; plugin strategies registered later are validated
+# against the registry directly, not these tables).
+TOPOLOGY_BY_STRATEGY = {name: _topologies(name) for name in strategy_names()}
 DEFENSES_BY_STRATEGY = {
-    ("hfl", "hierarchical"): DEFENSES,
-    ("afl", "star"): DEFENSES,
-    ("afl", "ring"): ("none", "median", "trimmed_mean"),
-    ("cfl", "sequential"): ("none", "norm_clip"),
-    ("async", "event"): ("none", "norm_clip"),
-}
+    (name, topo): _defenses(name, topo)
+    for name in strategy_names() for topo in _topologies(name)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,8 +82,8 @@ class ScenarioSpec:
     """One named, fully-specified federated run."""
     name: str
     description: str
-    strategy: str = "afl"            # hfl | afl | cfl | async
-    topology: str = "star"           # see TOPOLOGY_BY_STRATEGY
+    strategy: str = "afl"            # any registered Strategy plugin
+    topology: str = "star"           # see Strategy.topologies
     engine: str = "vectorized"       # loop | vectorized
     # data
     dataset: str = "mnist"           # mnist | fashion
@@ -85,6 +109,10 @@ class ScenarioSpec:
     staleness_decay: float = 0.5
     updates_per_client: int = 2
     tick: float = 1.0
+    # strategy-plugin knobs (fedprox / server-optimizer family)
+    prox_mu: float = 0.01
+    server_lr: float = 1.0
+    server_momentum: float = 0.9
     # adversarial clients + robust aggregation (DESIGN.md §8)
     attack: str = "none"             # core/attacks.py
     attack_fraction: float = 0.25
@@ -95,9 +123,11 @@ class ScenarioSpec:
     seed: int = 0
 
     def __post_init__(self):
-        if self.strategy not in TOPOLOGY_BY_STRATEGY:
-            raise ValueError(f"unknown strategy {self.strategy!r}")
-        allowed = TOPOLOGY_BY_STRATEGY[self.strategy]
+        try:
+            allowed = _topologies(self.strategy)
+        except KeyError:
+            raise ValueError(f"unknown strategy {self.strategy!r} "
+                             f"(registered: {strategy_names()})") from None
         if self.topology not in allowed:
             raise ValueError(
                 f"{self.name}: topology {self.topology!r} is invalid for "
@@ -109,7 +139,7 @@ class ScenarioSpec:
         if self.attack not in ATTACKS:
             raise ValueError(f"unknown attack {self.attack!r} "
                              f"(expected one of {ATTACKS})")
-        allowed_d = DEFENSES_BY_STRATEGY[(self.strategy, self.topology)]
+        allowed_d = _defenses(self.strategy, self.topology)
         if self.defense not in allowed_d:
             raise ValueError(
                 f"{self.name}: defense {self.defense!r} does not apply to "
@@ -117,11 +147,11 @@ class ScenarioSpec:
                 f"(expected one of {allowed_d}; DESIGN.md §8)")
 
     def to_fl_config(self):
-        """The underlying FLConfig: async runs on the CFL continual-merge
-        substrate; an AFL ring topology selects gossip mode."""
+        """The underlying FLConfig: `strategy` resolves 1:1 through the
+        plugin registry; an AFL ring topology selects gossip mode."""
         from repro.core.fl_types import FLConfig
         return FLConfig(
-            strategy="cfl" if self.strategy == "async" else self.strategy,
+            strategy=self.strategy,
             num_clients=self.num_clients, num_groups=self.num_groups,
             rounds=self.rounds, local_epochs=self.local_epochs,
             local_batch_size=self.local_batch_size, lr=self.lr,
@@ -129,6 +159,13 @@ class ScenarioSpec:
             afl_mode="gossip" if self.topology == "ring" else "fedavg",
             gossip_neighbors=self.gossip_neighbors,
             merge_alpha=self.merge_alpha, seed=self.seed,
+            staleness_alpha=self.staleness_alpha,
+            staleness_decay=self.staleness_decay,
+            updates_per_client=self.updates_per_client,
+            speed_model=self.speed_model, dropout=self.dropout,
+            tick=self.tick, prox_mu=self.prox_mu,
+            server_lr=self.server_lr,
+            server_momentum=self.server_momentum,
             attack=self.attack, attack_fraction=self.attack_fraction,
             attack_scale=self.attack_scale, defense=self.defense,
             defense_f=self.defense_f, clip_tau=self.clip_tau,
@@ -192,7 +229,7 @@ register(ScenarioSpec(
     "dirichlet-hfl-loop", "HFL under mild Dirichlet(1.0) label skew",
     strategy="hfl", topology="hierarchical", engine="loop",
     partition="dirichlet", dirichlet_alpha=1.0, n_train=768))
-# heterogeneous async runtime — the tentpole axis
+# heterogeneous async runtime — the PR 2 tentpole axis, now a plugin
 register(ScenarioSpec(
     "async-uniform-vec", "async staleness-aware merge, homogeneous "
     "clients (full-federation tick batches)",
@@ -211,6 +248,35 @@ register(ScenarioSpec(
     "(singleton batches — the loop engine's regime)",
     strategy="async", topology="event", engine="loop",
     speed_model="lognormal", tick=0.0))
+
+# PR 4 strategy plugins, shipped through the public API alone: FedProx
+# (proximal local objective under label skew — its home turf) and the
+# server-optimizer family (FedAvgM / FedAdam over the kernel-backed
+# aggregate)
+register(ScenarioSpec(
+    "fedprox-dirichlet-vec", "FedProx (mu=0.1) under Dirichlet(0.5) "
+    "label skew: the proximal pull bounds client drift",
+    strategy="fedprox", topology="star", partition="dirichlet",
+    dirichlet_alpha=0.5, n_train=768, prox_mu=0.1, local_epochs=2))
+register(ScenarioSpec(
+    "fedprox-iid-loop", "FedProx on IID shards under the loop engine "
+    "(mu=0.01 barely perturbs FedAvg — the sanity point)",
+    strategy="fedprox", topology="star", engine="loop", prox_mu=0.01))
+register(ScenarioSpec(
+    "fedavgm-iid-vec", "FedAvgM: server momentum (0.9) over the round "
+    "pseudo-gradient, kernel-backed aggregate",
+    strategy="fedavgm", topology="star", local_epochs=2,
+    server_lr=0.7, server_momentum=0.9))
+register(ScenarioSpec(
+    "fedadam-iid-vec", "FedAdam: server Adam over the round "
+    "pseudo-gradient",
+    strategy="fedadam", topology="star", local_epochs=2, server_lr=0.1))
+register(ScenarioSpec(
+    "fedadam-signflip-median-vec", "FedAdam composed with the "
+    "adversarial axis: sign-flip attackers, median aggregate feeding "
+    "the server optimizer",
+    strategy="fedadam", topology="star", local_epochs=2, server_lr=0.1,
+    attack="sign_flip", attack_scale=4.0, defense="median"))
 
 # adversarial axis — attack x defense x architecture (DESIGN.md §8).
 # The 32-client sign-flip family is the ISSUE 3 acceptance measurement:
@@ -270,11 +336,12 @@ register(ScenarioSpec(
     attack="gauss", attack_scale=3.0, defense="norm_clip", clip_tau=3.0))
 
 # the CI bench-smoke grid: one sync-centralized, one sync-decentralized,
-# one async-heterogeneous, one adversarial scenario (see
-# .github/workflows/ci.yml)
+# one async-heterogeneous, one adversarial scenario, plus one scenario
+# per PR 4 strategy plugin family (see .github/workflows/ci.yml)
 CI_SMOKE_GRID: Tuple[str, ...] = (
     "iid-hfl-vec", "ring-gossip-vec", "async-straggler-vec",
-    "attack-replace-cfl-clip-vec")
+    "attack-replace-cfl-clip-vec", "fedprox-dirichlet-vec",
+    "fedadam-iid-vec")
 
 
 # ---------------------------------------------------------------------------
@@ -283,8 +350,7 @@ CI_SMOKE_GRID: Tuple[str, ...] = (
 
 def resolve(spec: ScenarioSpec):
     """Spec -> (FederatedSimulation, spec) with dataset built, partition
-    applied, and engine state ready. Async wrapping happens in
-    `run_scenario` (the sync sim is the async run's client substrate)."""
+    applied, strategy plugin resolved, and engine state ready."""
     from repro.core.simulation import FederatedSimulation
     return FederatedSimulation.from_scenario(spec), spec
 
@@ -296,50 +362,40 @@ def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
     second of build time."""
     spec = get(scenario) if isinstance(scenario, str) else scenario
     sim, _ = resolve(spec)
+    r = sim.run()
     async_block = None
-    if spec.strategy == "async":
-        from repro.core.async_agg import AsyncSimulation
-        r = AsyncSimulation(
-            sim, alpha=spec.staleness_alpha, decay=spec.staleness_decay,
-            updates_per_client=spec.updates_per_client,
-            speed_model=spec.speed_model, participation=spec.participation,
-            dropout=spec.dropout, tick=spec.tick, engine=spec.engine).run()
-        units = r.batches
-        async_block = {
-            "merges": r.merges, "batches": r.batches,
-            "mean_staleness": r.mean_staleness, "makespan": r.makespan,
-            "dropped_clients": list(r.dropped_clients),
-            "participants": list(r.participants),
-        }
-    else:
-        r = sim.run()
-        units = spec.rounds
+    units = spec.rounds
+    if getattr(sim.strategy, "timeline_result", False):
+        # the strategy DECLARES the timeline measurement contract
+        # (Strategy.timeline_result) — no key sniffing on extras
+        async_block = {k: r.extra.get(k) for k in
+                       ("merges", "batches", "mean_staleness", "makespan",
+                        "dropped_clients", "participants")}
+        units = r.extra.get("batches", spec.rounds)
     attack_block = None
     if spec.attack != "none" or spec.defense != "none":
         # the Byzantine allowance actually applied at the aggregation
         # event, not the federation-level resolution: HFL defends per
-        # group, AFL per sampled participant set
-        fl = sim.fl
-        if spec.strategy == "hfl":
-            event_size = fl.clients_per_group
-        elif spec.strategy == "afl":
-            event_size = max(1, int(round(fl.participation
-                                          * fl.num_clients)))
-        else:
-            event_size = fl.num_clients
+        # group, AFL per sampled participant set — the strategy declares
+        # its own event size
         attack_block = {
             "attack": spec.attack,
             "fraction": spec.attack_fraction,
             "scale": spec.attack_scale,
             "attacked_clients": [int(c) for c in sim.attackers],
             "defense": spec.defense,
-            "defense_f": fl.resolved_defense_f(event_size),
+            "defense_f": sim.fl.resolved_defense_f(
+                sim.strategy.event_size()),
             "clip_tau": spec.clip_tau,
         }
     return {
         "schema_version": RESULT_SCHEMA_VERSION,
         "scenario": spec.name,
         "spec": spec.asdict(),
+        "strategy": {
+            "plugin": sim.strategy.name,
+            "registry_version": STRATEGY_REGISTRY_VERSION,
+        },
         "metrics": {
             "test_accuracy": r.test_accuracy,
             "train_accuracy": r.train_accuracy,
@@ -358,16 +414,24 @@ def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
 
 
 def load_result(doc: Dict) -> Dict:
-    """Normalize a result document to the CURRENT schema. v1 documents
-    (pre-adversarial) carry no "attack" key — they read as unattacked v2
-    documents, so consumers (CI baseline compare, experiments tooling)
-    never branch on schema_version themselves."""
+    """Normalize a result document to the CURRENT schema so consumers
+    (CI baseline compare, experiments tooling) never branch on
+    schema_version themselves. v1 documents (pre-adversarial) carry no
+    "attack" key — they read as unattacked documents; v2 documents
+    (pre-plugin) carry no "strategy" block — the plugin name falls back
+    to the spec's strategy field with a null registry version."""
     v = doc.get("schema_version")
     if v == RESULT_SCHEMA_VERSION:
         return doc
-    if v == 1:
+    if v == 2:
+        plugin = (doc.get("spec") or {}).get("strategy")
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
-                "attack": None}
+                "strategy": {"plugin": plugin, "registry_version": None}}
+    if v == 1:
+        plugin = (doc.get("spec") or {}).get("strategy")
+        return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
+                "attack": None,
+                "strategy": {"plugin": plugin, "registry_version": None}}
     raise ValueError(f"unknown result schema_version {v!r}")
 
 
@@ -379,9 +443,10 @@ def main(argv: Optional[List[str]] = None):
     ap.add_argument("--run", nargs="+", metavar="NAME",
                     help="run the named scenario(s)")
     ap.add_argument("--grid", choices=["ci"],
-                    help="run a predefined grid (ci = the bench-smoke trio)")
+                    help="run a predefined grid (ci = the bench-smoke set)")
     ap.add_argument("--json", metavar="PATH",
-                    help="also write results as a JSON list")
+                    help="also write results as a JSON list (bare "
+                         f"filenames land under {OUTPUT_DIR}/results/)")
     args = ap.parse_args(argv)
 
     if args.list or not (args.run or args.grid):
@@ -404,9 +469,11 @@ def main(argv: Optional[List[str]] = None):
               f"f1={m['f1']:.3f} build={t['build_time_s']:.2f}s "
               f"rounds_per_s={t['rounds_per_s']:.3f}")
     if args.json:
-        with open(args.json, "w") as f:
+        path = (args.json if os.path.dirname(args.json)
+                else output_path("results", args.json))
+        with open(path, "w") as f:
             json.dump(results, f, indent=1)
-        print(f"results -> {args.json}")
+        print(f"results -> {path}")
 
 
 if __name__ == "__main__":

@@ -1,34 +1,46 @@
-"""Host-level federated-learning simulation — the paper-faithful driver.
+"""Host-level federated-learning simulation — the generic round driver.
 
-Runs the paper's CNN under HFL / AFL / CFL on client-partitioned data and
-reports exactly the paper's measurement suite (Tables 1-2): training /
-testing accuracy, build time, classification time, precision, recall, F1,
-balanced accuracy, confusion matrix, and per-round accuracy/loss curves
+Runs the paper's CNN on client-partitioned data under ANY registered
+Strategy plugin (`core/strategies.py`: hfl / afl / cfl / async /
+fedprox / fedavgm / fedadam / third-party) and reports exactly the
+paper's measurement suite (Tables 1-2): training / testing accuracy,
+build time, classification time, precision, recall, F1, balanced
+accuracy, confusion matrix, and per-round accuracy/loss curves
 (Figures 9/11).
 
-Two interchangeable engines run the rounds (`FLConfig.engine`):
-* "loop" — per-client Python loop, one jit dispatch per client. This is
-  the paper-faithful timing surface: build time includes the per-device
-  dispatch/serialization a real per-client deployment pays.
-* "vectorized" — the federation as one stacked pytree; local training is
-  a single compiled scan and aggregation goes through the kernel-backed
-  stacked operators (core/engine.py + strategies stacked section). Same
-  results to float tolerance (tests/test_engine.py), ~3x+ round
-  throughput at 64 clients, scales to federation sizes the loop cannot.
+The driver owns everything strategy-independent (DESIGN.md §9):
 
-Timing protocol (paper §1.2.6-§1.2.7, interpretation in DESIGN.md §3):
-* Build time — wall-clock of the full federated training procedure.
-* Classification time — wall-clock to produce test-set predictions from
-  the *served* model. For centralized HFL the served model must first be
-  materialized at the global server (final two-tier aggregation +
-  dissemination); for AFL an aggregate over the last participant set; for
-  CFL the continually-merged model is already serving-ready. This mirrors
-  the paper's definition where DFL classifies with on-device models.
+* engine dispatch — `FLConfig.engine` selects how one event's local
+  training executes:
+    "loop"       — per-client Python loop, one jit dispatch per client
+                   (the paper-faithful timing surface).
+    "vectorized" — the federation as one stacked pytree; local training
+                   is a single compiled scan and aggregation goes
+                   through the kernel-backed stacked operators
+                   (core/engine.py + core/aggregation.py). Same results
+                   to float tolerance (tests/test_engine.py).
+* rng-parity bookkeeping — batch construction consumes the run rng in
+  one canonical order (client-major, epoch-minor) under both engines
+  (DESIGN.md §4).
+* attack corruption — uploads are corrupted between local training and
+  the strategy's aggregation event, keyed by (seed, event, absolute
+  client id) (DESIGN.md §8); defense arguments are resolved per event
+  via the strategy's declared event size.
+* metric tracking + the paper's timing protocol (DESIGN.md §3): build
+  time excludes compilation (strategy-directed warmup), classification
+  time is min-of-3 on the served model — full test set for centralized
+  strategies, one 1/N shard for decentralized on-device serving.
+
+Strategies contribute only their schedule and aggregation math through
+the `Strategy` lifecycle protocol; sequential (CFL-style) strategies
+use `sequential_round`, the one driver primitive where training and
+merging fuse.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Dict, List
 
 import jax
@@ -37,7 +49,8 @@ import numpy as np
 
 from repro.core import attacks
 from repro.core import engine as engine_mod
-from repro.core import strategies, topology
+from repro.core import strategies as strat_mod
+from repro.core import aggregation
 from repro.core.fl_types import FLConfig
 from repro.core.metrics import Timer, classification_metrics
 from repro.data.partition import iid_partition
@@ -61,6 +74,8 @@ class FLResult:
     round_train_acc: List[float]
     round_train_loss: List[float]
     round_test_acc: List[float]
+    # strategy-specific extras (async: merges/batches/staleness/makespan)
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, float]:
         return {k: getattr(self, k) for k in
@@ -71,16 +86,23 @@ class FLResult:
 
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _sgd_epoch(params, opt_state, data, lr_momentum):
-    """One local epoch over pre-batched data: (nb, B, 28,28,1)/(nb, B)."""
+@functools.partial(jax.jit, static_argnames=("lr_momentum", "loss_fn"))
+def _sgd_epoch(params, opt_state, data, lr_momentum, *,
+               loss_fn=cnn_mod.cnn_loss, extra=None):
+    """One local epoch over pre-batched data: (nb, B, 28,28,1)/(nb, B).
+    `loss_fn`/`extra` come from the strategy's LocalSpec (FedProx passes
+    the round-start model as `extra`)."""
     lr, momentum = lr_momentum
     opt = optimizers.sgd(lr, momentum=momentum)
 
     def step(carry, batch):
         params, opt_state = carry
-        (loss, acc), grads = jax.value_and_grad(
-            cnn_mod.cnn_loss, has_aux=True)(params, batch)
+        if extra is None:
+            (loss, acc), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            (loss, acc), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, extra)
         updates, opt_state = opt.update(grads, opt_state, params)
         params = optimizers.apply_updates(params, updates)
         return (params, opt_state), (loss, acc)
@@ -103,38 +125,30 @@ def _batched(x, y, batch_size, rng):
             "label": jnp.asarray(y[sel].reshape(nb, batch_size))}
 
 
-# which defenses make sense at each strategy's aggregation event
-# (DESIGN.md §8): selection/scoring defenses need a redundant client set;
-# redundancy-1 merge events (CFL continual pass, async arrivals) can only
-# bound per-update influence; gossip neighborhoods support coordinate
-# selection but are too small for Krum scoring.
-DEFENSES_BY_EVENT = {
-    "hfl": ("none", "median", "trimmed_mean", "norm_clip", "krum",
-            "multi_krum"),
-    "afl-fedavg": ("none", "median", "trimmed_mean", "norm_clip", "krum",
-                   "multi_krum"),
-    "afl-gossip": ("none", "median", "trimmed_mean"),
-    "cfl": ("none", "norm_clip"),
-}
-
-
 class FederatedSimulation:
-    """Python-level multi-client FL simulation on a single host."""
+    """Python-level multi-client FL simulation on a single host: the
+    generic round driver plus the engine/attack/metric machinery the
+    Strategy protocol builds on (`repro.api` documents the plugin-facing
+    surface)."""
 
     def __init__(self, fl: FLConfig, dataset: Dict[str, Any],
-                 model_init=None):
+                 model_init=None, strategy=None):
         self.fl = fl
         self.dataset = dataset
         self.rng = np.random.default_rng(fl.seed)
         key = jax.random.PRNGKey(fl.seed)
         self.init_params = (model_init or cnn_mod.init_cnn)(key)
-        event = (fl.strategy if fl.strategy != "afl"
-                 else f"afl-{fl.afl_mode}")
-        if fl.defense not in DEFENSES_BY_EVENT[event]:
-            raise ValueError(
-                f"defense {fl.defense!r} does not apply to the {event} "
-                f"aggregation event (valid: {DEFENSES_BY_EVENT[event]}; "
-                f"DESIGN.md §8)")
+        # resolve the strategy plugin: an instance is used as-is (plugin
+        # escape hatch), a name resolves through the registry
+        if isinstance(strategy, strat_mod.Strategy):
+            self.strategy = strategy
+        else:
+            try:
+                cls = strat_mod.get_strategy(strategy or fl.strategy)
+            except KeyError as e:
+                raise ValueError(str(e)) from None
+            self.strategy = cls(fl)
+        self.strategy.validate()
         # Byzantine subset: drawn from a dedicated generator (never the
         # schedule rng) so the attack axis leaves the DESIGN.md §4 parity
         # contract intact
@@ -149,7 +163,7 @@ class FederatedSimulation:
                                             seed=fl.seed))
 
     # -- local work ---------------------------------------------------------
-    def _local_train(self, params, cid):
+    def _local_train(self, params, cid, spec=None):
         """Returns (params, last-epoch loss, POST-training local accuracy).
 
         "Training accuracy" follows the paper's protocol: the client's
@@ -157,12 +171,16 @@ class FederatedSimulation:
         is what makes HFL's train/test gap visible (local models fit local
         data; the aggregated global model generalizes worse)."""
         x, y = self.client_data[cid]
+        loss_fn = spec.loss_fn if spec is not None else cnn_mod.cnn_loss
+        extra = params if (spec is not None and spec.extra == "bases") \
+            else None
         opt_state = self.opt.init(params)
         loss = 0.0
         for _ in range(self.fl.local_epochs):
             data = _batched(x, y, self.fl.local_batch_size, self.rng)
             params, opt_state, loss, _ = _sgd_epoch(
-                params, opt_state, data, (self.fl.lr, self.fl.momentum))
+                params, opt_state, data, (self.fl.lr, self.fl.momentum),
+                loss_fn=loss_fn, extra=extra)
         n_eval = min(len(x), 512)
         preds = np.asarray(_predict(params, jnp.asarray(x[:n_eval])))
         acc = float(np.mean(preds == y[:n_eval]))
@@ -179,9 +197,8 @@ class FederatedSimulation:
     def from_scenario(cls, spec) -> "FederatedSimulation":
         """Build a simulation from a `core.scenarios.ScenarioSpec` (duck-
         typed: any object with the spec's fields works): dataset
-        constructed, partition applied, engine state ready. Async
-        scenarios wrap the returned sim in `AsyncSimulation` — see
-        `core.scenarios.run_scenario`."""
+        constructed, partition applied, strategy resolved from the
+        registry, engine state ready."""
         from repro.data.synthetic import DATASETS
         ds = DATASETS[spec.dataset](seed=spec.seed, n_train=spec.n_train,
                                     n_test=spec.n_test)
@@ -221,8 +238,8 @@ class FederatedSimulation:
                         self.fl, self.client_data, self.weights)
                     if self.fl.engine == "vectorized" else None)
 
-    # -- adversarial axis ---------------------------------------------------
-    def _defense_kwargs(self, event_size=None) -> Dict[str, Any]:
+    # -- driver primitives (the plugin-facing surface) ----------------------
+    def defense_kwargs(self, event_size=None) -> Dict[str, Any]:
         """kwargs for the defended aggregation operators, with the
         Byzantine allowance resolved for this event's client count."""
         fl = self.fl
@@ -230,39 +247,134 @@ class FederatedSimulation:
                 "f": fl.resolved_defense_f(event_size),
                 "tau": fl.clip_tau}
 
-    def _corrupt_stacked(self, stacked, base, client_ids, event: int):
-        """Corrupt attacker rows of a trained stack (vectorized engine);
-        noise keys derive from (seed, event, absolute client id)."""
+    def _bases_stacked(self, plan):
+        """The plan's round-start bases as ONE stacked tree, built at
+        most once per plan and only when a consumer (vectorized train,
+        corruption) actually needs it: from the strategy's lazy
+        `bases_stacked_fn` if declared, else by stacking the list."""
+        bases = plan.meta.get("bases_stacked")
+        if bases is None:
+            fn = plan.meta.get("bases_stacked_fn")
+            bases = (fn() if fn is not None
+                     else engine_mod.stack_forest(plan.bases))
+            plan.meta["bases_stacked"] = bases
+        return bases
+
+    def local_train(self, plan, spec, rng):
+        """One event's local training under the active engine. Consumes
+        `rng` in the canonical client-major, epoch-minor order (§4) and
+        returns (stacked uploads, per-client losses, per-client accs) —
+        the uploads carry a leading participant axis under BOTH engines,
+        so strategies aggregate through one stacked-operator path."""
         fl = self.fl
-        flags = self.attack_mask[np.asarray(client_ids)]
+        if self.vec is not None:
+            eng = self.vec
+            data = eng.batched_clients(rng, plan.participants,
+                                       fl.local_epochs)
+            bases = self._bases_stacked(plan)
+            extra = bases if spec.extra == "bases" else None
+            params, losses, _ = eng.train(
+                bases, data, stacked_loss_fn=spec.stacked_loss_fn,
+                extra=extra)
+            accs = eng.local_accs(params, plan.participants)
+            return (params, np.asarray(losses[:, -eng.nb:]).mean(axis=1),
+                    accs)
+        locals_, losses, accs = [], [], []
+        for c, base in zip(plan.participants, plan.bases):
+            p, loss, acc = self._local_train(base, c, spec=spec)
+            locals_.append(p)
+            losses.append(loss)
+            accs.append(acc)
+        return engine_mod.stack_forest(locals_), losses, accs
+
+    def corrupt(self, uploads, plan):
+        """Corrupt attacker rows of the trained upload stack against the
+        plan's round-start bases; noise keys derive from (seed, event,
+        absolute client id) — bitwise identical under both engines
+        (DESIGN.md §8)."""
+        fl = self.fl
+        flags = self.attack_mask[np.asarray(plan.participants, int)]
         if fl.attack in ("none", "label_flip") or not flags.any():
-            return stacked
-        keys = attacks.client_keys(attacks.event_key(fl.seed, event),
-                                   client_ids)
-        return attacks.corrupt_stacked(stacked, base, flags, keys,
+            return uploads
+        bases = self._bases_stacked(plan)
+        keys = attacks.client_keys(
+            attacks.event_key(fl.seed, plan.event), plan.participants)
+        return attacks.corrupt_stacked(uploads, bases, flags, keys,
                                        kind=fl.attack,
                                        scale=fl.attack_scale)
 
-    def _corrupt_clients(self, client_list, base_list, client_ids,
-                         event: int):
-        """Loop-engine twin of `_corrupt_stacked` (same key derivation).
-        `base_list` holds each client's round-start model."""
+    def sequential_round(self, model, order, event, alpha, spec, rng):
+        """One continual (CFL-style) pass: clients train in visit order,
+        each (possibly corrupted, possibly norm-clipped) update merging
+        into the carried model. Loop engine: per-visit dispatch + host
+        merges; vectorized: one `lax.scan` with in-scan corruption (the
+        visit base is the carried state). Returns (model, losses, accs)."""
         fl = self.fl
-        return attacks.corrupt_clients(
-            client_list, base_list, client_ids, self.attack_mask,
-            kind=fl.attack, scale=fl.attack_scale, seed=fl.seed,
-            event=event)
+        if self.vec is not None:
+            eng = self.vec
+            data = eng.batched_clients(rng, order, fl.local_epochs)
+            # per-visit attack inputs, permuted into visit order; keys
+            # derive from absolute ids so they match the loop engine
+            keys = attacks.client_keys(attacks.event_key(fl.seed, event),
+                                       order)
+            model, losses, accs = eng.cfl_round(
+                model, order, data, alpha, attack=fl.attack,
+                attack_scale=fl.attack_scale,
+                attack_flags=self.attack_mask[np.asarray(order, int)],
+                attack_keys=keys, defense=fl.defense,
+                clip_tau=fl.clip_tau)
+            return (model, np.asarray(losses[:, -eng.nb:]).mean(axis=1),
+                    np.asarray(accs))
+        attacking = fl.attack not in ("none", "label_flip")
+        key = attacks.event_key(fl.seed, event)
+        losses, accs = [], []
+        for c in order:
+            local, loss, acc = self._local_train(model, c, spec=spec)
+            if attacking and self.attack_mask[c]:
+                # base = the model this visit pulled (the carried state),
+                # exactly the in-scan base of the vectorized pass
+                local = attacks.corrupt_tree(
+                    local, model, True, jax.random.fold_in(key, int(c)),
+                    kind=fl.attack, scale=fl.attack_scale)
+            if fl.defense == "norm_clip":
+                from repro.core import robust
+                local = robust.clip_update(model, local, fl.clip_tau)
+            model = aggregation.cfl_merge(model, local, alpha)
+            losses.append(loss)
+            accs.append(acc)
+        return model, losses, accs
 
-    # -- strategies ---------------------------------------------------------
-    def _warmup(self):
-        """Compile the train/predict jits outside the measured windows so
+    # -- warmup (DESIGN.md §3: compilation stays out of the timers) ---------
+    def warmup_default(self, strategy):
+        """Engine-appropriate default warmup for a strategy: loop
+        compiles the local-train/predict/attack programs; vectorized
+        dry-runs one FINAL event (tier-2 paths included) plus the served
+        model with a throwaway rng — shapes are identical, `self.rng` is
+        untouched."""
+        if self.vec is None:
+            self.warmup_loop(strategy)
+            strategy.warmup_aggregate(self)
+            return
+        self._warmup_predicts()
+        rng = np.random.default_rng(self.fl.seed)
+        state = strategy.init_state(self)
+        state, _, _ = strategy.run_event(
+            self, state, strategy.num_events(self) - 1, rng=rng)
+        strategy.served_fn(self, state)()
+
+    def warmup_loop(self, strategy):
+        """Compile the loop engine's jits outside the measured windows so
         build/classification timers compare strategies, not XLA caching."""
+        spec = strategy.local_spec(
+            self, None, strat_mod.RoundPlan([0], [self.init_params], 0))
         x, y = self.client_data[0]
         data = _batched(x[: 2 * self.fl.local_batch_size],
                         y[: 2 * self.fl.local_batch_size],
                         self.fl.local_batch_size, np.random.default_rng(0))
+        extra = self.init_params if spec.extra == "bases" else None
         _sgd_epoch(self.init_params, self.opt.init(self.init_params), data,
-                   (self.fl.lr, self.fl.momentum))
+                   (self.fl.lr, self.fl.momentum), loss_fn=spec.loss_fn,
+                   extra=extra)
         self._warmup_predicts()
         self._warmup_attack()
         # local-shard train-accuracy eval shape
@@ -290,49 +402,42 @@ class FederatedSimulation:
         _predict(self.init_params, jnp.asarray(x_test))             # full
         shard = -(-len(x_test) // self.fl.num_clients)
         _predict(self.init_params, jnp.asarray(x_test[:shard]))     # shard
+        # stragglers of the batched _eval: the final partial batch
+        if len(x_test) % 500:
+            _predict(self.init_params,
+                     jnp.asarray(x_test[-(len(x_test) % 500):]))
 
-    def _warmup_vectorized(self):
-        """Compile the vectorized round (train, aggregation kernels, eval)
-        outside the measured windows: dry-run ONE round of the strategy
-        with a throwaway rng seeded like self.rng (shapes are identical,
-        self.rng is untouched), plus the classification-path predicts."""
-        self._warmup_predicts()
-        rng = np.random.default_rng(self.fl.seed)
-        curves = {"train_acc": [], "train_loss": [], "test_acc": []}
-        runner = {"hfl": self._run_hfl_vec, "afl": self._run_afl_vec,
-                  "cfl": self._run_cfl_vec}[self.fl.strategy]
-        served_fn, _ = runner(curves, rng, rounds=1)
-        served_fn()
-
+    # -- the generic driver loop --------------------------------------------
     def run(self) -> FLResult:
-        fl = self.fl
+        fl, strat = self.fl, self.strategy
         curves = {"train_acc": [], "train_loss": [], "test_acc": []}
-        if self.vec is None:
-            self._warmup()
-        else:
-            self._warmup_vectorized()
+        state = strat.init_state(self)
+        strat.warmup(self)
+        n_events = strat.num_events(self)
+        all_accs: List[float] = []
+        train_acc = 0.0
         build_timer = Timer()
 
         with build_timer:
-            if self.vec is not None:
-                runner = {"hfl": self._run_hfl_vec, "afl": self._run_afl_vec,
-                          "cfl": self._run_cfl_vec}[fl.strategy]
-                served_fn, train_acc = runner(curves, self.rng, fl.rounds)
-            elif fl.strategy == "hfl":
-                served_fn, train_acc = self._run_hfl(curves)
-            elif fl.strategy == "afl":
-                served_fn, train_acc = self._run_afl(curves)
-            else:
-                served_fn, train_acc = self._run_cfl(curves)
+            for ev in range(n_events):
+                state, accs, losses = strat.run_event(self, state, ev)
+                train_acc = float(np.mean(np.asarray(accs)))
+                all_accs.extend(float(a) for a in np.ravel(accs))
+                if strat.track_curves:
+                    self._track(curves, accs, losses,
+                                strat.round_model(state))
+        if strat.mean_train_acc_over_events:
+            train_acc = float(np.mean(all_accs)) if all_accs else 0.0
 
-        # classification time (paper §1.2.7): centralized HFL serves the
-        # full test set at the global server (after materializing the
-        # served model); decentralized AFL/CFL classify on-device — every
-        # client scores its own 1/N test shard in parallel, so measured
-        # wall time is one shard pass (+ AFL's pre-serving aggregation;
-        # CFL's continual model is already serving-ready).
+        # classification time (paper §1.2.7): centralized strategies
+        # serve the full test set at the server (after materializing the
+        # served model); decentralized strategies classify on-device —
+        # every client scores its own 1/N test shard in parallel, so
+        # measured wall time is one shard pass (+ any pre-serving
+        # aggregation the strategy's served_fn performs).
+        served_fn = strat.served_fn(self, state)
         x_test, y_true = self.dataset["test"]
-        shard = (len(x_test) if fl.strategy == "hfl"
+        shard = (len(x_test) if strat.centralized
                  else -(-len(x_test) // fl.num_clients))
         xs = jnp.asarray(x_test[:shard])
         best = None
@@ -350,7 +455,7 @@ class FederatedSimulation:
         m = classification_metrics(y_true, y_pred, 10)
 
         return FLResult(
-            strategy=fl.strategy, dataset=self.dataset["name"],
+            strategy=strat.name, dataset=self.dataset["name"],
             train_accuracy=train_acc, test_accuracy=m["accuracy"],
             build_time_s=build_timer.elapsed,
             classification_time_s=class_timer.elapsed,
@@ -359,243 +464,29 @@ class FederatedSimulation:
             round_train_acc=curves["train_acc"],
             round_train_loss=curves["train_loss"],
             round_test_acc=curves["test_acc"],
+            extra=strat.extra_result(self, state),
         )
 
     def _track(self, curves, accs, losses, model_for_eval):
-        curves["train_acc"].append(float(np.mean(accs)))
-        curves["train_loss"].append(float(np.mean(losses)))
+        curves["train_acc"].append(float(np.mean(np.asarray(accs))))
+        curves["train_loss"].append(float(np.mean(np.asarray(losses))))
         preds = self._eval(model_for_eval)
         curves["test_acc"].append(
             float(np.mean(preds == self.dataset["test"][1])))
 
-    def _run_hfl(self, curves):
-        """Paper §2.1: per round every client refines the group model; group
-        servers aggregate; the global server aggregates group models and
-        disseminates back to groups."""
-        fl = self.fl
-        groups = topology.hierarchical_groups(fl.num_clients, fl.num_groups)
-        group_models = [self.init_params] * fl.num_groups
-        global_model = self.init_params
-        defkw = self._defense_kwargs(fl.clients_per_group)
-        train_acc = 0.0
-        for rnd in range(fl.rounds):
-            starts = list(group_models)      # round-start (attack base /
-            clients = [None] * fl.num_clients        # norm_clip centers)
-            accs, losses = [], []
-            for gi, g in enumerate(groups):
-                for c in g:
-                    clients[c], loss, acc = self._local_train(starts[gi], c)
-                    accs.append(acc)
-                    losses.append(loss)
-            # Byzantine uploads: corrupted between training & aggregation
-            clients = self._corrupt_clients(
-                clients, [starts[gi] for gi, g in enumerate(groups)
-                          for _ in g], range(fl.num_clients), rnd)
-            # tier 1 every round: group servers aggregate their clients —
-            # the defense boundary (DESIGN.md §8)
-            group_models = [
-                strategies.defended_fedavg(
-                    [clients[c] for c in g],
-                    weights=[self.weights[c] for c in g],
-                    center=starts[gi], **defkw)
-                for gi, g in enumerate(groups)]
-            # tier 2 with dissemination lag: the global server aggregates
-            # and pushes back only every `hfl_global_every` rounds (groups
-            # refine independently in between — paper Fig. 1's hierarchy)
-            if (rnd + 1) % fl.hfl_global_every == 0 or rnd == fl.rounds - 1:
-                global_model = strategies.hfl_aggregate(
-                    clients, groups, self.weights, centers=starts, **defkw)
-                group_models = [global_model] * fl.num_groups
-            train_acc = float(np.mean(accs))
-            self._track(curves, accs, losses, global_model)
-        # served model: global server re-aggregates at classification time
-        final_clients, final_starts = clients, starts
-        served = lambda: strategies.hfl_aggregate(
-            final_clients, groups, self.weights, centers=final_starts,
-            **defkw)
-        return served, train_acc
 
-    def _run_afl(self, curves):
-        """Paper §2.2: sample a client subset, train locally for E epochs,
-        aggregate directly (peer-to-peer FedAvg / gossip)."""
-        fl = self.fl
-        global_model = self.init_params
-        train_acc = 0.0
-        participants = list(range(fl.num_clients))
-        for rnd in range(fl.rounds):
-            participants = topology.sample_participants(
-                self.rng, fl.num_clients, fl.participation)
-            start = global_model             # round-start (base / center)
-            locals_, accs, losses = [], [], []
-            for c in participants:
-                p, loss, acc = self._local_train(start, c)
-                locals_.append(p)
-                accs.append(acc)
-                losses.append(loss)
-            locals_ = self._corrupt_clients(
-                locals_, [start] * len(participants), participants, rnd)
-            defkw = self._defense_kwargs(len(participants))
-            if fl.afl_mode == "gossip":
-                # defended mixing bounds Byzantine neighbors; the final
-                # consensus average over mixed models stays plain
-                nbrs = topology.ring_neighbors(len(locals_),
-                                               fl.gossip_neighbors)
-                locals_ = strategies.gossip_round(
-                    locals_, nbrs, defense=fl.defense, f=defkw["f"])
-                global_model = strategies.fedavg(
-                    locals_,
-                    weights=[self.weights[c] for c in participants])
-            else:
-                global_model = strategies.defended_fedavg(
-                    locals_,
-                    weights=[self.weights[c] for c in participants],
-                    center=start, **defkw)
-            train_acc = float(np.mean(accs))
-            self._track(curves, accs, losses, global_model)
-        last_locals, last_parts, last_start = locals_, participants, start
-        last_defkw = self._defense_kwargs(len(last_parts))
-        served = lambda: (
-            strategies.fedavg(last_locals,
-                              weights=[self.weights[c] for c in last_parts])
-            if fl.afl_mode == "gossip" else
-            strategies.defended_fedavg(
-                last_locals,
-                weights=[self.weights[c] for c in last_parts],
-                center=last_start, **last_defkw))
-        return served, train_acc
-
-    def _run_cfl(self, curves):
-        """Paper §2.3: continual — the model passes client to client; each
-        local update is merged into the evolving global parameters."""
-        fl = self.fl
-        model = self.init_params
-        train_acc = 0.0
-        attacking = fl.attack not in ("none", "label_flip")
-        for rnd in range(fl.rounds):
-            order = self.rng.permutation(fl.num_clients)
-            key = attacks.event_key(fl.seed, rnd)
-            accs, losses = [], []
-            for c in order:
-                local, loss, acc = self._local_train(model, c)
-                if attacking and self.attack_mask[c]:
-                    # base = the model this visit pulled (the carried
-                    # state), exactly the in-scan base of the vectorized
-                    # pass
-                    local = attacks.corrupt_tree(
-                        local, model, True,
-                        jax.random.fold_in(key, int(c)), kind=fl.attack,
-                        scale=fl.attack_scale)
-                if fl.defense == "norm_clip":
-                    from repro.core import robust
-                    local = robust.clip_update(model, local, fl.clip_tau)
-                model = strategies.cfl_merge(model, local, fl.merge_alpha)
-                accs.append(acc)
-                losses.append(loss)
-            train_acc = float(np.mean(accs))
-            self._track(curves, accs, losses, model)
-        final = model
-        served = lambda: final     # continually-merged model already serves
-        return served, train_acc
-
-    # -- vectorized-engine runners ------------------------------------------
-    # Same schedules as the loop runners above, but the whole federation is
-    # one stacked pytree: local training is a single vmap-of-scan dispatch
-    # per round (core/engine.py) and every aggregation event goes through
-    # the kernel-backed stacked operators (core/strategies.py). Batch
-    # construction consumes `rng` in the loop engine's exact order, so the
-    # engines agree up to float tolerance (see tests/test_engine.py).
-
-    def _run_hfl_vec(self, curves, rng, rounds):
-        fl, eng = self.fl, self.vec
-        w = np.asarray(self.weights, np.float32)
-        all_clients = list(range(fl.num_clients))
-        group_stack = engine_mod.replicate_tree(self.init_params,
-                                                fl.num_groups)
-        global_model = self.init_params
-        defkw = self._defense_kwargs(fl.clients_per_group)
-        train_acc = 0.0
-        for rnd in range(rounds):
-            data = eng.batched_clients(rng, all_clients, fl.local_epochs)
-            start_groups = group_stack       # (G, ...) round-start models
-            params = engine_mod.repeat_groups(group_stack,
-                                              fl.clients_per_group)
-            base = params                    # per-client round-start stack
-            params, losses, _ = eng.train(params, data)
-            accs = eng.local_accs(params, all_clients)
-            params = self._corrupt_stacked(params, base, all_clients, rnd)
-            group_stack, group_w = strategies.hfl_tier1_stacked(
-                params, fl.num_groups, w, centers=start_groups, **defkw)
-            if (rnd + 1) % fl.hfl_global_every == 0 or rnd == rounds - 1:
-                global_model = strategies.fedavg_stacked(group_stack, group_w)
-                group_stack = engine_mod.replicate_tree(global_model,
-                                                        fl.num_groups)
-            train_acc = float(np.mean(accs))
-            self._track(curves, accs,
-                        np.asarray(losses[:, -eng.nb:]).mean(axis=1),
-                        global_model)
-        final_params, final_starts = params, start_groups
-        served = lambda: strategies.hfl_aggregate_stacked(
-            final_params, fl.num_groups, w, centers=final_starts, **defkw)
-        return served, train_acc
-
-    def _run_afl_vec(self, curves, rng, rounds):
-        fl, eng = self.fl, self.vec
-        w = np.asarray(self.weights, np.float64)
-        global_model = self.init_params
-        train_acc = 0.0
-        for rnd in range(rounds):
-            participants = topology.sample_participants(
-                rng, fl.num_clients, fl.participation)
-            data = eng.batched_clients(rng, participants, fl.local_epochs)
-            start = global_model             # round-start (base / center)
-            base = engine_mod.replicate_tree(start, len(participants))
-            params, losses, _ = eng.train(base, data)
-            accs = eng.local_accs(params, participants)
-            params = self._corrupt_stacked(params, base, participants, rnd)
-            defkw = self._defense_kwargs(len(participants))
-            pw = w[participants]
-            if fl.afl_mode == "gossip":
-                nbrs = topology.ring_neighbors(len(participants),
-                                               fl.gossip_neighbors)
-                params = strategies.gossip_stacked(
-                    params, nbrs, defense=fl.defense, f=defkw["f"])
-                global_model = strategies.afl_aggregate_stacked(params, pw)
-            else:
-                global_model = strategies.defended_aggregate_stacked(
-                    params, pw, center=start, **defkw)
-            train_acc = float(np.mean(accs))
-            self._track(curves, accs,
-                        np.asarray(losses[:, -eng.nb:]).mean(axis=1),
-                        global_model)
-        last_params, last_w, last_start = params, pw, start
-        last_defkw = self._defense_kwargs(len(participants))
-        served = lambda: (
-            strategies.afl_aggregate_stacked(last_params, last_w)
-            if fl.afl_mode == "gossip" else
-            strategies.defended_aggregate_stacked(
-                last_params, last_w, center=last_start, **last_defkw))
-        return served, train_acc
-
-    def _run_cfl_vec(self, curves, rng, rounds):
-        fl, eng = self.fl, self.vec
-        model = self.init_params
-        train_acc = 0.0
-        for rnd in range(rounds):
-            order = rng.permutation(fl.num_clients)
-            data = eng.batched_clients(rng, order, fl.local_epochs)
-            # per-visit attack inputs, permuted into visit order; keys
-            # derive from absolute ids so they match the loop engine
-            keys = attacks.client_keys(attacks.event_key(fl.seed, rnd),
-                                       order)
-            model, losses, accs = eng.cfl_round(
-                model, order, data, fl.merge_alpha, attack=fl.attack,
-                attack_scale=fl.attack_scale,
-                attack_flags=self.attack_mask[order], attack_keys=keys,
-                defense=fl.defense, clip_tau=fl.clip_tau)
-            train_acc = float(np.mean(np.asarray(accs)))
-            self._track(curves, np.asarray(accs),
-                        np.asarray(losses[:, -eng.nb:]).mean(axis=1),
-                        model)
-        final = model
-        served = lambda: final
-        return served, train_acc
+def __getattr__(name):  # noqa: N807
+    if name == "DEFENSES_BY_EVENT":
+        warnings.warn(
+            "simulation.DEFENSES_BY_EVENT is deprecated: per-event "
+            "defense validity is declared on each Strategy "
+            "(Strategy.defenses; see repro.api)", DeprecationWarning,
+            stacklevel=2)
+        hfl = strat_mod.get_strategy("hfl")
+        afl = strat_mod.get_strategy("afl")
+        cfl = strat_mod.get_strategy("cfl")
+        return {"hfl": hfl.defenses["hierarchical"],
+                "afl-fedavg": afl.defenses["star"],
+                "afl-gossip": afl.defenses["ring"],
+                "cfl": cfl.defenses["sequential"]}
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

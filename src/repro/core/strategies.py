@@ -1,455 +1,582 @@
-"""Aggregation strategies — the paper's contribution as composable ops.
+"""Strategy plugin API — every FL architecture as one pluggable object.
 
-Two implementations of the same math, validated against each other in
-tests:
+PRs 1-3 encoded each architecture in duplicated per-engine runners
+(`FederatedSimulation._run_{hfl,afl,cfl}` + `_vec` twins, plus
+`AsyncSimulation`'s own dispatch), so every new axis (heterogeneity,
+attacks, defenses) had to be threaded through six paths by hand. This
+module replaces that with a small lifecycle protocol driven by ONE
+generic round driver (`core/simulation.py`):
 
-* HOST level — operates on a *list* of client parameter pytrees (the
-  paper-faithful simulation on CPU; arbitrary client counts).
-* MESH level — operates inside `shard_map` where the leading "clients"
-  axis of every parameter is sharded over a mesh axis; aggregation
-  lowers to `jax.lax` collectives (psum / collective_permute), which is
-  what the multi-pod dry-run compiles and the roofline's collective
-  term measures:
+    init_state           -> the strategy's mutable round state
+    select_participants  -> RoundPlan: who trains this event, from which
+                            base models (async consumes its tick-batch
+                            timeline here)
+    local_spec           -> LocalSpec: the local objective (FedProx adds
+                            its proximal term here)
+    aggregate_event      -> fold the (possibly corrupted) uploads into
+                            the state through the kernel-backed stacked
+                            operators (`core/aggregation.py`), applying
+                            the per-event defense
+    round_model / served_fn / extra_result -> metric + serving surface
 
-      HFL  -> two psums (axis_index_groups tier, then global tier)
-              [multi-pod: psum over "data" then psum over "pod"]
-      AFL  -> masked weighted psum (fedavg mode)
-              ring collective_permute exchange (gossip mode)
-      CFL  -> psum + EMA continual merge (see DESIGN.md §2 adaptation)
+The driver owns everything strategy-independent: engine dispatch (loop
+per-client jits vs the vectorized stacked scan), rng-parity bookkeeping
+(DESIGN.md §4), attack corruption between training and aggregation
+(DESIGN.md §8), defense-argument resolution, curve tracking, and the
+paper's timing protocol. A strategy therefore states only its schedule
+and its aggregation math — and is automatically available under both
+engines, the attack axis, and `run_scenario`.
 
-All operators implement Eq. (5): theta_g = sum_c (n_c / N) theta_c,
-generalized with per-client weights / participation masks.
+Strategies register by name (`@register_strategy`); `get_strategy`
+resolves names for `FLConfig.strategy` and the scenario registry.
+Third-party plugins subclass `Strategy` and register from their own
+code — no core edits (tests/test_plugin_strategy.py proves this).
+
+Which defenses are valid at a strategy's aggregation event is declared
+ON the strategy (`defenses`, per topology) — the old
+`simulation.DEFENSES_BY_EVENT` / `scenarios.DEFENSES_BY_STRATEGY`
+tables are now deprecated views of these declarations (DESIGN.md §9).
+
+Deprecation: the aggregation OPERATORS that used to live here moved to
+`core/aggregation.py`; module-level `__getattr__` keeps the old names
+importable with a DeprecationWarning.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence
+import dataclasses
+import importlib
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import aggregation as agg
+from repro.core import engine as engine_mod
 from repro.core import topology
+from repro.core.fl_types import DEFENSES
+from repro.models import cnn as cnn_mod
+from repro.optim import optimizers
 
 Params = Any
 
-
-# ===========================================================================
-# host-level (list-of-pytrees) operators — used by the paper simulation
-# ===========================================================================
-
-def fedavg(client_params: List[Params],
-           weights: Optional[Sequence[float]] = None,
-           use_kernel: bool = False) -> Params:
-    """Weighted parameter average over clients (Eq. 5)."""
-    n = len(client_params)
-    w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
-    w = (w / w.sum()).astype(np.float32)
-    if use_kernel:
-        from repro.kernels import ops as kops
-        return kops.fedavg_aggregate_tree(client_params, jnp.asarray(w))
-    return jax.tree.map(
-        lambda *leaves: sum(wi * l for wi, l in zip(w, leaves)),
-        *client_params)
+# Bump when the Strategy protocol / registry semantics change in a way
+# result-document consumers can observe (recorded in every run_scenario
+# document since result-schema v2.1).
+STRATEGY_REGISTRY_VERSION = 1
 
 
-def defended_fedavg(client_params: List[Params],
-                    weights: Optional[Sequence[float]] = None, *,
-                    defense: str = "none", f: int = 1, tau: float = 10.0,
-                    center: Optional[Params] = None) -> Params:
-    """Host-level robust FedAvg (loop engine's aggregation events): stack
-    the client list and dispatch through `core.robust` — exactly the
-    stacked engine's defended operator, so the engines share one defense
-    implementation (DESIGN.md §8)."""
-    if defense in ("none", None):
-        return fedavg(client_params, weights)
-    from repro.core import robust
-    from repro.core.engine import stack_forest
-    return robust.robust_aggregate_stacked(
-        stack_forest(list(client_params)), defense, weights=weights,
-        f=f, tau=tau, center=center)
+# ---------------------------------------------------------------------------
+# plan / local-objective descriptors
+# ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class RoundPlan:
+    """One aggregation event's schedule, as the strategy declared it.
 
-def hfl_aggregate(client_params: List[Params], groups: List[List[int]],
-                  weights: Optional[Sequence[float]] = None, *,
-                  defense: str = "none", f: int = 1, tau: float = 10.0,
-                  centers: Optional[List[Params]] = None) -> Params:
-    """Two-tier FedAvg: per-group aggregate, then global over group models,
-    weighted by group sample counts. A defense applies at tier 1 — the
-    group server is the first aggregation boundary Byzantine clients hit;
-    tier 2 averages group SERVER models, which the threat model trusts
-    (DESIGN.md §8). `centers` (per-group round-start models) feed
-    norm_clip; `f` is the per-group Byzantine allowance."""
-    w = (np.ones(len(client_params)) if weights is None
-         else np.asarray(weights, np.float64))
-    group_models, group_w = [], []
-    for gi, g in enumerate(groups):
-        group_models.append(defended_fedavg(
-            [client_params[c] for c in g], weights=[w[c] for c in g],
-            defense=defense, f=f, tau=tau,
-            center=None if centers is None else centers[gi]))
-        group_w.append(sum(w[c] for c in g))
-    return fedavg(group_models, weights=group_w)
-
-
-def afl_aggregate(client_params: List[Params], participants: Sequence[int],
-                  weights: Optional[Sequence[float]] = None) -> Params:
-    """FedAvg over the sampled participant subset (paper's AFL round)."""
-    w = (np.ones(len(client_params)) if weights is None
-         else np.asarray(weights, np.float64))
-    return fedavg([client_params[c] for c in participants],
-                  weights=[w[c] for c in participants])
-
-
-def gossip_round(client_params: List[Params],
-                 neighbors: List[List[int]], *,
-                 defense: str = "none", f: int = 1) -> List[Params]:
-    """One synchronous gossip exchange: every client averages with its
-    ring neighbors — or, defended, takes the coordinate-wise median /
-    trimmed mean of its neighborhood (each honest node bounds what a
-    Byzantine neighbor can inject; norm_clip/krum don't apply to the
-    tiny neighborhood sets). Returns the new per-client model list."""
-    out = []
-    for c, nbrs in enumerate(neighbors):
-        members = [client_params[c]] + [client_params[j] for j in nbrs]
-        out.append(defended_fedavg(members, defense=defense, f=f))
-    return out
-
-
-def cfl_merge(global_params: Params, client_params: Params,
-              alpha: float) -> Params:
-    """Continual merge: theta_g <- (1-alpha) theta_g + alpha theta_c."""
-    return jax.tree.map(
-        lambda g, c: ((1.0 - alpha) * g.astype(jnp.float32)
-                      + alpha * c.astype(jnp.float32)).astype(g.dtype),
-        global_params, client_params)
-
-
-# ===========================================================================
-# stacked-array operators — the vectorized engine's aggregation events
-# ===========================================================================
-# These operate on ONE pytree whose leaves carry a leading client axis
-# (core/engine.py). Every weighted reduction lowers onto the Pallas
-# `fedavg_agg` kernel through the ravel path in kernels/ops.py (interpret
-# mode on CPU, native on TPU); gossip is a dense mixing matmul (each
-# output row mixes several inputs — not a single weighted reduction).
-
-
-def _stacked_weights(n: int, weights) -> jnp.ndarray:
-    w = (jnp.ones((n,), jnp.float32) if weights is None
-         else jnp.asarray(weights, jnp.float32))
-    return w / jnp.sum(w)
-
-
-def fedavg_stacked(stacked: Params, weights=None, *,
-                   interpret=None) -> Params:
-    """Kernel-backed Eq. (5) over a stacked federation -> single pytree."""
-    from repro.kernels import ops as kops
-    n = jax.tree.leaves(stacked)[0].shape[0]
-    return kops.fedavg_aggregate_stacked(
-        stacked, _stacked_weights(n, weights), interpret=interpret)
-
-
-def defended_aggregate_stacked(stacked: Params, weights=None, *,
-                               defense: str = "none", f: int = 1,
-                               tau: float = 10.0, center=None,
-                               interpret=None) -> Params:
-    """One defended aggregation event on the stack: plain kernel FedAvg
-    when `defense` is "none", else the `core.robust` operator family
-    (median / trimmed-mean selection kernel, norm_clip with `center`,
-    Krum). The single dispatch point every strategy's robust variant
-    funnels through."""
-    if defense in ("none", None):
-        return fedavg_stacked(stacked, weights, interpret=interpret)
-    from repro.core import robust
-    return robust.robust_aggregate_stacked(
-        stacked, defense, weights=weights, f=f, tau=tau, center=center,
-        interpret=interpret)
-
-
-def hfl_tier1_stacked(stacked: Params, num_groups: int, weights=None, *,
-                      defense: str = "none", f: int = 1, tau: float = 10.0,
-                      centers: Params = None, interpret=None):
-    """Group-server aggregation over the contiguous equal-size groups of
-    `topology.hierarchical_groups`: (C, ...) -> ((G, ...) group models,
-    (G,) group sample-weight totals) — one kernel call per group.
-
-    A defense applies here, at the first aggregation boundary Byzantine
-    clients reach (DESIGN.md §8): each group server robust-aggregates its
-    own slice. `centers` is the (G, ...) stacked round-start group models
-    (norm_clip's reference); `f` is the per-group Byzantine allowance."""
-    from repro.core import robust
-    from repro.kernels import ops as kops
-    mat = kops.stacked_ravel(stacked)
-    C = mat.shape[0]
-    if C % num_groups:
-        raise ValueError(f"{C} clients not divisible into {num_groups} groups")
-    per = C // num_groups
-    w = (jnp.ones((C,), jnp.float32) if weights is None
-         else jnp.asarray(weights, jnp.float32))
-    center_rows = (kops.stacked_ravel(centers) if centers is not None
-                   else None)
-    rows, totals = [], []
-    for g in range(num_groups):
-        wg = w[g * per:(g + 1) * per]
-        gmat = mat[g * per:(g + 1) * per]
-        if defense in ("none", None):
-            rows.append(kops.fedavg_aggregate(gmat, wg / jnp.sum(wg),
-                                              interpret=interpret))
-        else:
-            rows.append(robust.robust_aggregate(
-                gmat, defense, weights=wg, f=f, tau=tau,
-                center=None if center_rows is None else center_rows[g],
-                interpret=interpret))
-        totals.append(jnp.sum(wg))
-    return (kops.stacked_unravel(stacked, jnp.stack(rows)),
-            jnp.stack(totals))
-
-
-def hfl_aggregate_stacked(stacked: Params, num_groups: int, weights=None, *,
-                          defense: str = "none", f: int = 1,
-                          tau: float = 10.0, centers: Params = None,
-                          interpret=None) -> Params:
-    """Two-tier HFL on the stack: tier-1 group kernels (optionally
-    defended), tier-2 kernel over the (G, ...) group models weighted by
-    group totals (group servers are trusted — DESIGN.md §8)."""
-    groups, gw = hfl_tier1_stacked(stacked, num_groups, weights,
-                                   defense=defense, f=f, tau=tau,
-                                   centers=centers, interpret=interpret)
-    return fedavg_stacked(groups, gw, interpret=interpret)
-
-
-def afl_aggregate_stacked(stacked: Params, weights=None, participate=None, *,
-                          interpret=None) -> Params:
-    """Masked FedAvg over sampled participants: `participate` is a (C,)
-    0/1 mask folded into the kernel weights (non-participants contribute
-    zero; at least one participant required)."""
-    n = jax.tree.leaves(stacked)[0].shape[0]
-    w = (jnp.ones((n,), jnp.float32) if weights is None
-         else jnp.asarray(weights, jnp.float32))
-    if participate is not None:
-        w = w * jnp.asarray(participate, jnp.float32)
-    return fedavg_stacked(stacked, w, interpret=interpret)
-
-
-def gossip_stacked(stacked: Params, neighbors: List[List[int]], *,
-                   defense: str = "none", f: int = 1) -> Params:
-    """Synchronous ring gossip on the stack. Undefended: a (C, C)
-    row-stochastic mixing matrix (self + neighbors, uniform) applied to
-    the raveled parameter matrix — matches host `gossip_round` exactly.
-
-    Defended (median / trimmed_mean): each client takes the trimmed mean
-    of its gathered neighborhood instead. That is no longer a linear
-    mixing (selection per coordinate per neighborhood), so it runs as one
-    batched sort over the (C, K, N) gathered tensor rather than the
-    selection kernel — neighborhoods are tiny (K = degree + 1), the
-    client axis provides the parallelism. Matches the defended host
-    `gossip_round` exactly (equal-size ring neighborhoods)."""
-    from repro.kernels import ops as kops
-    mat = kops.stacked_ravel(stacked)
-    C = mat.shape[0]
-    if defense in ("none", None):
-        mix = np.zeros((C, C), np.float32)
-        for c, nbrs in enumerate(neighbors):
-            members = [c] + list(nbrs)
-            mix[c, members] = 1.0 / len(members)
-        return kops.stacked_unravel(stacked, jnp.asarray(mix) @ mat)
-    if defense not in ("median", "trimmed_mean"):
-        raise ValueError(f"gossip mixing supports median/trimmed_mean "
-                         f"defenses, not {defense!r} (DESIGN.md §8)")
-    sizes = {len(n) for n in neighbors}
-    if len(sizes) != 1:
-        raise ValueError("defended gossip needs equal-size neighborhoods "
-                         "(ring topology)")
-    K = sizes.pop() + 1
-    idx = np.stack([np.asarray([c] + list(nbrs))
-                    for c, nbrs in enumerate(neighbors)])       # (C, K)
-    gathered = jnp.sort(mat[jnp.asarray(idx)], axis=1)          # (C, K, N)
-    t = (K - 1) // 2 if defense == "median" else min(f, (K - 1) // 2)
-    mixed = jnp.mean(gathered[:, t:K - t], axis=1)
-    return kops.stacked_unravel(stacked, mixed)
-
-
-def cfl_merge_stacked(global_params: Params, client_params: Params,
-                      alpha, *, interpret=None) -> Params:
-    """Continual merge as a C=2 kernel reduction with weights
-    (1-alpha, alpha) — same math as host `cfl_merge`, kernel-routed.
-    Traceable (alpha may be a tracer), so it composes with lax.scan."""
-    stacked = jax.tree.map(lambda g, c: jnp.stack([g, c]),
-                           global_params, client_params)
-    alpha = jnp.asarray(alpha, jnp.float32)
-    return fedavg_stacked(stacked, jnp.stack([1.0 - alpha, alpha]),
-                          interpret=interpret)
-
-
-def defended_cfl_merge(global_params: Params, client_params: Params,
-                       alpha, tau: float, *, interpret=None) -> Params:
-    """norm_clip-defended continual merge: the arriving update's delta is
-    L2-clipped against the current global model before the EMA fold — the
-    only defense available at a redundancy-1 merge event (DESIGN.md §8).
-    Traceable (used inside the vectorized CFL scan); the loop engine
-    applies the identical clip before its host `cfl_merge`."""
-    from repro.core import robust
-    clipped = robust.clip_deltas_stacked(
-        global_params, jax.tree.map(lambda l: l[None], client_params), tau)
-    return cfl_merge_stacked(global_params,
-                             jax.tree.map(lambda l: l[0], clipped),
-                             alpha, interpret=interpret)
-
-
-def staleness_batch_weights(alphas) -> jnp.ndarray:
-    """Weights that make ONE weighted reduction equal k SEQUENTIAL
-    continual merges with rates alphas[0..k-1] (in that order):
-
-        theta <- (1-a_i) theta + a_i theta_i   for i = 0..k-1
-
-    composes to  theta * prod_j (1-a_j)
-                 + sum_i theta_i * a_i * prod_{j>i} (1-a_j),
-
-    so the returned (k+1,) vector is [prod(1-a), a_0*suffix_0, ...,
-    a_{k-1}*1] with suffix_i = prod_{j>i}(1-a_j). The entries telescope
-    to sum exactly 1 — no renormalization needed (DESIGN.md §5)."""
-    a = jnp.asarray(alphas, jnp.float32)
-    keep = jnp.cumprod((1.0 - a)[::-1])[::-1]         # prod_{j>=i}(1-a_j)
-    suffix = jnp.concatenate([keep[1:], jnp.ones((1,), jnp.float32)])
-    return jnp.concatenate([keep[:1], a * suffix])
-
-
-def async_batch_merge(global_params: Params, stacked_updates: Params,
-                      alphas, *, interpret=None) -> Params:
-    """Batched staleness-aware merge: fold k same-tick client arrivals
-    (leading axis k, per-arrival rates `alphas`) into the server model in
-    one kernel pass — exactly equivalent to k sequential `cfl_merge`
-    calls (tests/test_async_engine.py pins the equivalence)."""
-    from repro.kernels import ops as kops
-    return kops.merge_aggregate_stacked(
-        global_params, stacked_updates, staleness_batch_weights(alphas),
-        interpret=interpret)
-
-
-# ===========================================================================
-# mesh-level (inside shard_map) operators — pod-scale FL
-# ===========================================================================
-
-def _axis_size(name: str) -> int:
-    """Static mesh-axis size inside shard_map — `jax.lax.axis_size` on new
-    jax, `jax.core.axis_frame` (which returns the size) on 0.4.x."""
-    if hasattr(jax.lax, "axis_size"):
-        return int(jax.lax.axis_size(name))
-    return int(jax.core.axis_frame(name))
-
-
-def _wavg_psum(params, weight, axes):
-    """Weighted mean over mesh axes: psum(w*theta)/psum(w)."""
-    total_w = jax.lax.psum(weight, axes)
-    return jax.tree.map(
-        lambda p: (jax.lax.psum(p.astype(jnp.float32) * weight, axes)
-                   / total_w).astype(p.dtype),
-        params)
-
-
-def mesh_hfl(params, weight, *, client_axis="data",
-             num_groups: int = 2, pod_axis: Optional[str] = None):
-    """Two-tier hierarchical aggregation.
-
-    Single-pod: tier 1 over `axis_index_groups` partitions of the client
-    axis, tier 2 over the full client axis. Multi-pod: tier 1 over the
-    intra-pod client axis, tier 2 over the pod axis — the exact
-    clients -> group-server -> global-server schedule of paper Fig. 1.
+    participants — absolute client ids in TRAINING ORDER (the order the
+        rng-parity contract consumes batch permutations in).
+    bases        — one round-start model per participant (the attack
+        base and norm_clip center; repeat a shared model per slot).
+    event        — the aggregation-event index (attack noise keying).
+    alphas       — per-participant merge rates (async staleness).
+    meta         — strategy-private scratch carried to aggregate_event.
     """
-    if pod_axis is not None:
-        group = _wavg_psum(params, weight, client_axis)          # tier 1
-        gw = jax.lax.psum(weight, client_axis)
-        return jax.tree.map(                                      # tier 2
-            lambda p: (jax.lax.psum(p.astype(jnp.float32) * gw, pod_axis)
-                       / jax.lax.psum(gw, pod_axis)).astype(p.dtype),
-            group)
-
-    axis_size = _axis_size(client_axis)
-    groups = topology.mesh_axis_groups(axis_size, num_groups)
-    # tier 1: group-server aggregate — partial collectives over the
-    # axis_index_groups partition where the backend supports them, else a
-    # one-hot-masked full psum: every device contributes its weighted
-    # params into its group's slot of a (G, ...) expansion, the full-axis
-    # psum produces all G group sums at once, and each device reads back
-    # its own group's row (identical math, 0.4.x-shard_map portable).
-    try:
-        gw = jax.lax.psum(weight, client_axis, axis_index_groups=groups)
-        group = jax.tree.map(
-            lambda p: (jax.lax.psum(p.astype(jnp.float32) * weight,
-                                    client_axis, axis_index_groups=groups)
-                       / gw).astype(p.dtype),
-            params)
-    except NotImplementedError:
-        per = axis_size // num_groups
-        idx = jax.lax.axis_index(client_axis)
-        onehot = (jnp.arange(num_groups) == idx // per).astype(jnp.float32)
-        gw = jnp.tensordot(onehot,
-                           jax.lax.psum(onehot * weight, client_axis), axes=1)
-
-        def tier1(p):
-            e = (onehot.reshape((num_groups,) + (1,) * p.ndim)
-                 * (p.astype(jnp.float32) * weight))
-            return (jnp.tensordot(onehot, jax.lax.psum(e, client_axis),
-                                  axes=1) / gw).astype(p.dtype)
-
-        group = jax.tree.map(tier1, params)
-    # tier 2: global-server aggregate over group models. Each group model
-    # is replicated across its (equal-size) group, so the gw-weighted sum
-    # over the full axis overcounts numerator AND denominator by exactly
-    # the group size — the factors cancel and this is the correct
-    # group-weight-weighted mean (pinned against host `hfl_aggregate` in
-    # test_fl_mesh_dryrun.py::test_mesh_hfl_matches_host).
-    return jax.tree.map(
-        lambda p: (jax.lax.psum(p.astype(jnp.float32) * gw, client_axis)
-                   / jax.lax.psum(gw, client_axis) ).astype(p.dtype),
-        group)
+    participants: List[int]
+    bases: List[Params]
+    event: int
+    alphas: Optional[Sequence[float]] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
-def mesh_afl_fedavg(params, weight, participate, *, client_axis="data",
-                    pod_axis: Optional[str] = None):
-    """Masked FedAvg over sampled participants. Non-participants keep the
-    aggregate too (they would fetch it lazily in a real deployment; at pod
-    scale every device holds the consensus model after the collective)."""
-    axes = (client_axis,) if pod_axis is None else (client_axis, pod_axis)
-    m = participate.astype(jnp.float32) * weight
-    return _wavg_psum(params, m, axes)
+@dataclasses.dataclass(frozen=True)
+class LocalSpec:
+    """The local objective one event trains.
+
+    `loss_fn(params, batch[, extra])` is the single-model loss (loop
+    engine and the CFL scan); `stacked_loss_fn` its leading-client-axis
+    twin. `extra="bases"` passes each participant's round-start model as
+    the third argument (FedProx's proximal reference) — the function
+    objects MUST be stable across events (they key the jit cache)."""
+    loss_fn: Callable = cnn_mod.cnn_loss
+    stacked_loss_fn: Callable = cnn_mod.cnn_loss_stacked
+    extra: Optional[str] = None           # None | "bases"
 
 
-def mesh_afl_gossip(params, *, client_axis="data", steps: int = 1):
-    """Ring gossip: each client averages with its +-1 ring neighbors via
-    collective_permute — O(2 * |params|) link traffic per step, no global
-    collective. Iterating converges to the consensus mean."""
-    n = _axis_size(client_axis)
-    fwd = [(i, (i + 1) % n) for i in range(n)]
-    bwd = [(i, (i - 1) % n) for i in range(n)]
+# ---------------------------------------------------------------------------
+# the Strategy protocol
+# ---------------------------------------------------------------------------
 
-    def one_step(p):
-        def mix(x):
-            x32 = x.astype(jnp.float32)
-            left = jax.lax.ppermute(x32, client_axis, perm=fwd)
-            right = jax.lax.ppermute(x32, client_axis, perm=bwd)
-            return ((x32 + left + right) / 3.0).astype(x.dtype)
-        return jax.tree.map(mix, p)
+class Strategy:
+    """Base class of the plugin protocol (see module docstring).
 
-    for _ in range(steps):
-        params = one_step(params)
-    return params
+    Class attributes (the declarative half):
+      name        — registry key (`FLConfig.strategy` / ScenarioSpec).
+      topologies  — communication graphs the strategy supports.
+      defenses    — {topology: valid defense names} at this strategy's
+                    aggregation event (DESIGN.md §8/§9).
+      centralized — True: the served model lives at a central server and
+                    classification scores the full test set (paper
+                    §1.2.7); False: on-device 1/N-shard classification.
+      track_curves — False disables per-event curve tracking (async:
+                    per-batch test-set evals would distort makespan).
+      mean_train_acc_over_events — True reports the mean local accuracy
+                    over ALL events (async); False the last event's.
+      timeline_result — True declares that `extra_result` carries the
+                    timeline measurement contract (merges / batches /
+                    mean_staleness / makespan / dropped_clients /
+                    participants) consumed by `run_scenario`'s async
+                    block; per-second throughput then counts batches,
+                    not configured rounds.
+    """
+
+    name: str = ""
+    topologies: Tuple[str, ...] = ("star",)
+    defenses: Dict[str, Tuple[str, ...]] = {"star": DEFENSES}
+    centralized = False
+    track_curves = True
+    mean_train_acc_over_events = False
+    timeline_result = False
+
+    def __init__(self, fl):
+        self.fl = fl
+
+    # -- validation ---------------------------------------------------------
+    def active_topology(self) -> str:
+        return self.topologies[0]
+
+    def validate(self):
+        """Raise if the config selects a topology this strategy does not
+        declare, or a defense invalid at its aggregation event (per-event
+        validity lives on the strategy)."""
+        fl = self.fl
+        topo = self.active_topology()
+        if topo not in self.topologies:
+            raise ValueError(
+                f"topology {topo!r} is invalid for strategy "
+                f"{self.name!r} (expected one of {self.topologies})")
+        allowed = self.defenses.get(topo, ("none",))
+        if fl.defense not in allowed:
+            raise ValueError(
+                f"defense {fl.defense!r} does not apply to the "
+                f"{self.name}/{topo} aggregation event "
+                f"(valid: {allowed}; DESIGN.md §8)")
+
+    def event_size(self) -> int:
+        """Client count of one aggregation event — the basis for the
+        Byzantine allowance `FLConfig.resolved_defense_f`."""
+        return self.fl.num_clients
+
+    # -- lifecycle (override these) -----------------------------------------
+    def init_state(self, sim) -> Any:
+        raise NotImplementedError
+
+    def num_events(self, sim) -> int:
+        return self.fl.rounds
+
+    def select_participants(self, sim, state, event: int,
+                            rng: np.random.Generator) -> RoundPlan:
+        raise NotImplementedError
+
+    def local_spec(self, sim, state, plan) -> LocalSpec:
+        return LocalSpec()
+
+    def aggregate_event(self, sim, state, plan, uploads) -> Any:
+        raise NotImplementedError
+
+    def round_model(self, state) -> Params:
+        raise NotImplementedError
+
+    def served_fn(self, sim, state) -> Callable[[], Params]:
+        state_ = state
+        return lambda: self.round_model(state_)
+
+    def extra_result(self, sim, state) -> Dict[str, Any]:
+        return {}
+
+    # -- default event driver (one generic synchronous round) ---------------
+    def run_event(self, sim, state, event: int, rng=None):
+        """plan -> local training (engine dispatch in the driver) ->
+        attack corruption -> defended aggregation. Returns
+        (state, per-client accs, per-client losses)."""
+        rng = sim.rng if rng is None else rng
+        plan = self.select_participants(sim, state, event, rng)
+        spec = self.local_spec(sim, state, plan)
+        uploads, losses, accs = sim.local_train(plan, spec, rng)
+        uploads = sim.corrupt(uploads, plan)
+        state = self.aggregate_event(sim, state, plan, uploads)
+        return state, accs, losses
+
+    def warmup(self, sim):
+        """Compile every program the timed driver loop will dispatch
+        (outside the build timer — DESIGN.md §3). The default dry-runs
+        one FINAL event with a throwaway rng (shapes are identical; the
+        sim's own rng is untouched)."""
+        sim.warmup_default(self)
+
+    def warmup_aggregate(self, sim):
+        """Loop-engine half of the warmup: dry-run one aggregation event
+        on dummy uploads so the stacked-operator programs (stack/ravel,
+        kernels, corruption, serving) compile outside the build timer —
+        the loop engine's training path compiles elsewhere, but since
+        PR 4 its aggregation runs the same kernel-backed stacked path as
+        the vectorized engine and needs the same warmup."""
+        rng = np.random.default_rng(self.fl.seed)
+        state = self.init_state(sim)
+        plan = self.select_participants(sim, state,
+                                        self.num_events(sim) - 1, rng)
+        # the round-trip through unstack/stack also compiles the eager
+        # per-leaf jnp.stack the loop engine's upload stacking dispatches
+        uploads = engine_mod.stack_forest(engine_mod.unstack_forest(
+            engine_mod.replicate_tree(sim.init_params,
+                                      len(plan.participants))))
+        state = self.aggregate_event(sim, state, plan,
+                                     sim.corrupt(uploads, plan))
+        self.served_fn(sim, state)()
 
 
-def mesh_cfl(params, global_params, weight, alpha, *, client_axis="data",
-             pod_axis: Optional[str] = None):
-    """Continual merge at pod scale: the federation mean is folded into
-    each client's evolving model with rate alpha (EMA of the consensus),
-    and the running global model is updated likewise. Returns
-    (new_client_params, new_global_params)."""
-    axes = (client_axis,) if pod_axis is None else (client_axis, pod_axis)
-    mean = _wavg_psum(params, weight, axes)
-    new_global = jax.tree.map(
-        lambda g, m: ((1 - alpha) * g.astype(jnp.float32)
-                      + alpha * m.astype(jnp.float32)).astype(g.dtype),
-        global_params, mean)
-    new_client = jax.tree.map(
-        lambda c, g: ((1 - alpha) * c.astype(jnp.float32)
-                      + alpha * g.astype(jnp.float32)).astype(c.dtype),
-        params, new_global)
-    return new_client, new_global
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+STRATEGY_REGISTRY: Dict[str, Type[Strategy]] = {}
+
+# built-in strategies living in other modules, loaded on first lookup
+# (async_agg imports this module, so it cannot be imported at top level)
+_BUILTIN_MODULES = ("repro.core.async_agg",)
+_builtins_loaded = False
+
+
+def register_strategy(cls: Type[Strategy]) -> Type[Strategy]:
+    """Class decorator: register a Strategy subclass under `cls.name`."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} needs a non-empty `name`")
+    if cls.name in STRATEGY_REGISTRY:
+        raise ValueError(f"duplicate strategy name {cls.name!r}")
+    STRATEGY_REGISTRY[cls.name] = cls
+    return cls
+
+
+def _load_builtins():
+    global _builtins_loaded
+    if not _builtins_loaded:
+        for mod in _BUILTIN_MODULES:
+            importlib.import_module(mod)
+        _builtins_loaded = True
+
+
+def get_strategy(name: str) -> Type[Strategy]:
+    _load_builtins()
+    if name not in STRATEGY_REGISTRY:
+        known = ", ".join(sorted(STRATEGY_REGISTRY))
+        raise KeyError(f"unknown strategy {name!r} (known: {known})")
+    return STRATEGY_REGISTRY[name]
+
+
+def strategy_names() -> List[str]:
+    _load_builtins()
+    return sorted(STRATEGY_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# built-in strategies: the paper's three architectures
+# ---------------------------------------------------------------------------
+
+@register_strategy
+class HFLStrategy(Strategy):
+    """Centralized two-tier hierarchy (paper §2.1): every round all
+    clients refine their group model; group servers aggregate (tier 1 —
+    the defense boundary); the global server aggregates group models and
+    disseminates every `hfl_global_every` rounds."""
+
+    name = "hfl"
+    topologies = ("hierarchical",)
+    defenses = {"hierarchical": DEFENSES}
+    centralized = True
+
+    def event_size(self) -> int:
+        return self.fl.clients_per_group
+
+    def init_state(self, sim):
+        return {"groups": engine_mod.replicate_tree(sim.init_params,
+                                                    self.fl.num_groups),
+                "global": sim.init_params, "last": None}
+
+    def select_participants(self, sim, state, event, rng):
+        fl = self.fl
+        per = fl.clients_per_group
+        group_models = engine_mod.unstack_forest(state["groups"])
+        plan = RoundPlan(list(range(fl.num_clients)),
+                         [group_models[c // per]
+                          for c in range(fl.num_clients)], event)
+        plan.meta["start_groups"] = state["groups"]   # (G, ...) centers
+        # stacked bases (vectorized engine / corruption) without a
+        # per-client jnp.stack: one repeat per leaf — built lazily so
+        # the loop engine without an attack never pays for it
+        groups = state["groups"]
+        plan.meta["bases_stacked_fn"] = (
+            lambda: engine_mod.repeat_groups(groups, per))
+        return plan
+
+    def aggregate_event(self, sim, state, plan, uploads):
+        fl = self.fl
+        w = np.asarray(sim.weights, np.float32)
+        defkw = sim.defense_kwargs(self.event_size())
+        groups, gw = agg.hfl_tier1_stacked(
+            uploads, fl.num_groups, w, centers=plan.meta["start_groups"],
+            **defkw)
+        global_model = state["global"]
+        if ((plan.event + 1) % fl.hfl_global_every == 0
+                or plan.event == fl.rounds - 1):
+            global_model = agg.fedavg_stacked(groups, gw)
+            groups = engine_mod.replicate_tree(global_model, fl.num_groups)
+        return {"groups": groups, "global": global_model,
+                "last": (uploads, plan.meta["start_groups"])}
+
+    def round_model(self, state):
+        return state["global"]
+
+    def served_fn(self, sim, state):
+        # the global server re-aggregates at classification time
+        fl = self.fl
+        w = np.asarray(sim.weights, np.float32)
+        defkw = sim.defense_kwargs(self.event_size())
+        uploads, starts = state["last"]
+        return lambda: agg.hfl_aggregate_stacked(
+            uploads, fl.num_groups, w, centers=starts, **defkw)
+
+
+@register_strategy
+class AFLStrategy(Strategy):
+    """Decentralized aggregated FL (paper §2.2): sample a participant
+    subset, train locally, aggregate directly — masked FedAvg (star) or
+    ring-neighbor gossip mixing (`afl_mode="gossip"`)."""
+
+    name = "afl"
+    topologies = ("star", "ring")
+    defenses = {"star": DEFENSES,
+                "ring": ("none", "median", "trimmed_mean")}
+
+    def active_topology(self) -> str:
+        return "ring" if self.fl.afl_mode == "gossip" else "star"
+
+    def event_size(self) -> int:
+        fl = self.fl
+        return max(1, int(round(fl.participation * fl.num_clients)))
+
+    def init_state(self, sim):
+        return {"global": sim.init_params, "last": None}
+
+    def select_participants(self, sim, state, event, rng):
+        fl = self.fl
+        parts = topology.sample_participants(rng, fl.num_clients,
+                                             fl.participation)
+        parts = [int(c) for c in parts]
+        plan = RoundPlan(parts, [state["global"]] * len(parts), event)
+        start, k = state["global"], len(parts)
+        plan.meta["bases_stacked_fn"] = (
+            lambda: engine_mod.replicate_tree(start, k))
+        return plan
+
+    def aggregate_event(self, sim, state, plan, uploads):
+        fl = self.fl
+        k = len(plan.participants)
+        defkw = sim.defense_kwargs(k)
+        pw = np.asarray(sim.weights, np.float64)[plan.participants]
+        start = plan.bases[0]
+        if fl.afl_mode == "gossip":
+            # defended mixing bounds Byzantine neighbors; the final
+            # consensus average over mixed models stays plain
+            nbrs = topology.ring_neighbors(k, fl.gossip_neighbors)
+            uploads = agg.gossip_stacked(uploads, nbrs,
+                                         defense=fl.defense, f=defkw["f"])
+            global_model = agg.afl_aggregate_stacked(uploads, pw)
+        else:
+            global_model = agg.defended_aggregate_stacked(
+                uploads, pw, center=start, **defkw)
+        return {"global": global_model,
+                "last": (uploads, pw, start, k)}
+
+    def round_model(self, state):
+        return state["global"]
+
+    def served_fn(self, sim, state):
+        fl = self.fl
+        uploads, pw, start, k = state["last"]
+        defkw = sim.defense_kwargs(k)
+        if fl.afl_mode == "gossip":
+            return lambda: agg.afl_aggregate_stacked(uploads, pw)
+        return lambda: agg.defended_aggregate_stacked(
+            uploads, pw, center=start, **defkw)
+
+
+@register_strategy
+class CFLStrategy(Strategy):
+    """Decentralized continual FL (paper §2.3): the model passes client
+    to client in an rng-permuted visit order; each local update merges
+    into the evolving global parameters. The sequential data dependence
+    means training and aggregation fuse — the event runs through the
+    driver's `sequential_round` (loop: per-visit host merges;
+    vectorized: one `lax.scan` over visits with the kernel-backed merge
+    and in-scan corruption)."""
+
+    name = "cfl"
+    topologies = ("sequential",)
+    defenses = {"sequential": ("none", "norm_clip")}
+
+    def init_state(self, sim):
+        return {"model": sim.init_params}
+
+    def select_participants(self, sim, state, event, rng):
+        order = [int(c) for c in rng.permutation(self.fl.num_clients)]
+        return RoundPlan(order, [state["model"]] * len(order), event)
+
+    def run_event(self, sim, state, event, rng=None):
+        rng = sim.rng if rng is None else rng
+        plan = self.select_participants(sim, state, event, rng)
+        model, losses, accs = sim.sequential_round(
+            state["model"], plan.participants, plan.event,
+            self.fl.merge_alpha, self.local_spec(sim, state, plan), rng)
+        return {"model": model}, accs, losses
+
+    def aggregate_event(self, sim, state, plan, uploads):
+        raise NotImplementedError(       # pragma: no cover
+            "CFL fuses training and aggregation in sequential_round")
+
+    def warmup_aggregate(self, sim):
+        """Nothing to warm: the loop-engine CFL pass merges through
+        eager host ops (compiled pieces are covered by warmup_loop)."""
+
+    def round_model(self, state):
+        return state["model"]
+
+
+# ---------------------------------------------------------------------------
+# new strategies, shipped through the plugin API alone (PR 4 proof)
+# ---------------------------------------------------------------------------
+
+@register_strategy
+class FedProxStrategy(AFLStrategy):
+    """FedProx (Li et al. 2020): AFL's schedule and aggregation with a
+    proximal local objective — each client minimizes
+
+        F_c(w) + (mu/2) ||w - w_base||^2
+
+    where w_base is the model it pulled at round start. The proximal
+    pull bounds client drift under heterogeneity. Implemented PURELY
+    through the plugin surface: `local_spec` returns a prox-augmented
+    loss with `extra="bases"`; schedule, engines, attacks and defenses
+    are inherited."""
+
+    name = "fedprox"
+    topologies = ("star",)
+    defenses = {"star": DEFENSES}
+
+    def __init__(self, fl):
+        super().__init__(fl)
+        mu = float(fl.prox_mu)
+
+        def _sq(p, r):
+            d = p.astype(jnp.float32) - r.astype(jnp.float32)
+            return jnp.square(d)
+
+        def prox_loss(params, batch, ref):
+            loss, acc = cnn_mod.cnn_loss(params, batch)
+            sq = sum(jnp.sum(_sq(p, r)) for p, r in
+                     zip(jax.tree.leaves(params), jax.tree.leaves(ref)))
+            return loss + 0.5 * mu * sq, acc
+
+        def prox_loss_stacked(params, batch, ref):
+            loss_c, acc_c = cnn_mod.cnn_loss_stacked(params, batch)
+            sq = sum(jnp.sum(_sq(p, r).reshape(p.shape[0], -1), axis=1)
+                     for p, r in zip(jax.tree.leaves(params),
+                                     jax.tree.leaves(ref)))
+            return loss_c + 0.5 * mu * sq, acc_c
+
+        # one stable spec per run: the function objects key the jit
+        # cache, so they must not be rebuilt per event
+        self._spec = LocalSpec(prox_loss, prox_loss_stacked, extra="bases")
+
+    def local_spec(self, sim, state, plan):
+        return self._spec
+
+
+class ServerOptStrategy(AFLStrategy):
+    """Server-optimizer family (Reddi et al. 2021, "Adaptive Federated
+    Optimization"): the round's (defended, kernel-backed) aggregate is
+    treated as a pseudo-gradient step
+
+        g_t = w_t - aggregate_t
+
+    and a SERVER optimizer applies it: FedAvgM (momentum SGD) or FedAdam
+    (Adam). With server_lr=1 and no momentum this degenerates exactly to
+    FedAvg (pinned in tests). Only `init_state`/`aggregate_event` differ
+    from AFL — the plugin API's second extensibility proof."""
+
+    topologies = ("star",)
+    defenses = {"star": DEFENSES}
+    centralized = True
+
+    def make_opt(self):
+        raise NotImplementedError
+
+    def init_state(self, sim):
+        opt = self.make_opt()
+        return {"global": sim.init_params, "opt": opt,
+                "opt_state": opt.init(sim.init_params), "last": None}
+
+    def aggregate_event(self, sim, state, plan, uploads):
+        fl = self.fl
+        k = len(plan.participants)
+        defkw = sim.defense_kwargs(k)
+        pw = np.asarray(sim.weights, np.float64)[plan.participants]
+        g = state["global"]
+        aggregate = agg.defended_aggregate_stacked(uploads, pw, center=g,
+                                                   **defkw)
+        pseudo_grad = jax.tree.map(
+            lambda a, b: (a - b).astype(jnp.float32), g, aggregate)
+        updates, opt_state = state["opt"].update(pseudo_grad,
+                                                 state["opt_state"], g)
+        return {"global": optimizers.apply_updates(g, updates),
+                "opt": state["opt"], "opt_state": opt_state,
+                "last": (uploads, pw, g, k)}
+
+    def served_fn(self, sim, state):
+        # the server optimizer's state lives server-side: serve its model
+        model = state["global"]
+        return lambda: model
+
+
+@register_strategy
+class FedAvgMStrategy(ServerOptStrategy):
+    """FedAvgM: server momentum-SGD over the round pseudo-gradient."""
+    name = "fedavgm"
+
+    def make_opt(self):
+        return optimizers.sgd(self.fl.server_lr,
+                              momentum=self.fl.server_momentum)
+
+
+@register_strategy
+class FedAdamStrategy(ServerOptStrategy):
+    """FedAdam: server Adam over the round pseudo-gradient."""
+    name = "fedadam"
+
+    def make_opt(self):
+        return optimizers.adam(self.fl.server_lr)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: the aggregation operators formerly defined here
+# ---------------------------------------------------------------------------
+
+def __getattr__(name):  # noqa: N807
+    if hasattr(agg, name) and not name.startswith("_"):
+        warnings.warn(
+            f"repro.core.strategies.{name} moved to "
+            f"repro.core.aggregation.{name} (the strategies module now "
+            f"hosts the Strategy plugin API; import via repro.api)",
+            DeprecationWarning, stacklevel=2)
+        return getattr(agg, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

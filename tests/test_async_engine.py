@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import strategies
+from repro.core import aggregation as strategies
 from repro.core.async_agg import (AsyncSimulation, make_speeds,
                                   staleness_alpha)
 from repro.core.fl_types import FLConfig

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import attacks, robust, scenarios, secure_agg, strategies
+from repro.core import aggregation as strategies
+from repro.core import attacks, robust, scenarios, secure_agg
 from repro.core.engine import stack_forest
 from repro.core.fl_types import FLConfig
 from repro.core.simulation import FederatedSimulation
@@ -374,7 +375,8 @@ def test_result_schema_v2_attack_block():
         rounds=1, participation=1.0, attack="sign_flip",
         attack_fraction=0.25, attack_scale=2.0, defense="median")
     res = scenarios.run_scenario(spec)
-    assert res["schema_version"] == 2
+    assert res["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
+    assert res["strategy"]["plugin"] == "afl"
     blk = res["attack"]
     assert blk["attack"] == "sign_flip" and blk["defense"] == "median"
     assert blk["attacked_clients"] == [
@@ -393,7 +395,12 @@ def test_result_schema_v1_backward_compat_read():
     assert doc["attack"] is None
     assert doc["metrics"]["f1"] == 0.5
     v2 = {"schema_version": 2, "scenario": "new", "attack": None}
-    assert scenarios.load_result(v2) is v2
+    doc2 = scenarios.load_result(v2)
+    assert doc2["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
+    assert doc2["attack"] is None
+    current = {"schema_version": scenarios.RESULT_SCHEMA_VERSION,
+               "scenario": "now", "attack": None, "strategy": None}
+    assert scenarios.load_result(current) is current
     with pytest.raises(ValueError, match="schema_version"):
         scenarios.load_result({"schema_version": 99})
 

@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import engine, strategies, topology
+from repro.core import aggregation as strategies
+from repro.core import engine, topology
 from repro.core.fl_types import FLConfig
 from repro.core.simulation import FederatedSimulation
 from repro.data.synthetic import mnist_like

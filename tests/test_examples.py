@@ -27,7 +27,19 @@ def test_federated_example():
                 "--strategy", "afl", "--dataset", "mnist", "--rounds", "2",
                 "--clients", "4", "--n-train", "400", "--curves"])
     assert "testing acc:" in out
-    assert os.path.exists(os.path.join(ROOT, "curves_afl_mnist.csv"))
+    # curves land under the shared output-dir convention, not repo root
+    assert os.path.exists(os.path.join(
+        ROOT, "experiments", "curves", "curves_afl_mnist.csv"))
+    assert not os.path.exists(os.path.join(ROOT, "curves_afl_mnist.csv"))
+
+
+def test_federated_example_plugin_strategy():
+    """The PR 4 strategy plugins run through the example CLI by name."""
+    out = _run(["examples/federated_image_classification.py",
+                "--strategy", "fedadam", "--rounds", "2", "--clients", "4",
+                "--n-train", "400", "--engine", "vectorized",
+                "--server-lr", "0.1"])
+    assert "testing acc:" in out
 
 
 def test_federated_example_noniid_gossip():

@@ -98,7 +98,8 @@ MESH_HFL_SNIPPET = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    from repro.core import strategies, topology
+    from repro.core import aggregation as strategies
+    from repro.core import topology
 
     C, N, G = 8, 1000, {groups}
     rng = np.random.default_rng(0)

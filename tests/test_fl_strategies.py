@@ -1,12 +1,14 @@
-"""Unit + hypothesis property tests for the FL aggregation operators —
-the paper's Eq. (5) and the three strategy schedules."""
+"""Unit + hypothesis property tests for the FL aggregation operators
+(`core/aggregation.py`) — the paper's Eq. (5) and the three strategy
+schedules."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import strategies, topology
+from repro.core import aggregation as strategies
+from repro.core import topology
 from repro.core.fl_types import FLConfig
 
 

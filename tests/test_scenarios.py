@@ -10,6 +10,7 @@ import pytest
 
 from repro.core import scenarios
 from repro.core.fl_types import FLConfig
+from repro.core.strategies import STRATEGY_REGISTRY_VERSION  # noqa: F401
 from repro.core.simulation import FederatedSimulation
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -40,12 +41,16 @@ def test_every_spec_resolves_to_fl_config():
 
 
 def test_ci_smoke_grid_is_registered():
-    assert len(scenarios.CI_SMOKE_GRID) == 4
+    assert len(scenarios.CI_SMOKE_GRID) == 6
     for name in scenarios.CI_SMOKE_GRID:
         assert name in scenarios.REGISTRY
     # the grid carries one adversarial scenario (ISSUE 3 satellite)
     assert any(scenarios.get(n).attack != "none"
                for n in scenarios.CI_SMOKE_GRID)
+    # ... and one scenario per PR 4 strategy-plugin family
+    grid_strategies = {scenarios.get(n).strategy
+                       for n in scenarios.CI_SMOKE_GRID}
+    assert {"fedprox", "fedadam"} <= grid_strategies
 
 
 def test_spec_validation():
@@ -63,9 +68,13 @@ def test_spec_validation():
         scenarios.get("no-such-scenario")
 
 
-def test_async_spec_maps_to_cfl_substrate():
+def test_async_spec_maps_to_async_strategy():
+    """Since PR 4 async is a first-class Strategy plugin: the spec's
+    strategy name resolves 1:1 through the registry (no more cfl
+    substrate indirection), carrying the heterogeneity knobs."""
     fl = scenarios.get("async-uniform-vec").to_fl_config()
-    assert fl.strategy == "cfl" and fl.engine == "vectorized"
+    assert fl.strategy == "async" and fl.engine == "vectorized"
+    assert fl.speed_model == "uniform" and fl.tick == 1.0
     fl = scenarios.get("ring-gossip-vec").to_fl_config()
     assert fl.afl_mode == "gossip"
 
@@ -101,19 +110,32 @@ def test_run_scenario_result_schema():
         assert 0.0 <= res["metrics"][k] <= 1.0
     assert res["timing"]["rounds_per_s"] > 0
     assert res["async"]["merges"] == 4 and res["async"]["batches"] == 1
+    # v2.1: the strategy-plugin block (PR 4 satellite)
+    assert res["strategy"] == {
+        "plugin": "async",
+        "registry_version": STRATEGY_REGISTRY_VERSION}
     json.dumps(res)                        # must be JSON-serializable
 
 
-def test_result_schema_v2_backward_compat_read():
+def test_result_schema_backward_compat_read():
     """Schema bump contract (DESIGN.md §6): v1 documents (no attack
-    block) normalize through `load_result` to the current version, so
-    every consumer reads one shape."""
+    block) and v2 documents (no strategy block) normalize through
+    `load_result` to the current version, so every consumer reads one
+    shape."""
     v1 = {"schema_version": 1, "scenario": "legacy",
           "metrics": {"test_accuracy": 0.9}, "async": None}
     doc = scenarios.load_result(v1)
-    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.1
     assert doc["attack"] is None
+    assert doc["strategy"] == {"plugin": None, "registry_version": None}
     assert doc["metrics"]["test_accuracy"] == 0.9
+    v2 = {"schema_version": 2, "scenario": "legacy2",
+          "spec": {"strategy": "afl"}, "attack": None}
+    doc = scenarios.load_result(v2)
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
+    assert doc["attack"] is None                  # v2 block preserved
+    assert doc["strategy"]["plugin"] == "afl"
+    assert doc["strategy"]["registry_version"] is None
 
 
 def test_run_scenario_sync_has_null_async_block():
@@ -142,6 +164,28 @@ def test_compare_passes_within_tolerance():
     base = _bench_doc(3.0, 2.8)
     assert compare(_bench_doc(3.0, 2.8), base) == []
     assert compare(_bench_doc(2.4, ASYNC_SPEEDUP_FLOOR + 0.2), base) == []
+
+
+def test_compare_driver_overhead_gate():
+    """The ISSUE 4 driver gate: absolute sync round throughput must stay
+    within 5% of the baseline — but only when host core count and scale
+    match (raw wall clock is not portable across hardware)."""
+    base = _bench_doc(3.0, 2.8)
+    base["host"] = {"cpus": 2}
+    base["sync"].update(loop_rounds_per_s=0.10, vectorized_rounds_per_s=0.30)
+    ok = _bench_doc(3.0, 2.8)
+    ok["host"] = {"cpus": 2}
+    ok["sync"].update(loop_rounds_per_s=0.099, vectorized_rounds_per_s=0.295)
+    assert compare(ok, base) == []
+    slow = _bench_doc(3.0, 2.8)
+    slow["host"] = {"cpus": 2}
+    slow["sync"].update(loop_rounds_per_s=0.10,
+                        vectorized_rounds_per_s=0.25)
+    fails = compare(slow, base)
+    assert len(fails) == 1 and "driver overhead" in fails[0]
+    # different host core count: the driver gate must NOT fire
+    other_host = {**slow, "host": {"cpus": 8}}
+    assert compare(other_host, base) == []
 
 
 def test_compare_flags_regressions():

@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import secure_agg, strategies
+from repro.core import aggregation as strategies
+from repro.core import secure_agg
 from repro.core.async_agg import AsyncSimulation, staleness_alpha
 from repro.core.fl_types import FLConfig
 from repro.core.simulation import FederatedSimulation
