@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test deps lint bench bench-engines scenarios bench-ci attack-demo \
-        strategy-demo
+        strategy-demo fused-demo
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -37,6 +37,14 @@ strategy-demo:
 # the full acceptance family lives in experiments/attacks/)
 attack-demo:
 	$(PY) -m repro.core.scenarios --run attack-signflip-trimmed-32c-vec
+
+# the fused executor end-to-end (DESIGN.md §10): the whole run as one
+# compiled lax.scan with device-resident state — first the HFL twin of
+# the CI grid's iid-hfl-vec, then attack+defense running entirely
+# in-scan through the bitonic selection kernel's production path
+fused-demo:
+	$(PY) -m repro.core.scenarios --run iid-hfl-fused \
+	    attack-signflip-median-fused
 
 # the CI round-throughput gate, locally: OVERWRITES the tracked
 # BENCH_ci.json (the recorded acceptance run — only commit the change

@@ -78,12 +78,16 @@ def main():
                     help="norm_clip: max L2 of an accepted update delta")
     ap.add_argument("--curves", action="store_true",
                     help="write per-round curves CSV (paper Figs. 9/11)")
-    ap.add_argument("--engine", choices=["loop", "vectorized"],
+    ap.add_argument("--engine", choices=["loop", "vectorized", "fused"],
                     default="loop",
                     help="loop = paper-faithful per-client dispatch; "
                          "vectorized = whole federation as one compiled "
                          "step with kernel-backed aggregation (same "
-                         "results, scales to hundreds of clients)")
+                         "results, scales to hundreds of clients); "
+                         "fused = the whole RUN as one compiled scan, "
+                         "state device-resident end to end (same "
+                         "results again — sync strategies only, "
+                         "DESIGN.md §10)")
     ap.add_argument("--scenario", metavar="NAME",
                     help="run a named registry scenario instead of the "
                          "flag-built config (core/scenarios.py)")

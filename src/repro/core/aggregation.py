@@ -137,6 +137,16 @@ def cfl_merge(global_params: Params, client_params: Params,
 # output row mixes several inputs — not a single weighted reduction).
 
 
+def tree_where(flag, on_true: Params, on_false: Params) -> Params:
+    """Per-leaf `jnp.where` over two identically-shaped pytrees with a
+    scalar (possibly traced) boolean — how schedule conditionals that
+    are Python `if`s in the per-round driver (e.g. HFL's every-Nth-round
+    global dissemination) are expressed inside the fused executor's
+    round scan (DESIGN.md §10)."""
+    return jax.tree.map(lambda a, b: jnp.where(flag, a, b),
+                        on_true, on_false)
+
+
 def _stacked_weights(n: int, weights) -> jnp.ndarray:
     w = (jnp.ones((n,), jnp.float32) if weights is None
          else jnp.asarray(weights, jnp.float32))

@@ -164,6 +164,9 @@ class AsyncStrategy(strat_mod.Strategy):
     track_curves = False
     mean_train_acc_over_events = True
     timeline_result = True
+    # events are data-dependent tick batches of varying size — there is
+    # no fixed (rounds, k) schedule to hoist into a scan (DESIGN.md §10)
+    supports_fused = False
 
     def __init__(self, fl, *, alpha=None, decay=None, speeds=None,
                  updates_per_client=None, speed_model=None,

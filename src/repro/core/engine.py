@@ -11,10 +11,16 @@ program: one XLA dispatch per round, regardless of client count.
 Pieces:
 
 * stack/unstack utilities — list-of-pytrees <-> stacked pytree.
-* `train_clients` — vmap-of-scan local SGD for every client at once.
+* `train_clients` — vmap-of-scan local SGD for every client at once
+  (`train_clients_donated` is the driver's buffer-reusing twin).
 * `predict_clients` — vmapped post-training local-shard evaluation.
 * `cfl_round_scan` — the continual (sequential) strategy as one
   `lax.scan` over the client visit order, kernel-backed merge inside.
+* `batch_indices` / `gather_batches` / `stacked_dataset` — the batch-
+  construction primitive split so the per-round path gathers on the
+  host while the fused executor (DESIGN.md §10) hoists the full
+  (rounds, k, T, B) index tensor out of its scan and gathers from the
+  device-resident federation dataset in-trace.
 * `VectorizedClientEngine` — host-side driver state: per-client shards,
   stacked eval sets, and the rng-consumption protocol shared with the
   loop engine so both engines see identical batch orders (this is what
@@ -94,10 +100,8 @@ def _local_sgd_scan(params, data, opt, loss_fn):
     return params, losses, accs
 
 
-@functools.partial(jax.jit, static_argnames=("stacked_loss_fn", "lr",
-                                             "momentum"))
-def train_clients(stacked_params, data, *, stacked_loss_fn, lr, momentum,
-                  extra=None):
+def _train_clients_impl(stacked_params, data, *, stacked_loss_fn, lr,
+                        momentum, extra=None):
     """All clients' local training as ONE compiled scan over batches.
 
     data leaves: (C, T, B, ...) with T = local_epochs * batches_per_epoch.
@@ -140,6 +144,40 @@ def train_clients(stacked_params, data, *, stacked_loss_fn, lr, momentum,
     (stacked_params, _), (losses, accs) = jax.lax.scan(
         step, (stacked_params, opt.init(stacked_params)), data)
     return stacked_params, losses.T, accs.T
+
+
+# Two jit surfaces over the same training program: the plain wrapper for
+# callers that keep referencing the stacked params they pass in (tests,
+# ad-hoc use), and a donating wrapper for the round driver's hot path —
+# the round-start base stack is consumed exactly once there, so donating
+# it lets XLA write the trained parameters into the same buffers instead
+# of allocating a second copy of the federation (the driver builds a
+# FRESH base stack for this argument whenever the bases have another
+# consumer — attack corruption, FedProx's proximal reference). Inside
+# the fused executor the impl is traced directly into the round scan,
+# where the scan's donated carry provides the same reuse.
+train_clients = functools.partial(jax.jit, static_argnames=(
+    "stacked_loss_fn", "lr", "momentum"))(_train_clients_impl)
+train_clients_donated = functools.partial(jax.jit, static_argnames=(
+    "stacked_loss_fn", "lr", "momentum"), donate_argnums=(0,))(
+    _train_clients_impl)
+
+
+def gather_batches(data_x, data_y, pids, idx):
+    """Device-side batch construction for one fused-scan round: gather
+    the event's participants' batches straight out of the stacked
+    federation dataset (`stacked_dataset`). `pids`: (k,) absolute client
+    ids; `idx`: (k, T, B) per-client shard indices (`batch_indices`).
+    Returns {"image": (k, T, B, ...), "label": (k, T, B)} — the same
+    values `batched_clients` materializes on the host, with zero host
+    round-trips (traceable; one fused gather per leaf)."""
+    k, T, B = idx.shape
+    rows = idx.reshape(k, -1)
+    pid_col = pids[:, None]
+    img = data_x[pid_col, rows].reshape(
+        (k, T, B) + data_x.shape[2:])
+    lab = data_y[pid_col, rows].reshape(k, T, B)
+    return {"image": img, "label": lab}
 
 
 @functools.partial(jax.jit, static_argnames=("stacked_apply_fn",))
@@ -246,30 +284,72 @@ class VectorizedClientEngine:
             [jnp.asarray(y[: self.n_eval]) for _, y in client_data])
 
     # -- batching -----------------------------------------------------------
+    def batch_indices(self, rng: np.random.Generator,
+                      client_ids: Sequence[int], epochs: int) -> np.ndarray:
+        """The (k, epochs*nb, B) int32 batch-index tensor for one event:
+        per-client indices into the client's OWN shard, rng order
+        identical to the loop engine — for each client (in the given
+        order), one permutation per epoch (DESIGN.md §4). This is the
+        single batch-construction primitive: the per-round path gathers
+        it on the host (`batched_clients`), the fused executor hoists
+        the full (rounds, k, T, B) tensor out of its scan and gathers on
+        device (`gather_batches`)."""
+        B = self.fl.local_batch_size
+        nb, T = self.nb, epochs * self.nb
+        idx = np.empty((len(client_ids), T, B), np.int32)
+        for i, c in enumerate(client_ids):
+            n = len(self.client_data[c][0])
+            for e in range(epochs):
+                sel = rng.permutation(n)[: nb * B]
+                idx[i, e * nb:(e + 1) * nb] = sel.reshape(nb, B)
+        return idx
+
     def batched_clients(self, rng: np.random.Generator,
                         client_ids: Sequence[int], epochs: int
                         ) -> Dict[str, jnp.ndarray]:
-        """Stacked pre-batched data for `client_ids`, rng order identical
-        to the loop engine: for each client (in the given order), one
-        permutation per epoch. Leaves: (C, epochs*nb, B, ...)."""
-        B = self.fl.local_batch_size
-        nb, T = self.nb, epochs * self.nb
+        """Stacked pre-batched data for `client_ids`: the `batch_indices`
+        tensor gathered on the host. Leaves: (C, epochs*nb, B, ...)."""
+        idx = self.batch_indices(rng, client_ids, epochs)
+        T, B = idx.shape[1], idx.shape[2]
         x0 = self.client_data[0][0]
         imgs = np.empty((len(client_ids), T, B) + x0.shape[1:], x0.dtype)
         labs = np.empty((len(client_ids), T, B), np.int32)
         for i, c in enumerate(client_ids):
             x, y = self.client_data[c]
-            for e in range(epochs):
-                sel = rng.permutation(len(x))[: nb * B]
-                imgs[i, e * nb:(e + 1) * nb] = x[sel].reshape(
-                    nb, B, *x.shape[1:])
-                labs[i, e * nb:(e + 1) * nb] = y[sel].reshape(nb, B)
+            imgs[i] = x[idx[i]]
+            labs[i] = y[idx[i]]
         return {"image": jnp.asarray(imgs), "label": jnp.asarray(labs)}
+
+    def stacked_dataset(self):
+        """The whole federation's shards as ONE device-resident pair
+        (images (C, n_max, ...), labels (C, n_max)), built once per run
+        and cached — the fused executor's in-scan gather source. Shards
+        shorter than n_max are zero-padded; batch indices never
+        reference the pad (they are permutations of each client's own
+        shard length)."""
+        cached = getattr(self, "_stacked_dataset", None)
+        if cached is None:
+            n_max = max(len(x) for x, _ in self.client_data)
+            x0 = self.client_data[0][0]
+            imgs = np.zeros((len(self.client_data), n_max) + x0.shape[1:],
+                            x0.dtype)
+            labs = np.zeros((len(self.client_data), n_max), np.int32)
+            for c, (x, y) in enumerate(self.client_data):
+                imgs[c, :len(x)] = x
+                labs[c, :len(y)] = y
+            cached = (jnp.asarray(imgs), jnp.asarray(labs))
+            self._stacked_dataset = cached
+        return cached
 
     # -- compiled-program wrappers ------------------------------------------
     def train(self, stacked_params, data, *, stacked_loss_fn=None,
               extra=None):
-        return train_clients(
+        """One event's stacked training dispatch. DONATES
+        `stacked_params`: the driver passes a base stack it owns
+        exclusively (see `train_clients_donated`) so the trained
+        parameters reuse those buffers instead of doubling the
+        federation's peak memory."""
+        return train_clients_donated(
             stacked_params, data,
             stacked_loss_fn=stacked_loss_fn or self.stacked_loss_fn,
             lr=self.fl.lr, momentum=self.fl.momentum, extra=extra)

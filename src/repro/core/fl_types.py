@@ -11,7 +11,7 @@ from typing import Optional, Tuple
 # membership is validated against the registry when the simulation
 # resolves the strategy (this module stays dependency-free).
 STRATEGIES = ("hfl", "afl", "cfl")
-ENGINES = ("loop", "vectorized")
+ENGINES = ("loop", "vectorized", "fused")
 
 # Adversarial axis (DESIGN.md §8). Canonical names live here (the only
 # dependency-free core module) so `core.attacks`, `core.robust`,
@@ -101,6 +101,16 @@ class FLConfig:
                                    #              per round + kernel-backed
                                    #              aggregation (see
                                    #              core/engine.py)
+                                   # fused      — the vectorized engine's
+                                   #              stacked state, with ALL
+                                   #              rounds compiled into one
+                                   #              lax.scan: client pytree,
+                                   #              optimizer and strategy
+                                   #              state device-resident for
+                                   #              the whole run, one
+                                   #              device->host transfer at
+                                   #              the end (DESIGN.md §10;
+                                   #              sync strategies only)
 
     def __post_init__(self):
         # strategy membership is validated against the plugin registry by

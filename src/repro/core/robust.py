@@ -4,8 +4,10 @@ subsystem (DESIGN.md §8; attacks live in `core/attacks.py`).
 All defenses operate on the stacked `(C, N)` ravel layout shared with the
 `fedavg_agg` kernel path (`kernels/ops.py::stacked_ravel`):
 
-  median        coordinate-wise median — `kernels/robust_agg.py` kernel
-                (rank-select; sort-based reference on CPU). Breakdown
+  median        coordinate-wise median — `kernels/robust_agg.py`
+                bitonic-sort selection kernel (the same vectorized
+                min/max network is the jnp production path on CPU;
+                `ref.trimmed_mean_ref` is oracle only). Breakdown
                 point f < C/2. Ignores sample weights (order statistics
                 have no weighted analogue here — documented trade-off).
   trimmed_mean  coordinate-wise mean with the f smallest and f largest
@@ -27,7 +29,9 @@ All defenses operate on the stacked `(C, N)` ravel layout shared with the
 
 `robust_aggregate` dispatches on the defense name at the matrix level;
 `robust_aggregate_stacked` is the pytree-level entry used by
-`core/aggregation.py`. Masking-based secure aggregation composes with
+`core/aggregation.py`. Every path here is traceable with static
+(defense, f, tau), so defended aggregation composes with `lax.scan` —
+the fused executor (DESIGN.md §10) runs it on the hot path in-scan. Masking-based secure aggregation composes with
 FedAvg only — median/trimmed/Krum need plaintext updates (see
 `core/secure_agg.py` and DESIGN.md §8).
 """

@@ -134,8 +134,13 @@ class ScenarioSpec:
                 f"strategy {self.strategy!r} (expected one of {allowed})")
         if self.partition not in PARTITIONS:
             raise ValueError(f"unknown partition {self.partition!r}")
-        if self.engine not in ("loop", "vectorized"):
+        if self.engine not in ("loop", "vectorized", "fused"):
             raise ValueError(f"unknown engine {self.engine!r}")
+        if self.engine == "fused" and not getattr(
+                get_strategy(self.strategy), "supports_fused", False):
+            raise ValueError(
+                f"{self.name}: strategy {self.strategy!r} does not "
+                f"support the fused executor (DESIGN.md §10)")
         if self.attack not in ATTACKS:
             raise ValueError(f"unknown attack {self.attack!r} "
                              f"(expected one of {ATTACKS})")
@@ -218,6 +223,21 @@ register(ScenarioSpec(
     "ring-gossip-vec", "AFL in gossip mode: ring-neighbor averaging, full "
     "participation",
     strategy="afl", topology="ring", participation=1.0))
+# fused-executor twins (DESIGN.md §10): the whole run as one compiled
+# lax.scan with device-resident state — same schedule/rng/curves as the
+# vectorized per-round driver to float tolerance (tests/test_fused.py)
+register(ScenarioSpec(
+    "iid-hfl-fused", "fused-executor twin of iid-hfl-vec: all rounds in "
+    "one lax.scan, device-resident group/global state, in-scan "
+    "dissemination schedule",
+    strategy="hfl", topology="hierarchical", local_epochs=2,
+    engine="fused"))
+register(ScenarioSpec(
+    "attack-signflip-median-fused", "sign-flip attackers vs the bitonic "
+    "median kernel, corrupted and defended entirely inside the fused "
+    "round scan",
+    strategy="afl", topology="star", participation=1.0, engine="fused",
+    attack="sign_flip", attack_scale=4.0, defense="median"))
 # non-IID Dirichlet label skew — loop engine (uneven shards are the loop
 # engine's territory: the stacked engine truncates to the federation-min
 # batch count)
@@ -336,12 +356,13 @@ register(ScenarioSpec(
     attack="gauss", attack_scale=3.0, defense="norm_clip", clip_tau=3.0))
 
 # the CI bench-smoke grid: one sync-centralized, one sync-decentralized,
-# one async-heterogeneous, one adversarial scenario, plus one scenario
-# per PR 4 strategy plugin family (see .github/workflows/ci.yml)
+# one async-heterogeneous, one adversarial scenario, one scenario per
+# PR 4 strategy plugin family, plus one fused-executor scenario
+# (see .github/workflows/ci.yml)
 CI_SMOKE_GRID: Tuple[str, ...] = (
     "iid-hfl-vec", "ring-gossip-vec", "async-straggler-vec",
     "attack-replace-cfl-clip-vec", "fedprox-dirichlet-vec",
-    "fedadam-iid-vec")
+    "fedadam-iid-vec", "iid-hfl-fused")
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,14 @@ The driver owns everything strategy-independent (DESIGN.md §9):
                    through the kernel-backed stacked operators
                    (core/engine.py + core/aggregation.py). Same results
                    to float tolerance (tests/test_engine.py).
+    "fused"      — the ENTIRE run as one compiled `lax.scan` over
+                   rounds (`run_fused`, DESIGN.md §10): strategy state,
+                   optimizer state and the stacked federation stay on
+                   device end to end; schedules, batch indices and
+                   attack inputs are hoisted out of the loop (same rng
+                   order, so §4 parity is bitwise); metrics accumulate
+                   in-scan with ONE device->host transfer at run end.
+                   Same results again (tests/test_fused.py).
 * rng-parity bookkeeping — batch construction consumes the run rng in
   one canonical order (client-major, epoch-minor) under both engines
   (DESIGN.md §4).
@@ -86,12 +94,20 @@ class FLResult:
 
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("lr_momentum", "loss_fn"))
+@functools.partial(jax.jit, static_argnames=("lr_momentum", "loss_fn"),
+                   donate_argnums=(1,))
 def _sgd_epoch(params, opt_state, data, lr_momentum, *,
                loss_fn=cnn_mod.cnn_loss, extra=None):
     """One local epoch over pre-batched data: (nb, B, 28,28,1)/(nb, B).
     `loss_fn`/`extra` come from the strategy's LocalSpec (FedProx passes
-    the round-start model as `extra`)."""
+    the round-start model as `extra`).
+
+    `opt_state` is DONATED: it is freshly initialized per client and
+    threaded epoch-to-epoch, so its buffers (the momentum slot is
+    model-sized) are reused for the returned state instead of copied.
+    `params` is NOT donatable here — the first epoch receives the
+    client's round-start base, which aliases a shared model (the plan's
+    bases, the aggregate center) that the driver still reads."""
     lr, momentum = lr_momentum
     opt = optimizers.sgd(lr, momentum=momentum)
 
@@ -123,6 +139,71 @@ def _batched(x, y, batch_size, rng):
     sel = order[: nb * batch_size]
     return {"image": jnp.asarray(x[sel].reshape(nb, batch_size, *x.shape[1:])),
             "label": jnp.asarray(y[sel].reshape(nb, batch_size))}
+
+
+class FusedContext:
+    """What one fused-scan round sees (DESIGN.md §10): the device-resident
+    run state — stacked federation dataset, per-client eval shards,
+    client weights, test split — plus the static config. Built INSIDE the
+    jitted scan from explicitly-passed arrays (`_fused_consts`), so the
+    data arrives as program inputs rather than baked-in constants.
+    `Strategy.scan_round`/`scan_bases`/`scan_aggregate` receive this as
+    their first argument."""
+
+    def __init__(self, sim, consts):
+        self.sim, self.fl, self.eng = sim, sim.fl, sim.vec
+        self.nb = sim.vec.nb
+        self.data_x = consts["data_x"]
+        self.data_y = consts["data_y"]
+        self.eval_x = consts["eval_x"]
+        self.eval_y = consts["eval_y"]
+        self.weights = consts["weights"]          # (C,) float32
+        self.x_test = consts["x_test"]
+        self.y_test = consts["y_test"]
+        self.track = sim.strategy.track_curves
+
+    def defense_kwargs(self, event_size=None):
+        return self.sim.defense_kwargs(event_size)
+
+    def local_accs(self, params, pids):
+        """The paper's post-training local-shard accuracy, in-trace —
+        the same math as `VectorizedClientEngine.local_accs`."""
+        preds = jnp.argmax(
+            self.eng.stacked_apply_fn(params, self.eval_x[pids]), axis=-1)
+        return jnp.mean((preds == self.eval_y[pids]).astype(jnp.float32),
+                        axis=1)
+
+    def corrupt(self, uploads, bases, xs):
+        """In-scan attack corruption: same per-round operator
+        (`attacks.corrupt_stacked`), flags/keys hoisted into scan inputs
+        — honest rows pass through bitwise unchanged (DESIGN.md §8)."""
+        fl = self.fl
+        if fl.attack in ("none", "label_flip") \
+                or not self.sim.attack_mask.any():
+            return uploads
+        return attacks.corrupt_stacked(uploads, bases, xs["flags"],
+                                       xs["keys"], kind=fl.attack,
+                                       scale=fl.attack_scale)
+
+    def test_acc(self, model):
+        """Per-round curve point on the full test split (one in-scan
+        forward — accumulated on device, transferred once at run end)."""
+        if not self.track:
+            return jnp.float32(jnp.nan)
+        preds = jnp.argmax(cnn_mod.cnn_apply(model, self.x_test), axis=-1)
+        return jnp.mean((preds == self.y_test).astype(jnp.float32))
+
+
+def _fused_consts(sim):
+    """The device arrays a fused run passes into its compiled scan."""
+    eng = sim.vec
+    data_x, data_y = eng.stacked_dataset()
+    x_test, y_test = sim.dataset["test"]
+    return {"data_x": data_x, "data_y": data_y,
+            "eval_x": eng.eval_x, "eval_y": eng.eval_y,
+            "weights": jnp.asarray(np.asarray(sim.weights, np.float64),
+                                   jnp.float32),
+            "x_test": jnp.asarray(x_test), "y_test": jnp.asarray(y_test)}
 
 
 class FederatedSimulation:
@@ -182,16 +263,38 @@ class FederatedSimulation:
                 params, opt_state, data, (self.fl.lr, self.fl.momentum),
                 loss_fn=loss_fn, extra=extra)
         n_eval = min(len(x), 512)
-        preds = np.asarray(_predict(params, jnp.asarray(x[:n_eval])))
+        preds = np.asarray(_predict(params, self._client_eval_dev(cid)))
         acc = float(np.mean(preds == y[:n_eval]))
         return params, float(loss), acc
 
+    # -- device-resident eval arrays (built once per run, not per call) -----
+    def _client_eval_dev(self, cid):
+        """Client `cid`'s local eval shard on device — the loop engine's
+        post-training accuracy reads it every round, so the transfer is
+        paid once, not per (client, round)."""
+        dev = self._eval_dev.get(cid)
+        if dev is None:
+            x, _ = self.client_data[cid]
+            dev = self._eval_dev[cid] = jnp.asarray(x[: min(len(x), 512)])
+        return dev
+
+    def _split_dev(self, split, batch):
+        """The split's images as device-resident `batch`-sized chunks
+        (cached — `_eval` is called per round for curve tracking and
+        re-transferred the whole split each time before PR 5)."""
+        key = (split, batch)
+        chunks = self._split_cache.get(key)
+        if chunks is None:
+            x = self.dataset[split][0]
+            chunks = [jnp.asarray(x[i:i + batch])
+                      for i in range(0, len(x), batch)]
+            self._split_cache[key] = chunks
+        return chunks
+
     def _eval(self, params, split="test", batch=500):
-        x, y = self.dataset[split]
-        preds = []
-        for i in range(0, len(x), batch):
-            preds.append(np.asarray(_predict(params, jnp.asarray(x[i:i + batch]))))
-        return np.concatenate(preds)
+        return np.concatenate(
+            [np.asarray(_predict(params, xb))
+             for xb in self._split_dev(split, batch)])
 
     @classmethod
     def from_scenario(cls, spec) -> "FederatedSimulation":
@@ -224,7 +327,9 @@ class FederatedSimulation:
         """Materialize per-client shards from a partition: label_flip
         poisons attacker shards HERE (data-layer attack — the poisoned
         shard is what both engines batch from, so parity is structural),
-        and the vectorized engine state is (re)built on the final data."""
+        and the vectorized engine state is (re)built on the final data.
+        The fused engine shares the vectorized engine's stacked state
+        (its scan adds the device-resident dataset on top)."""
         xtr, ytr = self.dataset["train"]
         self.parts = parts
         self.client_data = []
@@ -234,9 +339,11 @@ class FederatedSimulation:
                 y = attacks.flip_labels(y)
             self.client_data.append((xtr[p], y))
         self.weights = [len(p) for p in parts]
+        self._eval_dev = {}              # per-client device eval shards
+        self._split_cache = {}           # device test/train eval chunks
         self.vec = (engine_mod.VectorizedClientEngine(
                         self.fl, self.client_data, self.weights)
-                    if self.fl.engine == "vectorized" else None)
+                    if self.fl.engine in ("vectorized", "fused") else None)
 
     # -- driver primitives (the plugin-facing surface) ----------------------
     def defense_kwargs(self, event_size=None) -> Dict[str, Any]:
@@ -247,17 +354,26 @@ class FederatedSimulation:
                 "f": fl.resolved_defense_f(event_size),
                 "tau": fl.clip_tau}
 
+    def _build_bases_stacked(self, plan):
+        """One FRESH stacked round-start-bases tree (uncached): from the
+        strategy's lazy `bases_stacked_fn` if declared, else by stacking
+        the list."""
+        fn = plan.meta.get("bases_stacked_fn")
+        return (fn() if fn is not None
+                else engine_mod.stack_forest(plan.bases))
+
     def _bases_stacked(self, plan):
         """The plan's round-start bases as ONE stacked tree, built at
-        most once per plan and only when a consumer (vectorized train,
-        corruption) actually needs it: from the strategy's lazy
-        `bases_stacked_fn` if declared, else by stacking the list."""
+        most once per plan and only when a consumer (corruption, the
+        FedProx proximal reference) actually needs it. The stacked TRAIN
+        input is deliberately NOT this instance — the train dispatch
+        donates its base-stack argument (`train_clients_donated`), so it
+        gets a private fresh build while later consumers share this
+        cache."""
         bases = plan.meta.get("bases_stacked")
         if bases is None:
-            fn = plan.meta.get("bases_stacked_fn")
-            bases = (fn() if fn is not None
-                     else engine_mod.stack_forest(plan.bases))
-            plan.meta["bases_stacked"] = bases
+            bases = plan.meta["bases_stacked"] = \
+                self._build_bases_stacked(plan)
         return bases
 
     def local_train(self, plan, spec, rng):
@@ -271,8 +387,12 @@ class FederatedSimulation:
             eng = self.vec
             data = eng.batched_clients(rng, plan.participants,
                                        fl.local_epochs)
-            bases = self._bases_stacked(plan)
-            extra = bases if spec.extra == "bases" else None
+            # the train dispatch donates its base stack (buffer reuse for
+            # the trained params), so it receives a private fresh build;
+            # corruption / FedProx share the cached instance instead
+            bases = self._build_bases_stacked(plan)
+            extra = (self._bases_stacked(plan) if spec.extra == "bases"
+                     else None)
             params, losses, _ = eng.train(
                 bases, data, stacked_loss_fn=spec.stacked_loss_fn,
                 extra=extra)
@@ -409,6 +529,8 @@ class FederatedSimulation:
 
     # -- the generic driver loop --------------------------------------------
     def run(self) -> FLResult:
+        if self.fl.engine == "fused":
+            return self.run_fused()
         fl, strat = self.fl, self.strategy
         curves = {"train_acc": [], "train_loss": [], "test_acc": []}
         state = strat.init_state(self)
@@ -428,18 +550,134 @@ class FederatedSimulation:
                                 strat.round_model(state))
         if strat.mean_train_acc_over_events:
             train_acc = float(np.mean(all_accs)) if all_accs else 0.0
+        return self._classify_and_result(state, curves, train_acc,
+                                         build_timer)
 
-        # classification time (paper §1.2.7): centralized strategies
-        # serve the full test set at the server (after materializing the
-        # served model); decentralized strategies classify on-device —
-        # every client scores its own 1/N test shard in parallel, so
-        # measured wall time is one shard pass (+ any pre-serving
-        # aggregation the strategy's served_fn performs).
+    # -- the fused executor (DESIGN.md §10) ---------------------------------
+    def run_fused(self) -> FLResult:
+        """The whole run as ONE compiled `lax.scan` over rounds: strategy
+        state, optimizer state and the stacked federation live on device
+        for the entire run, with per-round metrics accumulated in-scan
+        and transferred once at the end.
+
+        §4 rng parity with the per-round driver is preserved BITWISE:
+        the host precompute below consumes `self.rng` in exactly the
+        per-round order — per event, the strategy's participant schedule
+        first (`select_participants`), then one batch-index permutation
+        per (client, epoch) (`batch_indices`) — and hoists the results
+        into the scan's per-round inputs. Warmup = AOT-compiling the
+        scan (DESIGN.md §3: the build timer measures ONE steady-state
+        execution of the compiled run). The scan carry is donated, so
+        round t+1's state reuses round t's buffers."""
+        fl, strat = self.fl, self.strategy
+        if self.vec is None:
+            raise ValueError(
+                "run_fused needs the stacked engine state "
+                "(FLConfig.engine='fused', or 'vectorized' when calling "
+                "run_fused directly)")
+        if not strat.supports_fused:
+            raise ValueError(
+                f"strategy {strat.name!r} does not support the fused "
+                f"executor (Strategy.supports_fused; async-style "
+                f"data-dependent schedules cannot be hoisted into a scan)")
+        R = strat.num_events(self)
+        state0 = strat.init_state(self)
+
+        # host precompute (untimed): schedule + batch indices + attack
+        # inputs for every round, in the per-round rng order. Schedules
+        # are drawn against the INITIAL state — part of the
+        # supports_fused contract (see strategies.py): a fused
+        # strategy's participant choice depends on (event, rng) only.
+        pids_l, idx_l, keys_l = [], [], []
+        for ev in range(R):
+            plan = strat.select_participants(self, state0, ev, self.rng)
+            parts = np.asarray(plan.participants, np.int32)
+            pids_l.append(parts)
+            idx_l.append(self.vec.batch_indices(self.rng,
+                                                plan.participants,
+                                                fl.local_epochs))
+            keys_l.append(np.asarray(attacks.client_keys(
+                attacks.event_key(fl.seed, ev), parts)))
+        k = len(pids_l[0]) if R else strat.event_size()
+        T = fl.local_epochs * self.vec.nb
+        pids = (np.stack(pids_l) if R
+                else np.zeros((0, k), np.int32))
+        idx = (np.stack(idx_l) if R
+               else np.zeros((0, k, T, fl.local_batch_size), np.int32))
+        keys = (np.stack(keys_l) if R else np.zeros((0, k, 2), np.uint32))
+        xs = {"pids": jnp.asarray(pids), "idx": jnp.asarray(idx),
+              "flags": jnp.asarray(self.attack_mask[pids]),
+              "keys": jnp.asarray(keys),
+              "event": jnp.arange(R, dtype=jnp.int32)}
+        for key, val in strat.scan_extra_xs(self, R).items():
+            xs[key] = jnp.asarray(val)
+        consts = _fused_consts(self)
+        # private copy of the initial carry: the scan donates it, and
+        # state0's leaves may alias long-lived arrays (init_params)
+        carry0 = jax.tree.map(jnp.array, strat.scan_carry(self, state0))
+
+        def _run(carry, xs, consts):
+            fx = FusedContext(self, consts)
+            return jax.lax.scan(
+                lambda c, x: strat.scan_round(fx, c, x), carry, xs)
+
+        # warmup = compile the scan once (AOT, so the donated carry is
+        # not consumed) + the classification-phase predict shapes
+        compiled = jax.jit(_run, donate_argnums=(0,)).lower(
+            carry0, xs, consts).compile()
+        self._warmup_predicts()
+
+        build_timer = Timer()
+        with build_timer:
+            carry, (acc_r, loss_r, tacc_r) = compiled(carry0, xs, consts)
+            jax.block_until_ready((carry, acc_r, loss_r, tacc_r))
+        state = strat.scan_uncarry(self, carry)
+        acc_r, loss_r, tacc_r = (np.asarray(acc_r), np.asarray(loss_r),
+                                 np.asarray(tacc_r))
+        curves = {"train_acc": [], "train_loss": [], "test_acc": []}
+        if strat.track_curves:
+            curves = {"train_acc": [float(a) for a in acc_r],
+                      "train_loss": [float(x) for x in loss_r],
+                      "test_acc": [float(a) for a in tacc_r]}
+        train_acc = float(acc_r[-1]) if R else 0.0
+        # warm the serving path outside the classification timer (the
+        # per-round driver does this in warmup_default) — on the shard
+        # shape the timed phase will use, which _warmup_predicts already
+        # compiled
+        x_test = self.dataset["test"][0]
+        shard = (len(x_test) if strat.centralized
+                 else -(-len(x_test) // fl.num_clients))
+        _predict(strat.served_fn(self, state)(),
+                 self._test_head_dev(shard))
+        return self._classify_and_result(state, curves, train_acc,
+                                         build_timer)
+
+    def _test_head_dev(self, shard):
+        """Cached device-resident head of the test split (the
+        classification-phase input — satellite of the §10 rework: no
+        re-transfer per run/call)."""
+        key = ("test_head", shard)
+        dev = self._split_cache.get(key)
+        if dev is None:
+            dev = self._split_cache[key] = jnp.asarray(
+                self.dataset["test"][0][:shard])
+        return dev
+
+    def _classify_and_result(self, state, curves, train_acc,
+                             build_timer) -> FLResult:
+        """The paper's classification-time protocol (§1.2.7) + result
+        assembly, shared by the per-round and fused drivers: centralized
+        strategies serve the full test set at the server (after
+        materializing the served model); decentralized strategies
+        classify on-device — every client scores its own 1/N test shard
+        in parallel, so measured wall time is one shard pass (+ any
+        pre-serving aggregation the strategy's served_fn performs)."""
+        fl, strat = self.fl, self.strategy
         served_fn = strat.served_fn(self, state)
         x_test, y_true = self.dataset["test"]
         shard = (len(x_test) if strat.centralized
                  else -(-len(x_test) // fl.num_clients))
-        xs = jnp.asarray(x_test[:shard])
+        xs = self._test_head_dev(shard)
         best = None
         for _ in range(3):          # min-of-3: immune to scheduler noise
             t = Timer()

@@ -27,6 +27,14 @@ paper's timing protocol. A strategy therefore states only its schedule
 and its aggregation math — and is automatically available under both
 engines, the attack axis, and `run_scenario`.
 
+Since PR 5 a strategy may additionally opt into the FUSED executor
+(`engine="fused"`, DESIGN.md §10): the whole run compiles into one
+`jax.lax.scan` whose carry is the strategy state. The traceable half of
+the protocol — `scan_round` (default wraps the lifecycle pieces),
+`scan_bases`, `scan_aggregate`, `scan_carry`/`scan_uncarry`,
+`scan_extra_xs` — lives on the Strategy too; `supports_fused` declares
+the opt-in (async cannot fuse: its tick batches are data-dependent).
+
 Strategies register by name (`@register_strategy`); `get_strategy`
 resolves names for `FLConfig.strategy` and the scenario registry.
 Third-party plugins subclass `Strategy` and register from their own
@@ -235,6 +243,85 @@ class Strategy:
                                      sim.corrupt(uploads, plan))
         self.served_fn(sim, state)()
 
+    # -- fused executor (DESIGN.md §10) -------------------------------------
+    # `engine="fused"` compiles the ENTIRE run into one `jax.lax.scan`
+    # whose carry is the strategy state, device-resident end to end. The
+    # driver (`FederatedSimulation.run_fused`) hoists everything the
+    # per-round path does on the host — participant schedules, the
+    # (rounds, k, epochs*nb, B) batch-index tensor (consuming the run
+    # rng in the per-round order, so §4 parity is bitwise), attack
+    # flags/keys — into per-round scan inputs (`xs`), and `scan_round`
+    # executes one round in-trace. The default wraps the same lifecycle
+    # pieces the per-round driver dispatches (stacked train -> local
+    # accs -> corruption -> aggregation), with the two strategy-shaped
+    # holes expressed as traceable hooks: `scan_bases` (the round-start
+    # base stack from the carried state) and `scan_aggregate` (the
+    # aggregation event; the per-round `aggregate_event` is NOT reused
+    # verbatim because it indexes host arrays with concrete participant
+    # lists — each built-in's scan_aggregate funnels through the SAME
+    # `core.aggregation` operators instead). `scan_carry`/`scan_uncarry`
+    # bound the carry to array-only pytrees (server optimizers re-attach
+    # their Optimizer closures on the way out).
+    #
+    # CONTRACT for declaring `supports_fused = True`: besides the hooks
+    # below being traceable, `select_participants` must derive its
+    # schedule from (event, rng) alone — the fused precompute calls it
+    # once per round with the INITIAL state (the evolving state lives on
+    # device inside the scan and is not available to host scheduling).
+    # A strategy whose participant choice reads evolving state (e.g.
+    # loss-ranked sampling) cannot fuse; leave the flag False and it
+    # runs on the per-round drivers.
+
+    supports_fused = False      # opt-in: see the contract above
+
+    def scan_carry(self, sim, state):
+        """Strategy state -> the array-only pytree carried by the scan."""
+        return state
+
+    def scan_uncarry(self, sim, carry):
+        """Final scan carry -> full strategy state (for `round_model` /
+        `served_fn` / `extra_result`)."""
+        return carry
+
+    def scan_extra_xs(self, sim, n_events: int) -> Dict[str, Any]:
+        """Additional per-round scan inputs, each with leading dim
+        n_events (e.g. HFL's dissemination flag)."""
+        return {}
+
+    def scan_bases(self, fx, carry, xs) -> Params:
+        """The (k, ...) stacked round-start models for this round's
+        participants, from the carried state (traceable)."""
+        raise NotImplementedError
+
+    def scan_aggregate(self, fx, carry, xs, uploads):
+        """Fold the (possibly corrupted) uploads into the carry —
+        the traceable twin of `aggregate_event`, built from the same
+        `core.aggregation` operators."""
+        raise NotImplementedError
+
+    def scan_round(self, fx, carry, xs):
+        """One round inside the fused scan: gather this round's batches
+        from the device-resident federation dataset, train every
+        participant, evaluate the paper's local-shard training accuracy,
+        corrupt attacker uploads, aggregate. Returns
+        (carry, (train_acc, train_loss, test_acc)) — test_acc is NaN
+        when curve tracking is off."""
+        fl = fx.fl
+        bases = self.scan_bases(fx, carry, xs)
+        batch = engine_mod.gather_batches(fx.data_x, fx.data_y,
+                                          xs["pids"], xs["idx"])
+        spec = self.local_spec(fx.sim, None, None)
+        extra = bases if spec.extra == "bases" else None
+        params, losses, _ = engine_mod._train_clients_impl(
+            bases, batch, stacked_loss_fn=spec.stacked_loss_fn,
+            lr=fl.lr, momentum=fl.momentum, extra=extra)
+        accs = fx.local_accs(params, xs["pids"])
+        uploads = fx.corrupt(params, bases, xs)
+        carry = self.scan_aggregate(fx, carry, xs, uploads)
+        return carry, (jnp.mean(accs),
+                       jnp.mean(losses[:, -fx.nb:]),
+                       fx.test_acc(self.round_model(carry)))
+
 
 # ---------------------------------------------------------------------------
 # registry
@@ -346,6 +433,52 @@ class HFLStrategy(Strategy):
         return lambda: agg.hfl_aggregate_stacked(
             uploads, fl.num_groups, w, centers=starts, **defkw)
 
+    # -- fused executor -----------------------------------------------------
+    supports_fused = True
+
+    def scan_carry(self, sim, state):
+        return {"groups": state["groups"], "global": state["global"],
+                "up": engine_mod.replicate_tree(sim.init_params,
+                                                self.fl.num_clients),
+                "start": state["groups"]}
+
+    def scan_uncarry(self, sim, carry):
+        return {"groups": carry["groups"], "global": carry["global"],
+                "last": (carry["up"], carry["start"])}
+
+    def scan_extra_xs(self, sim, n_events):
+        fl = self.fl
+        # the per-round driver's dissemination schedule, as a hoisted
+        # boolean input (a Python `if` there, a `tree_where` in-scan)
+        return {"hfl_global": np.array(
+            [((ev + 1) % fl.hfl_global_every == 0 or ev == fl.rounds - 1)
+             for ev in range(n_events)], bool)}
+
+    def scan_bases(self, fx, carry, xs):
+        # participants are always 0..C-1 in id order (select_participants)
+        return engine_mod.repeat_groups(carry["groups"],
+                                        self.fl.clients_per_group)
+
+    def scan_aggregate(self, fx, carry, xs, uploads):
+        fl = self.fl
+        defkw = fx.defense_kwargs(self.event_size())
+        start_groups = carry["groups"]
+        groups, gw = agg.hfl_tier1_stacked(
+            uploads, fl.num_groups, fx.weights, centers=start_groups,
+            **defkw)
+        # global aggregation + dissemination on the schedule flag; the
+        # tier-2 reduction is over G tiny group models, so computing it
+        # every round costs less than a scan-level cond would
+        new_global = agg.fedavg_stacked(groups, gw)
+        disseminate = xs["hfl_global"]
+        global_model = agg.tree_where(disseminate, new_global,
+                                      carry["global"])
+        groups = agg.tree_where(
+            disseminate,
+            engine_mod.replicate_tree(new_global, fl.num_groups), groups)
+        return {"groups": groups, "global": global_model,
+                "up": uploads, "start": start_groups}
+
 
 @register_strategy
 class AFLStrategy(Strategy):
@@ -410,6 +543,42 @@ class AFLStrategy(Strategy):
         return lambda: agg.defended_aggregate_stacked(
             uploads, pw, center=start, **defkw)
 
+    # -- fused executor -----------------------------------------------------
+    supports_fused = True
+
+    def scan_carry(self, sim, state):
+        k = self.event_size()
+        return {"global": state["global"],
+                "up": engine_mod.replicate_tree(sim.init_params, k),
+                "pw": jnp.ones((k,), jnp.float32),
+                "start": state["global"]}
+
+    def scan_uncarry(self, sim, carry):
+        return {"global": carry["global"],
+                "last": (carry["up"], carry["pw"], carry["start"],
+                         self.event_size())}
+
+    def scan_bases(self, fx, carry, xs):
+        return engine_mod.replicate_tree(carry["global"],
+                                         xs["pids"].shape[0])
+
+    def scan_aggregate(self, fx, carry, xs, uploads):
+        fl = self.fl
+        k = xs["pids"].shape[0]
+        defkw = fx.defense_kwargs(k)
+        pw = fx.weights[xs["pids"]]
+        start = carry["global"]
+        if fl.afl_mode == "gossip":
+            nbrs = topology.ring_neighbors(k, fl.gossip_neighbors)
+            uploads = agg.gossip_stacked(uploads, nbrs,
+                                         defense=fl.defense, f=defkw["f"])
+            global_model = agg.afl_aggregate_stacked(uploads, pw)
+        else:
+            global_model = agg.defended_aggregate_stacked(
+                uploads, pw, center=start, **defkw)
+        return {"global": global_model, "up": uploads, "pw": pw,
+                "start": start}
+
 
 @register_strategy
 class CFLStrategy(Strategy):
@@ -450,6 +619,30 @@ class CFLStrategy(Strategy):
 
     def round_model(self, state):
         return state["model"]
+
+    # -- fused executor -----------------------------------------------------
+    # CFL's training and aggregation already fuse in `cfl_round_scan`
+    # (one lax.scan over the visit order, corruption and kernel-backed
+    # merge in-scan), so the fused round is that scan nested inside the
+    # outer round scan — `scan_round` is overridden whole, like
+    # `run_event` is for the per-round driver.
+    supports_fused = True
+
+    def scan_round(self, fx, carry, xs):
+        fl = self.fl
+        batch = engine_mod.gather_batches(fx.data_x, fx.data_y,
+                                          xs["pids"], xs["idx"])
+        model, losses, accs = engine_mod.cfl_round_scan(
+            carry["model"], batch, fx.eval_x[xs["pids"]],
+            fx.eval_y[xs["pids"]], fl.merge_alpha,
+            loss_fn=fx.eng.loss_fn, apply_fn=fx.eng.apply_fn,
+            lr=fl.lr, momentum=fl.momentum, attack=fl.attack,
+            attack_scale=fl.attack_scale, attack_flags=xs["flags"],
+            attack_keys=xs["keys"], defense=fl.defense,
+            clip_tau=fl.clip_tau)
+        carry = {"model": model}
+        return carry, (jnp.mean(accs), jnp.mean(losses[:, -fx.nb:]),
+                       fx.test_acc(model))
 
 
 # ---------------------------------------------------------------------------
@@ -546,6 +739,38 @@ class ServerOptStrategy(AFLStrategy):
         # the server optimizer's state lives server-side: serve its model
         model = state["global"]
         return lambda: model
+
+    # -- fused executor -----------------------------------------------------
+    # The server optimizer's state is a pytree of arrays — it rides the
+    # scan carry like the model does; only the Optimizer closures are
+    # re-attached on the way out.
+
+    def scan_carry(self, sim, state):
+        carry = super().scan_carry(sim, state)
+        carry["opt_state"] = state["opt_state"]
+        return carry
+
+    def scan_uncarry(self, sim, carry):
+        state = super().scan_uncarry(sim, carry)
+        state["opt"] = self.make_opt()
+        state["opt_state"] = carry["opt_state"]
+        return state
+
+    def scan_aggregate(self, fx, carry, xs, uploads):
+        fl = self.fl
+        k = xs["pids"].shape[0]
+        defkw = fx.defense_kwargs(k)
+        pw = fx.weights[xs["pids"]]
+        g = carry["global"]
+        aggregate = agg.defended_aggregate_stacked(uploads, pw, center=g,
+                                                   **defkw)
+        pseudo_grad = jax.tree.map(
+            lambda a, b: (a - b).astype(jnp.float32), g, aggregate)
+        opt = self.make_opt()
+        updates, opt_state = opt.update(pseudo_grad, carry["opt_state"], g)
+        return {"global": optimizers.apply_updates(g, updates),
+                "opt_state": opt_state, "up": uploads, "pw": pw,
+                "start": g}
 
 
 @register_strategy

@@ -17,10 +17,13 @@ def fedavg_agg_ref(stacked, weights):
 
 
 def trimmed_mean_ref(stacked, trim: int):
-    """Sort-based oracle for the rank-select `robust_agg` kernel (also the
-    production CPU fallback): mean over the order statistics of rank
-    trim..C-trim-1 per coordinate. Tie values are interchangeable, so the
-    sort- and rank-based selections sum identically."""
+    """Sort-based oracle for the bitonic-select `robust_agg` kernel: mean
+    over the order statistics of rank trim..C-trim-1 per coordinate. Tie
+    values are interchangeable, so any correct selection sums
+    identically. Oracle ONLY — XLA:CPU lowers `jnp.sort` to a
+    comparator-driven sort that is ~8x slower than the kernel's
+    vectorized min/max network (`robust_agg.trimmed_mean_jnp` is the
+    production CPU path)."""
     C = stacked.shape[0]
     if not 0 <= 2 * trim < C:
         raise ValueError(f"trim={trim} invalid for C={C} clients")

@@ -44,8 +44,9 @@ def _trees(n, seed=0):
     (3, 129, 1),
 ])
 def test_trimmed_kernel_matches_host_reference(C, N, trim):
-    """The rank-select Pallas kernel (interpret mode) against the
-    sort-based host oracle — the ISSUE 3 float-tolerance acceptance."""
+    """The selection Pallas kernel (interpret mode; bitonic network
+    since PR 5) against the sort-based host oracle — the ISSUE 3
+    float-tolerance acceptance, still binding on the new kernel."""
     x = _mat(C, N)
     np.testing.assert_allclose(
         np.asarray(trimmed_mean_agg(x, trim, interpret=True)),

@@ -23,11 +23,11 @@ from benchmarks.ci_bench import ASYNC_SPEEDUP_FLOOR, compare  # noqa: E402
 
 def test_registry_covers_every_axis():
     """The shipped registry spans the full evaluation space: every
-    strategy, both engines, both partitions, and every heterogeneity
-    speed model appear in at least one named scenario."""
+    strategy, all three engines, both partitions, and every
+    heterogeneity speed model appear in at least one named scenario."""
     specs = [scenarios.get(n) for n in scenarios.names()]
     assert {s.strategy for s in specs} == set(scenarios.TOPOLOGY_BY_STRATEGY)
-    assert {s.engine for s in specs} == {"loop", "vectorized"}
+    assert {s.engine for s in specs} == {"loop", "vectorized", "fused"}
     assert {s.partition for s in specs} == {"iid", "dirichlet"}
     assert {s.speed_model for s in specs if s.strategy == "async"} == {
         "uniform", "lognormal", "straggler"}
@@ -41,16 +41,19 @@ def test_every_spec_resolves_to_fl_config():
 
 
 def test_ci_smoke_grid_is_registered():
-    assert len(scenarios.CI_SMOKE_GRID) == 6
+    assert len(scenarios.CI_SMOKE_GRID) == 7
     for name in scenarios.CI_SMOKE_GRID:
         assert name in scenarios.REGISTRY
     # the grid carries one adversarial scenario (ISSUE 3 satellite)
     assert any(scenarios.get(n).attack != "none"
                for n in scenarios.CI_SMOKE_GRID)
-    # ... and one scenario per PR 4 strategy-plugin family
+    # ... one scenario per PR 4 strategy-plugin family
     grid_strategies = {scenarios.get(n).strategy
                        for n in scenarios.CI_SMOKE_GRID}
     assert {"fedprox", "fedadam"} <= grid_strategies
+    # ... and one fused-executor scenario (ISSUE 5 satellite)
+    assert any(scenarios.get(n).engine == "fused"
+               for n in scenarios.CI_SMOKE_GRID)
 
 
 def test_spec_validation():
