@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test deps lint bench bench-engines scenarios bench-ci attack-demo \
-        strategy-demo fused-demo
+        strategy-demo fused-demo mesh-demo test-mesh
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -45,6 +45,18 @@ attack-demo:
 fused-demo:
 	$(PY) -m repro.core.scenarios --run iid-hfl-fused \
 	    attack-signflip-median-fused
+
+# the mesh-sharded fused executor (DESIGN.md §11): the same fused run
+# single-device vs with the client axis sharded over 8 forced host
+# devices (mesh_bench sets the XLA flag itself — it must precede the
+# jax import, which is why this is a dedicated module, not a make var)
+mesh-demo:
+	$(PY) -m benchmarks.mesh_bench --devices 8 --clients 32 --rounds 4
+
+# the sharded tier-1 subset (the CI mesh job's selection): every test
+# here forks subprocesses with forced host device counts
+test-mesh:
+	$(PY) -m pytest -x -q tests/test_mesh_fused.py tests/test_fl_mesh_dryrun.py
 
 # the CI round-throughput gate, locally: OVERWRITES the tracked
 # BENCH_ci.json (the recorded acceptance run — only commit the change

@@ -269,6 +269,55 @@ def bench_fused(client_counts=(8, 64)):
     return rows
 
 
+FUSED_CHUNK = 128
+FUSED_CHUNKED_SWEEPS = {
+    "smoke": (),
+    "quick": (1024,),
+    "full": (1024, 2048),
+}
+
+
+def measure_fused_chunked(clients, rounds=2, chunk=FUSED_CHUNK):
+    """Chunked fused-executor throughput past the vmap memory knee
+    (ISSUE 6): `FLConfig.fused_chunk` trains the participant stack one
+    sub-stack at a time (`lax.map` over chunks, core/engine.py), which
+    bounds the C-proportional live set of the all-at-once vmap. On the
+    1-core reference container at C=1024 the chunked run holds ~1.3 GiB
+    peak RSS against ~3.6 GiB unchunked AND runs ~3.9x faster (the
+    unchunked program thrashes the allocator at that live-set size) —
+    this is what lifts the client sweep from the PR 5 ceiling of 256 to
+    1024+. Chunked results are BITWISE equal to unchunked (clients are
+    independent; tests/test_fused.py pins it). Fused engine only: the
+    per-round driver at C>=1024 adds minutes of wall clock without
+    informing the chunking question. Shared with `ci_bench.run`, whose
+    peak-RSS gate samples right after this measurement so the envelope
+    covers the chunked stack."""
+    from repro.core.fl_types import FLConfig
+    from repro.core.simulation import FederatedSimulation
+    from repro.data.synthetic import mnist_like
+
+    ds = mnist_like(n_train=clients * 8, n_test=128)
+    fl = FLConfig(strategy="afl", num_clients=clients, participation=1.0,
+                  rounds=rounds, local_epochs=1, local_batch_size=8,
+                  lr=0.05, seed=0, engine="fused", fused_chunk=chunk)
+    s = min(FederatedSimulation(fl, ds).run().build_time_s
+            for _ in range(2)) / rounds
+    return {"clients": clients, "chunk": chunk, "fused_round_s": s,
+            "fused_rounds_per_s": 1.0 / s}
+
+
+def bench_fused_chunked(client_counts=FUSED_CHUNKED_SWEEPS["quick"]):
+    """Memory-bounded client-scale sweep (the ISSUE 6 chunking
+    satellite measurement)."""
+    rows = []
+    for C in client_counts:
+        per = measure_fused_chunked(C)
+        rows.append((f"fl_fused_round_c{C}_chunk{per['chunk']}",
+                     per["fused_round_s"] * 1e6,
+                     "engine=one_round_chunked"))
+    return rows
+
+
 def bench_engines(client_counts=(8, 32, 64), rounds=2):
     """Round-throughput sweep over client counts. The loop engine pays
     one jit dispatch + one small-batch XLA program per client per epoch;
@@ -314,7 +363,8 @@ def main(scale="quick"):
             + bench_async_engines(tuple(sorted({min(ENGINE_SWEEPS[scale]),
                                                 max(ENGINE_SWEEPS[scale])})))
             + bench_fused(tuple(sorted({min(ENGINE_SWEEPS[scale]),
-                                        max(ENGINE_SWEEPS[scale])}))))
+                                        max(ENGINE_SWEEPS[scale])})))
+            + bench_fused_chunked(FUSED_CHUNKED_SWEEPS[scale]))
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     return rows

@@ -244,6 +244,20 @@ def afl_aggregate_stacked(stacked: Params, weights=None, participate=None, *,
     return fedavg_stacked(stacked, w, interpret=interpret)
 
 
+def gossip_mix_matrix(neighbors: List[List[int]]) -> np.ndarray:
+    """The (C, C) row-stochastic gossip mixing matrix: row c averages
+    client c with its neighbors, uniformly. Shared by the single-device
+    mixing matmul (`gossip_stacked`) and the mesh-sharded all-to-all
+    (`mesh_gossip_stacked`), so the two paths can never mix different
+    graphs."""
+    C = len(neighbors)
+    mix = np.zeros((C, C), np.float32)
+    for c, nbrs in enumerate(neighbors):
+        members = [c] + list(nbrs)
+        mix[c, members] = 1.0 / len(members)
+    return mix
+
+
 def gossip_stacked(stacked: Params, neighbors: List[List[int]], *,
                    defense: str = "none", f: int = 1) -> Params:
     """Synchronous ring gossip on the stack. Undefended: a (C, C)
@@ -261,10 +275,7 @@ def gossip_stacked(stacked: Params, neighbors: List[List[int]], *,
     mat = kops.stacked_ravel(stacked)
     C = mat.shape[0]
     if defense in ("none", None):
-        mix = np.zeros((C, C), np.float32)
-        for c, nbrs in enumerate(neighbors):
-            members = [c] + list(nbrs)
-            mix[c, members] = 1.0 / len(members)
+        mix = gossip_mix_matrix(neighbors)
         return kops.stacked_unravel(stacked, jnp.asarray(mix) @ mat)
     if defense not in ("median", "trimmed_mean"):
         raise ValueError(f"gossip mixing supports median/trimmed_mean "
@@ -340,6 +351,167 @@ def async_batch_merge(global_params: Params, stacked_updates: Params,
 
 
 # ===========================================================================
+# mesh-sharded STACKED operators — the fused executor under shard_map
+# (DESIGN.md §11)
+# ===========================================================================
+# These mirror the stacked-array section above, but run INSIDE shard_map
+# with the leading client axis partitioned over a mesh axis: every
+# device holds a contiguous (C_loc, ...) sub-stack of clients, local
+# math stays per-shard, and each aggregation event lowers to exactly its
+# collective (weighted psum / grouped psum / masked all-to-all mix).
+# Plain jnp + jax.lax collectives only — the Pallas ravel path stays on
+# the single-device side (interpret-mode kernels inside shard_map would
+# trace the kernel body per shard for no benefit).
+
+
+def _bcast(w, p):
+    """(C,) weights broadcast against a (C, ...) leaf."""
+    return w.reshape(w.shape + (1,) * (p.ndim - 1))
+
+
+def mesh_fedavg_stacked(stacked: Params, weights, *, axis: str = "data"
+                        ) -> Params:
+    """Eq. (5) over the SHARDED client axis: each shard reduces its
+    local sub-stack, one weighted psum produces the replicated global
+    aggregate — the mesh twin of `fedavg_stacked` (AFL star / FedProx /
+    server-optimizer events)."""
+    w = jnp.asarray(weights, jnp.float32)
+    den = jax.lax.psum(jnp.sum(w), axis)
+    return jax.tree.map(
+        lambda p: (jax.lax.psum(
+            jnp.sum(p.astype(jnp.float32) * _bcast(w, p), axis=0), axis)
+            / den).astype(p.dtype),
+        stacked)
+
+
+def hfl_tier1_local(stacked: Params, weights, num_groups_local: int):
+    """HFL tier-1 over groups that nest INSIDE one shard: (C_loc, ...)
+    -> ((G_loc, ...) group models, (G_loc,) group weight totals), pure
+    per-shard math — NO collective. This is the fused mesh executor's
+    tier-1 event (groups are required to align to shards, so the group
+    boundary never crosses a shard boundary; DESIGN.md §11)."""
+    w = jnp.asarray(weights, jnp.float32)
+    C_loc = w.shape[0]
+    if C_loc % num_groups_local:
+        raise ValueError(
+            f"{C_loc} local clients not divisible into "
+            f"{num_groups_local} local groups")
+    per = C_loc // num_groups_local
+    wg = w.reshape(num_groups_local, per)
+    gw = jnp.sum(wg, axis=1)
+
+    def tier1(p):
+        q = p.astype(jnp.float32).reshape(
+            (num_groups_local, per) + p.shape[1:])
+        num = jnp.sum(q * wg.reshape((num_groups_local, per)
+                                     + (1,) * (p.ndim - 1)), axis=1)
+        return (num / _bcast(gw, num)).astype(p.dtype)
+
+    return jax.tree.map(tier1, stacked), gw
+
+
+def mesh_hfl_stacked(stacked: Params, weights, num_groups: int, *,
+                     axis: str = "data",
+                     force_fallback: bool = False) -> Params:
+    """Two-tier HFL over a SHARDED client stack: the general operator
+    behind the `mesh_hfl` parity suite, supporting group sizes above,
+    equal to, and below the shard size (the fused executor's own path
+    restricts to shard-aligned groups and calls `hfl_tier1_local`
+    directly, keeping tier-1 collective-free).
+
+    * group size <= shard size (groups nest in shards): tier 1 is the
+      local reshape (`hfl_tier1_local`), tier 2 one weighted psum.
+    * group size > shard size (groups span whole shards): tier 1 is a
+      grouped psum over `axis_index_groups` — or, where the backend
+      rejects that (0.4.x shard_map) or `force_fallback` is set, the
+      PR 1 one-hot-masked full psum with identical math. Tier 2 then
+      exploits the tier-1 replication within each group: the gw-weighted
+      full-axis psum overcounts numerator AND denominator by exactly the
+      group's shard count, which cancels (same argument as `mesh_hfl`).
+
+    Matches host `hfl_aggregate` on the gathered stack
+    (tests/test_fl_mesh_dryrun.py)."""
+    ndev = _axis_size(axis)
+    w = jnp.asarray(weights, jnp.float32)
+    C_loc = w.shape[0]
+    C = C_loc * ndev
+    if C % num_groups:
+        raise ValueError(f"{C} clients not divisible into {num_groups} "
+                         f"groups")
+    per = C // num_groups
+    if per <= C_loc:
+        groups, gw = hfl_tier1_local(stacked, w, C_loc // per)
+        return mesh_fedavg_stacked(groups, gw, axis=axis)
+    if per % C_loc:
+        raise ValueError(
+            f"group size {per} neither nests in nor spans whole shards "
+            f"of {C_loc} clients")
+    m = per // C_loc                      # shards per group
+    dev_groups = topology.mesh_axis_groups(ndev, num_groups)
+    part_w = jnp.sum(w)
+    part = jax.tree.map(
+        lambda p: jnp.sum(p.astype(jnp.float32) * _bcast(w, p), axis=0),
+        stacked)
+
+    def grouped_psum(x):
+        if force_fallback:
+            raise NotImplementedError
+        return jax.lax.psum(x, axis, axis_index_groups=dev_groups)
+
+    try:
+        gw = grouped_psum(part_w)
+        group = jax.tree.map(lambda p: grouped_psum(p) / gw, part)
+    except NotImplementedError:
+        # one-hot-masked full psum (PR 1 fallback): every shard
+        # contributes its partial into its group's slot of a (G, ...)
+        # expansion, ONE full-axis psum yields all group sums, each
+        # shard reads back its own group's row
+        idx = jax.lax.axis_index(axis)
+        onehot = (jnp.arange(num_groups) == idx // m).astype(jnp.float32)
+        gw = jnp.tensordot(onehot,
+                           jax.lax.psum(onehot * part_w, axis), axes=1)
+
+        def tier1(p):
+            e = onehot.reshape((num_groups,) + (1,) * p.ndim) * p
+            return jnp.tensordot(onehot, jax.lax.psum(e, axis),
+                                 axes=1) / gw
+
+        group = jax.tree.map(tier1, part)
+    # tier 2: each group model is replicated across its m member shards,
+    # so numerator and denominator both overcount by m — cancels
+    return jax.tree.map(
+        lambda p: ((jax.lax.psum(p * gw, axis)
+                    / jax.lax.psum(gw, axis)).astype(jnp.float32)),
+        group)
+
+
+def mesh_gossip_stacked(stacked: Params, mix, *, axis: str = "data"
+                        ) -> Params:
+    """Synchronous gossip on a SHARDED client stack as a masked
+    all-to-all: `mix` is the (C, C) row-stochastic mixing matrix of
+    `gossip_stacked` (self + ring neighbors, uniform). Each shard
+    multiplies the mixing COLUMNS it owns against its local sub-stack,
+    one psum assembles every mixed row, and the shard keeps its own
+    row block — the ring exchange expressed as a single collective
+    (neighbor models cross shard boundaries; a ppermute chain would pay
+    one hop per ring degree instead)."""
+    mix = jnp.asarray(mix, jnp.float32)
+    C = mix.shape[0]
+    leaves = jax.tree.leaves(stacked)
+    C_loc = leaves[0].shape[0]
+    i = jax.lax.axis_index(axis)
+    cols = jax.lax.dynamic_slice_in_dim(mix, i * C_loc, C_loc, axis=1)
+
+    def mixleaf(p):
+        flat = p.astype(jnp.float32).reshape(C_loc, -1)
+        full = jax.lax.psum(cols @ flat, axis)            # (C, n)
+        out = jax.lax.dynamic_slice_in_dim(full, i * C_loc, C_loc, axis=0)
+        return out.reshape(p.shape).astype(p.dtype)
+
+    return jax.tree.map(mixleaf, stacked)
+
+
+# ===========================================================================
 # mesh-level (inside shard_map) operators — pod-scale FL
 # ===========================================================================
 
@@ -361,13 +533,19 @@ def _wavg_psum(params, weight, axes):
 
 
 def mesh_hfl(params, weight, *, client_axis="data",
-             num_groups: int = 2, pod_axis: Optional[str] = None):
+             num_groups: int = 2, pod_axis: Optional[str] = None,
+             force_fallback: bool = False):
     """Two-tier hierarchical aggregation.
 
     Single-pod: tier 1 over `axis_index_groups` partitions of the client
     axis, tier 2 over the full client axis. Multi-pod: tier 1 over the
     intra-pod client axis, tier 2 over the pod axis — the exact
     clients -> group-server -> global-server schedule of paper Fig. 1.
+
+    `force_fallback` routes tier 1 through the one-hot-masked full psum
+    even where the backend supports `axis_index_groups` — so the parity
+    suite pins BOTH implementations against the host aggregate rather
+    than whichever one the installed jax happens to pick.
     """
     if pod_axis is not None:
         group = _wavg_psum(params, weight, client_axis)          # tier 1
@@ -386,6 +564,8 @@ def mesh_hfl(params, weight, *, client_axis="data",
     # psum produces all G group sums at once, and each device reads back
     # its own group's row (identical math, 0.4.x-shard_map portable).
     try:
+        if force_fallback:
+            raise NotImplementedError
         gw = jax.lax.psum(weight, client_axis, axis_index_groups=groups)
         group = jax.tree.map(
             lambda p: (jax.lax.psum(p.astype(jnp.float32) * weight,

@@ -40,6 +40,7 @@ client subset per dispatch and merge through the kernel-backed
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
@@ -50,6 +51,18 @@ from repro.models import cnn as cnn_mod
 from repro.optim import optimizers
 
 Params = Any
+
+
+class ShardTruncationWarning(UserWarning):
+    """The vectorized/fused engines truncated unequal client shards to
+    the federation-minimum batch count (see VectorizedClientEngine).
+    `dropped` maps absolute client id -> samples dropped PER EPOCH
+    beyond what the loop engine's per-client flooring already drops —
+    the documented loop-vs-vectorized divergence on skewed shards."""
+
+    def __init__(self, msg: str, dropped: Dict[int, int]):
+        super().__init__(msg)
+        self.dropped = dropped
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +159,43 @@ def _train_clients_impl(stacked_params, data, *, stacked_loss_fn, lr,
     return stacked_params, losses.T, accs.T
 
 
+def _train_clients_chunked_impl(stacked_params, data, *, stacked_loss_fn,
+                                lr, momentum, extra=None, chunk):
+    """`_train_clients_impl` one participant SUB-STACK at a time
+    (DESIGN.md §11 chunking fallback): the (C, ...) stacks are reshaped
+    to (C//chunk, chunk, ...) and a `lax.map` trains one chunk per step,
+    so peak training-activation memory scales with `chunk` rather than
+    the federation size — what lifts the fused client sweep past the
+    single-stack ceiling. Results are bitwise the chunk-order
+    concatenation of independent per-chunk runs, and clients are
+    independent, so this equals the unchunked path."""
+    C = jax.tree.leaves(stacked_params)[0].shape[0]
+    if chunk <= 0 or chunk >= C:
+        return _train_clients_impl(
+            stacked_params, data, stacked_loss_fn=stacked_loss_fn, lr=lr,
+            momentum=momentum, extra=extra)
+    if C % chunk:
+        raise ValueError(
+            f"fused_chunk={chunk} must divide the participant stack "
+            f"({C} clients)")
+    n = C // chunk
+    split = functools.partial(jax.tree.map,
+                              lambda l: l.reshape((n, chunk) + l.shape[1:]))
+    unsplit = functools.partial(jax.tree.map,
+                                lambda l: l.reshape((C,) + l.shape[2:]))
+
+    def one_chunk(args):
+        params_c, data_c, extra_c = args
+        return _train_clients_impl(
+            params_c, data_c, stacked_loss_fn=stacked_loss_fn, lr=lr,
+            momentum=momentum, extra=extra_c)
+
+    params, losses, accs = jax.lax.map(
+        one_chunk, (split(stacked_params), split(data),
+                    None if extra is None else split(extra)))
+    return unsplit(params), unsplit(losses), unsplit(accs)
+
+
 # Two jit surfaces over the same training program: the plain wrapper for
 # callers that keep referencing the stacked params they pass in (tests,
 # ad-hoc use), and a donating wrapper for the round driver's hot path —
@@ -217,6 +267,16 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
     if attack_flags is None:
         attack_flags = jnp.zeros((C,), bool)
     if attack_keys is None:
+        if attack not in ("none", "label_flip"):
+            # a PRNGKey(0) fallback here would make the corruption noise
+            # identical across runs regardless of FLConfig.seed,
+            # violating the DESIGN.md §4/§8 rng contract — the driver
+            # must pass keys derived from (seed, event, client id)
+            raise ValueError(
+                f"cfl_round_scan: attack={attack!r} corrupts uploads "
+                f"in-scan and needs per-visit attack_keys (derive them "
+                f"from the run seed via attacks.client_keys)")
+        # benign path: keys are threaded as scan inputs but never used
         attack_keys = jax.random.split(jax.random.PRNGKey(0), C)
 
     def visit(model, inputs):
@@ -277,6 +337,26 @@ class VectorizedClientEngine:
             raise ValueError(
                 f"local_batch_size={fl.local_batch_size} exceeds the "
                 f"smallest client shard ({min(sizes)} samples)")
+        # unequal shards: every client is truncated to the federation-
+        # minimum batch count, while the loop engine floors PER CLIENT —
+        # the engines then silently train on different data and parity
+        # becomes statistical. Record the per-client divergence (samples
+        # the loop engine would train on per epoch beyond this engine's
+        # nb*B) and warn once, structured, so drivers can surface it.
+        B = fl.local_batch_size
+        self.dropped_samples = {
+            c: (n // B) * B - self.nb * B
+            for c, n in enumerate(sizes) if (n // B) * B > self.nb * B}
+        if self.dropped_samples:
+            total = sum(self.dropped_samples.values())
+            warnings.warn(ShardTruncationWarning(
+                f"unequal client shards: the vectorized/fused engines "
+                f"truncate every client to the federation-minimum "
+                f"{self.nb} batch(es)/epoch, dropping {total} sample(s)/"
+                f"epoch that the loop engine trains on (per-client: "
+                f"{self.dropped_samples}); loop-vs-vectorized parity is "
+                f"statistical on this partition",
+                self.dropped_samples), stacklevel=2)
         self.n_eval = min(512, min(sizes))
         self.eval_x = jnp.stack(
             [jnp.asarray(x[: self.n_eval]) for x, _ in client_data])

@@ -92,6 +92,16 @@ class FLConfig:
     defense_f: int = 0             # assumed Byzantine count (0 = derive
                                    # from attack_fraction, floor 1)
     clip_tau: float = 10.0         # norm_clip: max L2 of an update delta
+    # fused-executor scaling (DESIGN.md §11). mesh_devices > 1 runs the
+    # fused scan under shard_map with the stacked client axis partitioned
+    # over a 1-D "data" mesh of that many devices (local training is
+    # embarrassingly parallel per shard; aggregation events lower to
+    # collectives). fused_chunk > 0 trains the participant stack in
+    # sub-stacks of that size (lax.map over chunks), bounding peak
+    # training-activation memory — the fallback that lifts the client
+    # sweep past the single-stack memory ceiling.
+    mesh_devices: int = 0          # 0/1 = single-device fused scan
+    fused_chunk: int = 0           # 0 = whole participant stack at once
     # simulation engine
     engine: str = "loop"           # loop       — per-client Python loop
                                    #              (paper-faithful timing: one
@@ -124,6 +134,13 @@ class FLConfig:
         if self.strategy == "hfl":
             assert self.num_clients % self.num_groups == 0, \
                 "clients must divide evenly into groups"
+        assert self.mesh_devices >= 0, self.mesh_devices
+        assert self.fused_chunk >= 0, self.fused_chunk
+        if self.mesh_devices > 1 and self.engine != "fused":
+            raise ValueError(
+                "mesh_devices only applies to the fused executor "
+                "(engine='fused'); the per-round engines are "
+                "single-device")
 
     @property
     def clients_per_group(self) -> int:

@@ -148,19 +148,46 @@ class FusedContext:
     jitted scan from explicitly-passed arrays (`_fused_consts`), so the
     data arrives as program inputs rather than baked-in constants.
     `Strategy.scan_round`/`scan_bases`/`scan_aggregate` receive this as
-    their first argument."""
+    their first argument.
 
-    def __init__(self, sim, consts):
+    Under the mesh-sharded path (DESIGN.md §11) the scan body runs
+    inside shard_map and every client-axis array here is the shard's
+    LOCAL sub-stack; `mesh_axis` names the mesh axis, `local_pids` maps
+    absolute participant ids to local rows (the client axis is sharded
+    contiguously, so local id = absolute id - shard offset), and
+    `pmean` averages per-round scalars across shards. All three are
+    identity when `mesh_axis` is None, so strategy code is written once."""
+
+    def __init__(self, sim, consts, *, mesh_axis=None):
         self.sim, self.fl, self.eng = sim, sim.fl, sim.vec
         self.nb = sim.vec.nb
         self.data_x = consts["data_x"]
         self.data_y = consts["data_y"]
         self.eval_x = consts["eval_x"]
         self.eval_y = consts["eval_y"]
-        self.weights = consts["weights"]          # (C,) float32
+        self.weights = consts["weights"]          # (C,) float32 [local]
         self.x_test = consts["x_test"]
         self.y_test = consts["y_test"]
         self.track = sim.strategy.track_curves
+        self.mesh_axis = mesh_axis
+
+    def local_pids(self, pids):
+        """Absolute participant ids -> rows of this shard's sub-stack
+        (identity off-mesh). Only valid under the driver-validated
+        full-participation regime, where shard s holds exactly ids
+        [s*C_loc, (s+1)*C_loc)."""
+        if self.mesh_axis is None:
+            return pids
+        c_loc = self.data_x.shape[0]
+        return pids - jax.lax.axis_index(self.mesh_axis) * c_loc
+
+    def pmean(self, x):
+        """Cross-shard mean of a per-shard scalar metric (identity
+        off-mesh; shards are equal-size, so the mean of shard means is
+        the exact federation mean)."""
+        if self.mesh_axis is None:
+            return x
+        return jax.lax.pmean(x, self.mesh_axis)
 
     def defense_kwargs(self, event_size=None):
         return self.sim.defense_kwargs(event_size)
@@ -616,14 +643,21 @@ class FederatedSimulation:
         # state0's leaves may alias long-lived arrays (init_params)
         carry0 = jax.tree.map(jnp.array, strat.scan_carry(self, state0))
 
+        mesh_axis = "data" if fl.mesh_devices > 1 else None
+
         def _run(carry, xs, consts):
-            fx = FusedContext(self, consts)
+            fx = FusedContext(self, consts, mesh_axis=mesh_axis)
             return jax.lax.scan(
                 lambda c, x: strat.scan_round(fx, c, x), carry, xs)
 
+        run_fn = _run
+        if mesh_axis is not None:
+            run_fn, carry0, xs, consts = self._mesh_wrap(
+                _run, carry0, xs, consts, pids)
+
         # warmup = compile the scan once (AOT, so the donated carry is
         # not consumed) + the classification-phase predict shapes
-        compiled = jax.jit(_run, donate_argnums=(0,)).lower(
+        compiled = jax.jit(run_fn, donate_argnums=(0,)).lower(
             carry0, xs, consts).compile()
         self._warmup_predicts()
 
@@ -631,6 +665,13 @@ class FederatedSimulation:
         with build_timer:
             carry, (acc_r, loss_r, tacc_r) = compiled(carry0, xs, consts)
             jax.block_until_ready((carry, acc_r, loss_r, tacc_r))
+        if mesh_axis is not None:
+            # the classification phase mixes this state with
+            # single-device test shards — re-home the final carry so
+            # those computations colocate (untimed, like the
+            # single-device path's absent transfer)
+            dev0 = jax.devices()[0]
+            carry = jax.tree.map(lambda l: jax.device_put(l, dev0), carry)
         state = strat.scan_uncarry(self, carry)
         acc_r, loss_r, tacc_r = (np.asarray(acc_r), np.asarray(loss_r),
                                  np.asarray(tacc_r))
@@ -651,6 +692,91 @@ class FederatedSimulation:
                  self._test_head_dev(shard))
         return self._classify_and_result(state, curves, train_acc,
                                          build_timer)
+
+    def _mesh_wrap(self, run, carry0, xs, consts, pids):
+        """DESIGN.md §11: the fused scan under `shard_map`, the stacked
+        CLIENT axis partitioned over a 1-D ("data",) mesh.
+
+        Local training / corruption / eval are embarrassingly parallel
+        per shard; each strategy's `scan_aggregate` lowers its event to
+        mesh collectives (core/aggregation.py mesh-sharded operators).
+        Validates the shardability preconditions — the client axis is
+        partitioned POSITIONALLY, so every round must train every client
+        (full participation), shards must be equal (C % ndev == 0), and
+        in-scan defenses are off (they rank across the whole federation;
+        scan-level robust aggregation on the mesh is future work). Inputs
+        are device_put onto their NamedShardings up front: the AOT call
+        then needs no resharding, and the federation stack never
+        materializes on a single device.
+
+        Returns (wrapped_fn, carry0, xs, consts) with the three input
+        trees resharded."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        from repro.launch import mesh as mesh_launch
+        from repro.sharding import specs as specs_mod
+        fl, strat = self.fl, self.strategy
+        ndev, C = fl.mesh_devices, fl.num_clients
+        if not strat.supports_mesh:
+            raise ValueError(
+                f"strategy {strat.name!r} does not support the "
+                f"mesh-sharded fused executor (Strategy.supports_mesh; "
+                f"sequential schedules cannot shard the client axis)")
+        if fl.defense != "none":
+            raise ValueError(
+                f"mesh_devices={ndev} with defense={fl.defense!r}: "
+                f"in-scan defenses rank uploads across the WHOLE "
+                f"federation and do not lower to per-shard collectives "
+                f"(run the single-device fused path instead)")
+        if C % ndev:
+            raise ValueError(
+                f"mesh path needs equal shards: num_clients={C} must be "
+                f"a multiple of mesh_devices={ndev}")
+        if fl.fused_chunk and (C // ndev) % fl.fused_chunk:
+            raise ValueError(
+                f"fused_chunk={fl.fused_chunk} must divide the LOCAL "
+                f"participant stack ({C // ndev} clients per shard)")
+        strat.validate_mesh(self, ndev)
+        want = np.arange(C, dtype=np.int32)
+        if pids.size and (pids.shape[1] != C
+                          or not np.array_equal(
+                              pids, np.broadcast_to(want, pids.shape))):
+            raise ValueError(
+                "mesh path needs full participation (participation=1.0): "
+                "the client axis is sharded positionally, so every round "
+                "must train clients 0..C-1 in id order")
+        mesh = mesh_launch.make_client_mesh(ndev)
+        sharding = strat.scan_carry_sharding(self)
+        if set(sharding) != set(carry0):
+            raise ValueError(
+                f"scan_carry_sharding keys {sorted(sharding)} do not "
+                f"match the scan carry {sorted(carry0)}")
+        carry_specs = {
+            k: (specs_mod.client_stack_specs(carry0[k])
+                if sharding[k] == "client"
+                else specs_mod.replicated_specs(carry0[k]))
+            for k in carry0}
+        # hoisted per-round inputs: the driver's four client-axis
+        # tensors shard dim 1; strategy extra xs are per-round scalars
+        # (replicated) by the supports_mesh contract
+        xs_specs = {k: (P(None, "data")
+                        if k in ("pids", "idx", "flags", "keys") else P())
+                    for k in xs}
+        consts_specs = {k: (P() if k in ("x_test", "y_test")
+                            else P("data")) for k in consts}
+        out_specs = (carry_specs, (P(), P(), P()))
+
+        def _put(tree, specs):
+            return jax.tree.map(
+                lambda s, l: jax.device_put(l, NamedSharding(mesh, s)),
+                specs, tree,
+                is_leaf=lambda x: isinstance(x, P))
+
+        wrapped = mesh_launch.shard_map_compat(
+            run, mesh, in_specs=(carry_specs, xs_specs, consts_specs),
+            out_specs=out_specs)
+        return (wrapped, _put(carry0, carry_specs), _put(xs, xs_specs),
+                _put(consts, consts_specs))
 
     def _test_head_dev(self, shard):
         """Cached device-resident head of the test split (the
@@ -692,6 +818,15 @@ class FederatedSimulation:
         y_pred = np.concatenate([pred_head, pred_tail])
         m = classification_metrics(y_true, y_pred, 10)
 
+        extra = dict(strat.extra_result(self, state))
+        if self.vec is not None and self.vec.dropped_samples:
+            # the stacked engine trains every client for the federation-
+            # minimum batch count (core/engine.py ShardTruncationWarning)
+            # — surface the per-client per-epoch sample loss so result
+            # consumers see the documented loop/vectorized divergence
+            extra["truncated_samples_per_epoch"] = dict(
+                self.vec.dropped_samples)
+
         return FLResult(
             strategy=strat.name, dataset=self.dataset["name"],
             train_accuracy=train_acc, test_accuracy=m["accuracy"],
@@ -702,7 +837,7 @@ class FederatedSimulation:
             round_train_acc=curves["train_acc"],
             round_train_loss=curves["train_loss"],
             round_test_acc=curves["test_acc"],
-            extra=strat.extra_result(self, state),
+            extra=extra,
         )
 
     def _track(self, curves, accs, losses, model_for_eval):

@@ -274,6 +274,32 @@ class Strategy:
 
     supports_fused = False      # opt-in: see the contract above
 
+    # -- mesh-sharded fused executor (DESIGN.md §11) ------------------------
+    # `FLConfig.mesh_devices > 1` runs the fused scan under shard_map
+    # with the stacked client axis partitioned over a "data" mesh. A
+    # strategy opts in with `supports_mesh = True` when its scan hooks
+    # are collective-correct: `scan_bases`/local training/corruption are
+    # already per-client (embarrassingly parallel per shard), so the one
+    # extra obligation is `scan_aggregate` lowering its event to mesh
+    # collectives when `fx.mesh_axis` is set (the mesh-sharded stacked
+    # operators in core/aggregation.py). `scan_carry_sharding` declares,
+    # per top-level carry key, whether that subtree carries the client
+    # axis ("client": leading dim sharded over the mesh) or is
+    # federation-global ("replicated"). The driver validates the mesh
+    # preconditions (full participation, shard divisibility,
+    # defense="none") before compiling.
+
+    supports_mesh = False
+
+    def scan_carry_sharding(self, sim) -> Dict[str, str]:
+        """Top-level scan-carry key -> "client" | "replicated"."""
+        raise NotImplementedError
+
+    def validate_mesh(self, sim, ndev: int) -> None:
+        """Strategy-specific mesh preconditions, raised before compile
+        (HFL: group/shard alignment). The driver has already checked the
+        generic ones (full participation, C % ndev, defense="none")."""
+
     def scan_carry(self, sim, state):
         """Strategy state -> the array-only pytree carried by the scan."""
         return state
@@ -305,21 +331,30 @@ class Strategy:
         participant, evaluate the paper's local-shard training accuracy,
         corrupt attacker uploads, aggregate. Returns
         (carry, (train_acc, train_loss, test_acc)) — test_acc is NaN
-        when curve tracking is off."""
+        when curve tracking is off.
+
+        Under the mesh path every per-client input (`bases`, batches,
+        flags/keys, eval shards) is the shard's LOCAL sub-stack —
+        `fx.local_pids` maps the absolute participant ids to local rows,
+        training/corruption run unchanged per shard, and the per-round
+        scalar metrics are pmean'd so every shard reports the federation
+        mean (equal shard sizes make the mean of shard means exact)."""
         fl = fx.fl
         bases = self.scan_bases(fx, carry, xs)
+        pids = fx.local_pids(xs["pids"])
         batch = engine_mod.gather_batches(fx.data_x, fx.data_y,
-                                          xs["pids"], xs["idx"])
+                                          pids, xs["idx"])
         spec = self.local_spec(fx.sim, None, None)
         extra = bases if spec.extra == "bases" else None
-        params, losses, _ = engine_mod._train_clients_impl(
+        params, losses, _ = engine_mod._train_clients_chunked_impl(
             bases, batch, stacked_loss_fn=spec.stacked_loss_fn,
-            lr=fl.lr, momentum=fl.momentum, extra=extra)
-        accs = fx.local_accs(params, xs["pids"])
+            lr=fl.lr, momentum=fl.momentum, extra=extra,
+            chunk=fl.fused_chunk)
+        accs = fx.local_accs(params, pids)
         uploads = fx.corrupt(params, bases, xs)
         carry = self.scan_aggregate(fx, carry, xs, uploads)
-        return carry, (jnp.mean(accs),
-                       jnp.mean(losses[:, -fx.nb:]),
+        return carry, (fx.pmean(jnp.mean(accs)),
+                       fx.pmean(jnp.mean(losses[:, -fx.nb:])),
                        fx.test_acc(self.round_model(carry)))
 
 
@@ -435,6 +470,23 @@ class HFLStrategy(Strategy):
 
     # -- fused executor -----------------------------------------------------
     supports_fused = True
+    # mesh path: groups align to shards (num_groups % mesh_devices == 0,
+    # validated by the driver), so tier 1 is the LOCAL reshape — no
+    # cross-shard collective in the tier-1 event — and only tier 2 psums
+    supports_mesh = True
+
+    def scan_carry_sharding(self, sim):
+        return {"groups": "client", "global": "replicated",
+                "up": "client", "start": "client"}
+
+    def validate_mesh(self, sim, ndev):
+        fl = self.fl
+        if fl.num_groups % ndev:
+            raise ValueError(
+                f"HFL mesh path needs groups aligned to shards: "
+                f"num_groups={fl.num_groups} must be a multiple of "
+                f"mesh_devices={ndev} so tier 1 never crosses a shard "
+                f"boundary (DESIGN.md §11)")
 
     def scan_carry(self, sim, state):
         return {"groups": state["groups"], "global": state["global"],
@@ -461,21 +513,35 @@ class HFLStrategy(Strategy):
 
     def scan_aggregate(self, fx, carry, xs, uploads):
         fl = self.fl
-        defkw = fx.defense_kwargs(self.event_size())
         start_groups = carry["groups"]
-        groups, gw = agg.hfl_tier1_stacked(
-            uploads, fl.num_groups, fx.weights, centers=start_groups,
-            **defkw)
-        # global aggregation + dissemination on the schedule flag; the
-        # tier-2 reduction is over G tiny group models, so computing it
-        # every round costs less than a scan-level cond would
-        new_global = agg.fedavg_stacked(groups, gw)
+        if fx.mesh_axis is not None:
+            # tier 1 nests in the shard (driver-validated alignment):
+            # pure local math, no collective; tier 2 is ONE weighted
+            # psum over the local group models (defense="none" on the
+            # mesh path — also driver-validated)
+            per = fl.clients_per_group
+            c_loc = fx.weights.shape[0]
+            groups, gw = agg.hfl_tier1_local(uploads, fx.weights,
+                                             c_loc // per)
+            new_global = agg.mesh_fedavg_stacked(groups, gw,
+                                                 axis=fx.mesh_axis)
+        else:
+            defkw = fx.defense_kwargs(self.event_size())
+            groups, gw = agg.hfl_tier1_stacked(
+                uploads, fl.num_groups, fx.weights, centers=start_groups,
+                **defkw)
+            # global aggregation + dissemination on the schedule flag;
+            # the tier-2 reduction is over G tiny group models, so
+            # computing it every round costs less than a scan-level
+            # cond would
+            new_global = agg.fedavg_stacked(groups, gw)
         disseminate = xs["hfl_global"]
         global_model = agg.tree_where(disseminate, new_global,
                                       carry["global"])
+        n_groups_here = jax.tree.leaves(groups)[0].shape[0]
         groups = agg.tree_where(
             disseminate,
-            engine_mod.replicate_tree(new_global, fl.num_groups), groups)
+            engine_mod.replicate_tree(new_global, n_groups_here), groups)
         return {"groups": groups, "global": global_model,
                 "up": uploads, "start": start_groups}
 
@@ -545,6 +611,13 @@ class AFLStrategy(Strategy):
 
     # -- fused executor -----------------------------------------------------
     supports_fused = True
+    # mesh path: star is one weighted psum; gossip is the masked
+    # all-to-all mix (neighbor models DO cross shard boundaries)
+    supports_mesh = True
+
+    def scan_carry_sharding(self, sim):
+        return {"global": "replicated", "up": "client", "pw": "client",
+                "start": "replicated"}
 
     def scan_carry(self, sim, state):
         k = self.event_size()
@@ -565,9 +638,23 @@ class AFLStrategy(Strategy):
     def scan_aggregate(self, fx, carry, xs, uploads):
         fl = self.fl
         k = xs["pids"].shape[0]
-        defkw = fx.defense_kwargs(k)
-        pw = fx.weights[xs["pids"]]
+        pw = fx.weights[fx.local_pids(xs["pids"])]
         start = carry["global"]
+        if fx.mesh_axis is not None:
+            # defense="none" on the mesh path (driver-validated); the
+            # ring spans the GLOBAL client ids, so the mix matrix is
+            # built at federation size and applied as one collective
+            if fl.afl_mode == "gossip":
+                nbrs = topology.ring_neighbors(fl.num_clients,
+                                               fl.gossip_neighbors)
+                uploads = agg.mesh_gossip_stacked(
+                    uploads, agg.gossip_mix_matrix(nbrs),
+                    axis=fx.mesh_axis)
+            global_model = agg.mesh_fedavg_stacked(uploads, pw,
+                                                   axis=fx.mesh_axis)
+            return {"global": global_model, "up": uploads, "pw": pw,
+                    "start": start}
+        defkw = fx.defense_kwargs(k)
         if fl.afl_mode == "gossip":
             nbrs = topology.ring_neighbors(k, fl.gossip_neighbors)
             uploads = agg.gossip_stacked(uploads, nbrs,
@@ -745,6 +832,13 @@ class ServerOptStrategy(AFLStrategy):
     # scan carry like the model does; only the Optimizer closures are
     # re-attached on the way out.
 
+    def scan_carry_sharding(self, sim):
+        # the server optimizer steps the REPLICATED global model with a
+        # replicated pseudo-gradient — its state is identical per shard
+        sharding = super().scan_carry_sharding(sim)
+        sharding["opt_state"] = "replicated"
+        return sharding
+
     def scan_carry(self, sim, state):
         carry = super().scan_carry(sim, state)
         carry["opt_state"] = state["opt_state"]
@@ -759,11 +853,15 @@ class ServerOptStrategy(AFLStrategy):
     def scan_aggregate(self, fx, carry, xs, uploads):
         fl = self.fl
         k = xs["pids"].shape[0]
-        defkw = fx.defense_kwargs(k)
-        pw = fx.weights[xs["pids"]]
+        pw = fx.weights[fx.local_pids(xs["pids"])]
         g = carry["global"]
-        aggregate = agg.defended_aggregate_stacked(uploads, pw, center=g,
-                                                   **defkw)
+        if fx.mesh_axis is not None:
+            aggregate = agg.mesh_fedavg_stacked(uploads, pw,
+                                                axis=fx.mesh_axis)
+        else:
+            defkw = fx.defense_kwargs(k)
+            aggregate = agg.defended_aggregate_stacked(
+                uploads, pw, center=g, **defkw)
         pseudo_grad = jax.tree.map(
             lambda a, b: (a - b).astype(jnp.float32), g, aggregate)
         opt = self.make_opt()

@@ -45,10 +45,61 @@ def make_fl_mesh(*, clients: int = 16, model: int = 16,
                          **axis_types_kw(2))
 
 
+def largest_divisor_at_most(n: int, k: int) -> int:
+    """The largest divisor of `n` that is <= `k` (>= 1)."""
+    k = max(1, min(k, n))
+    while n % k:
+        k -= 1
+    return k
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / examples)."""
+    """Small mesh over whatever devices exist (tests / examples).
+
+    Requested axis sizes are clamped to DIVISORS of the available device
+    count, not just its magnitude: `min(data, n)` alone builds impossible
+    factorizations at non-power-of-two device counts (6 devices, data=4
+    -> a 4x1 mesh stranding two devices, or a make_mesh failure), so each
+    axis takes the largest divisor of the remaining devices instead."""
     n = len(jax.devices())
-    data = min(data, n)
-    model = max(1, min(model, n // data))
+    data = largest_divisor_at_most(n, data)
+    model = largest_divisor_at_most(n // data, model)
     return jax.make_mesh((data, model), ("data", "model"),
                          **axis_types_kw(2))
+
+
+def shard_map_compat(fn, mesh, *, in_specs, out_specs):
+    """`jax.shard_map` where it exists (>= 0.6), the experimental import
+    on 0.4.x — replication checking off under both spellings: the fused
+    scan derives local client ids from `axis_index` arithmetic, which
+    0.4.x's check_rep cannot type through `lax.scan` (the §11 parity
+    tests pin correctness instead)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def make_client_mesh(devices: int = 0):
+    """1-D ("data",) mesh for the mesh-sharded fused executor
+    (DESIGN.md §11): the stacked CLIENT axis is partitioned over "data";
+    there is no model axis (the paper CNN fits on any device — the scale
+    problem is the client count). `devices` <= 0 uses every device;
+    otherwise it must not exceed the available count (a silent clamp
+    would change the sharding the caller validated client divisibility
+    against)."""
+    n = len(jax.devices())
+    if devices <= 0:
+        devices = n
+    if devices > n:
+        raise ValueError(
+            f"mesh_devices={devices} exceeds the {n} available device(s) "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"before importing jax for a CPU testbed)")
+    return jax.make_mesh((devices,), ("data",), **axis_types_kw(1))

@@ -282,6 +282,35 @@ def batch_spec(mesh) -> P:
     return P(ba if len(ba) > 1 else ba[0])
 
 
+# client-axis specs (mesh-sharded fused executor, DESIGN.md §11) ------------
+# The fused executor's pytrees carry a LEADING CLIENT AXIS (stacked
+# federation params / dataset / per-round schedule tensors). Under the
+# 1-D client mesh (`launch.mesh.make_client_mesh`) that axis — and only
+# that axis — is partitioned over "data"; parameters within one client
+# stay whole (the paper CNN needs no model axis).
+
+def client_stack_specs(tree, *, axis: str = "data", lead: int = 0):
+    """Pytree of PartitionSpecs sharding dim `lead` of every leaf over
+    `axis` (lead=0: stacked federation state (C, ...); lead=1: hoisted
+    per-round scan inputs (rounds, C, ...)). Scalars/short leaves raise —
+    a silent replicate here would hide a mis-sharded carry."""
+    def spec(l):
+        ndim = getattr(l, "ndim", None)
+        if ndim is None or ndim <= lead:
+            raise ValueError(
+                f"client_stack_specs: leaf of ndim {ndim} cannot shard "
+                f"dim {lead} over {axis!r}")
+        entries = [None] * ndim
+        entries[lead] = axis
+        return P(*entries)
+    return jax.tree.map(spec, tree)
+
+
+def replicated_specs(tree):
+    """Pytree of empty PartitionSpecs (fully replicated leaves)."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
 def remap_act_spec(spec: P, mesh) -> P:
     """Translate a tp-profile activation spec to the active profile:
     under dp/fsdp, "data" (the batch dim) -> batch_axes(mesh), "model"

@@ -221,3 +221,134 @@ def test_vectorized_engine_rejects_oversized_batch():
                   local_batch_size=32, engine="vectorized")
     with pytest.raises(ValueError, match="local_batch_size"):
         FederatedSimulation(fl, ds)
+
+
+# ---------------------------------------------------------------------------
+# cfl_round_scan rng contract (ISSUE 6 satellite: no PRNGKey(0) fallback)
+# ---------------------------------------------------------------------------
+
+def _cfl_scan_inputs(C=2, T=1, B=4, seed=0):
+    from repro.models import cnn
+    rng = np.random.default_rng(seed)
+    model = cnn.init_cnn(jax.random.PRNGKey(0))
+    data = {"image": jnp.asarray(
+                rng.normal(size=(C, T, B, 28, 28, 1)).astype(np.float32)),
+            "label": jnp.asarray(
+                rng.integers(0, 10, size=(C, T, B)).astype(np.int32))}
+    kw = dict(loss_fn=cnn.cnn_loss, apply_fn=cnn.cnn_apply,
+              lr=0.05, momentum=0.0)
+    return model, data, data["image"][:, 0], data["label"][:, 0], kw
+
+
+def test_cfl_round_scan_requires_attack_keys():
+    """An upload-corrupting attack without per-visit keys must raise:
+    the old silent PRNGKey(0) fallback made the gauss noise identical
+    for every run seed (DESIGN.md §4/§8 violation)."""
+    model, data, ex, ey, kw = _cfl_scan_inputs()
+    with pytest.raises(ValueError, match="attack_keys"):
+        engine.cfl_round_scan(model, data, ex, ey, 0.5, attack="gauss",
+                              attack_flags=jnp.ones((2,), bool), **kw)
+    # benign paths never consume the keys and stay key-optional
+    for attack in ("none", "label_flip"):
+        engine.cfl_round_scan(model, data, ex, ey, 0.5, attack=attack,
+                              **kw)
+
+
+def test_cfl_round_scan_gauss_follows_seed():
+    """Regression for the fallback bug: corruption noise must track the
+    caller's keys — two run seeds give different corrupted models, the
+    same seed twice is bitwise-reproducible."""
+    from repro.core import attacks
+    model, data, ex, ey, kw = _cfl_scan_inputs()
+    flags = jnp.ones((2,), bool)
+
+    def run(seed):
+        keys = attacks.client_keys(attacks.event_key(seed, 0),
+                                   np.arange(2))
+        m, _, _ = engine.cfl_round_scan(
+            model, data, ex, ey, 0.5, attack="gauss", attack_scale=0.5,
+            attack_flags=flags, attack_keys=keys, **kw)
+        return np.concatenate([np.ravel(l) for l in jax.tree.leaves(m)])
+
+    a, b, a2 = run(0), run(1), run(0)
+    np.testing.assert_array_equal(a, a2)
+    assert not np.allclose(a, b), \
+        "gauss corruption ignored the caller's keys"
+
+
+# ---------------------------------------------------------------------------
+# unequal shards: structured truncation warning + surfaced divergence
+# (ISSUE 6 satellite: the engines silently trained on different data)
+# ---------------------------------------------------------------------------
+
+def _unequal_parts(n, sizes):
+    idx = np.arange(n)
+    parts, at = [], 0
+    for s in sizes:
+        parts.append(idx[at:at + s])
+        at += s
+    return parts
+
+
+def test_vectorized_unequal_shards_warns_structured():
+    ds = mnist_like(seed=0, n_train=160, n_test=64)
+    fl = FLConfig(strategy="afl", num_clients=2, local_batch_size=32,
+                  engine="vectorized", rounds=1, participation=1.0)
+    sim = FederatedSimulation(fl, ds)
+    with pytest.warns(engine.ShardTruncationWarning) as rec:
+        sim.set_partition(_unequal_parts(160, [96, 64]))
+    # client 0 has 3 full batches, the federation minimum is 2: the
+    # loop engine trains 32 more of its samples per epoch
+    assert sim.vec.nb == 2
+    assert sim.vec.dropped_samples == {0: 32}
+    w = rec[0].message
+    assert w.dropped == {0: 32}          # machine-readable payload
+    assert "32" in str(w) and "loop engine" in str(w)
+
+
+def test_unequal_shards_divergence_surfaced_and_bounded():
+    """Pin the DOCUMENTED loop/vectorized divergence on unequal shards:
+    the engines train on different sample counts (parity is only
+    statistical), and the vectorized result self-reports the truncation
+    through FLResult.extra."""
+    ds = mnist_like(seed=0, n_train=160, n_test=64)
+    parts = _unequal_parts(160, [96, 64])
+
+    def run(eng):
+        fl = FLConfig(strategy="afl", num_clients=2, local_batch_size=32,
+                      engine=eng, rounds=2, local_epochs=1, lr=0.05,
+                      seed=0, participation=1.0)
+        sim = FederatedSimulation(fl, ds)
+        with pytest.warns(engine.ShardTruncationWarning) if \
+                eng != "loop" else _nullcontext():
+            sim.set_partition(parts)
+        return sim.run()
+
+    loop, vec = run("loop"), run("vectorized")
+    assert vec.extra["truncated_samples_per_epoch"] == {0: 32}
+    assert "truncated_samples_per_epoch" not in loop.extra
+    # different training data -> numerically different runs (would be
+    # bitwise-equal curves on a shard-divisible partition)
+    assert not np.allclose(loop.round_train_loss, vec.round_train_loss,
+                           atol=1e-6)
+    # ... but the divergence stays statistical, not catastrophic
+    assert abs(loop.test_accuracy - vec.test_accuracy) <= 0.2
+
+
+class _nullcontext:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def test_equal_shards_no_truncation_warning():
+    import warnings as _w
+    ds = mnist_like(seed=0, n_train=128, n_test=64)
+    fl = FLConfig(strategy="afl", num_clients=2, local_batch_size=32,
+                  engine="vectorized", rounds=1, participation=1.0)
+    with _w.catch_warnings():
+        _w.simplefilter("error", engine.ShardTruncationWarning)
+        sim = FederatedSimulation(fl, ds)
+    assert sim.vec.dropped_samples == {}

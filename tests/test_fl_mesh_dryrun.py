@@ -115,7 +115,8 @@ MESH_HFL_SNIPPET = textwrap.dedent("""
     else:
         mesh = jax.make_mesh((C,), ("data",))
         fn = lambda p, w: strategies.mesh_hfl(
-            p, w[0], client_axis="data", num_groups=G)
+            p, w[0], client_axis="data", num_groups=G,
+            force_fallback={fallback})
         specs = (P("data"), P("data"))
         out_spec = P("data")
     f = shard_map(fn, mesh=mesh, in_specs=specs, out_specs=out_spec)
@@ -131,12 +132,16 @@ MESH_HFL_SNIPPET = textwrap.dedent("""
 """)
 
 
-@pytest.mark.parametrize("groups,multi_pod", [
-    (2, False), (4, False), (2, True),
+@pytest.mark.parametrize("groups,multi_pod,fallback", [
+    (2, False, False), (4, False, False), (2, True, False),
+    # pin BOTH tier-1 implementations (real axis_index_groups psum where
+    # the backend has it, and the one-hot-masked full psum) against the
+    # host — not just whichever one the installed jax picks
+    (2, False, True), (4, False, True),
 ])
-def test_mesh_hfl_matches_host(groups, multi_pod):
+def test_mesh_hfl_matches_host(groups, multi_pod, fallback):
     code = MESH_HFL_SNIPPET.format(src=SRC, groups=groups,
-                                   multi_pod=multi_pod)
+                                   multi_pod=multi_pod, fallback=fallback)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
@@ -144,3 +149,117 @@ def test_mesh_hfl_matches_host(groups, multi_pod):
     assert result["replicated"], "every client must hold the global model"
     assert result["err"] < 1e-4, \
         f"mesh_hfl diverges from host hfl_aggregate: {result['err']}"
+
+
+# ---------------------------------------------------------------------------
+# mesh_hfl_stacked (sharded client STACKS, C > devices) vs host aggregate
+# ---------------------------------------------------------------------------
+# The fused executor's general mesh operator: 16 clients over 8 shards
+# (2 clients per shard), exercising group sizes that nest inside a shard
+# (G=16), align exactly (G=8), and span multiple shards (G=4 — where the
+# grouped-psum / one-hot fallback split exists).
+
+MESH_HFL_STACKED_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import aggregation as agg
+    from repro.core import topology
+    from repro.launch import mesh as mesh_mod
+
+    C, N, G = 16, 500, {groups}
+    rng = np.random.default_rng(0)
+    stacked = jnp.asarray(rng.normal(size=(C, N)).astype(np.float32))
+    weight = jnp.asarray(rng.uniform(10.0, 100.0, C).astype(np.float32))
+    mesh = mesh_mod.make_client_mesh(8)
+
+    def fn(p, w):
+        # the global model has no client axis; re-tile each shard's copy
+        # so the host side can check cross-shard replication
+        g = agg.mesh_hfl_stacked(p, w, G, axis="data",
+                                 force_fallback={fallback})
+        return g[None, :]
+
+    f = mesh_mod.shard_map_compat(
+        fn, mesh, in_specs=(P("data"), P("data")), out_specs=P("data"))
+    out = np.asarray(jax.jit(f)(stacked, weight))      # (8, N) shard copies
+    replicated = bool(np.allclose(out, out[0:1], atol=1e-5))
+
+    clients = [{{"w": stacked[i]}} for i in range(C)]
+    host = agg.hfl_aggregate(clients, topology.hierarchical_groups(C, G),
+                             weights=np.asarray(weight))
+    err = float(np.max(np.abs(out[0] - np.asarray(host["w"]))))
+    print(json.dumps({{"replicated": replicated, "err": err}}))
+""")
+
+
+@pytest.mark.parametrize("groups,fallback", [
+    (16, False),           # groups nest inside one shard (pure local tier 1)
+    (8, False),            # group == shard (the fused executor's regime)
+    (4, False),            # groups span 2 shards: grouped psum (or backend
+                           # fallback)
+    (4, True),             # groups span 2 shards: forced one-hot fallback
+])
+def test_mesh_hfl_stacked_matches_host(groups, fallback):
+    code = MESH_HFL_STACKED_SNIPPET.format(src=SRC, groups=groups,
+                                           fallback=fallback)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    result = json.loads(out.stdout.strip().splitlines()[-1])
+    assert result["replicated"], "every shard must hold the global model"
+    assert result["err"] < 1e-4, \
+        f"mesh_hfl_stacked diverges from host: {result['err']}"
+
+
+# ---------------------------------------------------------------------------
+# make_host_mesh divisor clamping (ISSUE 6 satellite: min(data, n) built
+# impossible factorizations at non-power-of-two device counts)
+# ---------------------------------------------------------------------------
+
+HOST_MESH_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               "{ndev}")
+    import sys, json
+    sys.path.insert(0, {src!r})
+    import jax
+    from repro.launch import mesh as mesh_mod
+    shapes = []
+    for data, model in {requests}:
+        m = mesh_mod.make_host_mesh(data, model)
+        shapes.append(dict(zip(m.axis_names, (m.devices.shape))))
+    print(json.dumps(shapes))
+""")
+
+
+@pytest.mark.parametrize("ndev,requests,want", [
+    # 6 devices: data=4 does not divide -> clamp to 3 (largest divisor),
+    # NOT min(4, 6) = 4 which 6 cannot factor
+    (6, [(4, 1), (6, 1), (4, 4), (5, 5)],
+     [(3, 1), (6, 1), (3, 2), (3, 2)]),
+    (8, [(4, 2), (3, 1), (16, 1), (8, 8)],
+     [(4, 2), (2, 1), (8, 1), (8, 1)]),
+])
+def test_make_host_mesh_clamps_to_divisors(ndev, requests, want):
+    code = HOST_MESH_SNIPPET.format(src=SRC, ndev=ndev, requests=requests)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    shapes = json.loads(out.stdout.strip().splitlines()[-1])
+    got = [(s["data"], s["model"]) for s in shapes]
+    assert got == [tuple(w) for w in want]
+
+
+def test_largest_divisor_at_most():
+    from repro.launch.mesh import largest_divisor_at_most
+    assert largest_divisor_at_most(6, 4) == 3
+    assert largest_divisor_at_most(6, 6) == 6
+    assert largest_divisor_at_most(8, 5) == 4
+    assert largest_divisor_at_most(7, 3) == 1
+    assert largest_divisor_at_most(12, 0) == 1
+    assert largest_divisor_at_most(12, 99) == 12

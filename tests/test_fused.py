@@ -197,3 +197,40 @@ def test_fused_scenarios_registered_and_runnable():
     assert res["attack"]["defense"] == "median"
     assert res["timing"]["build_time_s"] > 0
     assert len(res["metrics"]) == 6
+
+
+# ---------------------------------------------------------------------------
+# memory-bounded chunked local training (ISSUE 6: FLConfig.fused_chunk)
+# ---------------------------------------------------------------------------
+# Clients are independent, so training the participant stack one
+# sub-stack at a time (lax.map over chunks) must be BITWISE equal to the
+# all-at-once vmap — chunking only bounds activation memory.
+
+@pytest.mark.parametrize("strategy,chunk,kw", [
+    ("afl", 4, {}),
+    ("afl", 2, {}),
+    ("hfl", 4, dict(rounds=3)),
+    ("fedprox", 4, dict(prox_mu=0.1)),      # extra="bases" chunks too
+])
+def test_fused_chunked_matches_unchunked(fused_ds, strategy, chunk, kw):
+    whole = FederatedSimulation(_cfg("fused", **kw),
+                                fused_ds, strategy=strategy).run()
+    chunked = FederatedSimulation(_cfg("fused", fused_chunk=chunk, **kw),
+                                  fused_ds, strategy=strategy).run()
+    np.testing.assert_array_equal(chunked.round_train_loss,
+                                  whole.round_train_loss)
+    np.testing.assert_array_equal(chunked.round_test_acc,
+                                  whole.round_test_acc)
+    assert chunked.test_accuracy == whole.test_accuracy
+
+
+def test_fused_chunk_must_divide_stack(fused_ds):
+    with pytest.raises(ValueError, match="fused_chunk"):
+        FederatedSimulation(_cfg("fused", fused_chunk=3), fused_ds,
+                            strategy="afl").run()
+
+
+def test_fused_chunk_config_validation():
+    with pytest.raises(AssertionError):
+        FLConfig(fused_chunk=-1)
+    assert FLConfig(engine="fused", fused_chunk=4).fused_chunk == 4
