@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test deps lint bench bench-engines scenarios bench-ci attack-demo \
-        strategy-demo fused-demo mesh-demo test-mesh
+        strategy-demo fused-demo mesh-demo test-mesh comm-demo
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -45,6 +45,14 @@ attack-demo:
 fused-demo:
 	$(PY) -m repro.core.scenarios --run iid-hfl-fused \
 	    attack-signflip-median-fused
+
+# the upload-codec axis end-to-end (DESIGN.md §12): top-k + error
+# feedback on the AFL star, int8 qsgd inside the fused executor, and
+# the codec x adversary crossing (quantized sign-flip vs median) — each
+# result document carries the byte-count "communication" block
+comm-demo:
+	$(PY) -m repro.core.scenarios --run comm-topk-afl-vec \
+	    comm-qsgd-hfl-fused comm-qsgd-signflip-median-vec
 
 # the mesh-sharded fused executor (DESIGN.md §11): the same fused run
 # single-device vs with the client axis sharded over 8 forced host

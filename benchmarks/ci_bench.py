@@ -22,8 +22,12 @@ driver-overhead gate; same host core count and scale only, so hardware
 swaps don't trip it), when same-host peak RSS regresses past 20%
 (the ISSUE 5 buffer-donation satellite — at quick scale the envelope
 includes the chunked 1024-client fused round, the ISSUE 6 memory-bounded
-path), or when the mesh-sharded fused run at 8 forced host devices falls
-below `MESH_RATIO_FLOOR` of single-device throughput (ISSUE 6).
+path), when the mesh-sharded fused run at 8 forced host devices falls
+below `MESH_RATIO_FLOOR` of single-device throughput (ISSUE 6), or when
+the upload-codec section (ISSUE 7) regresses: qsgd uplink compression
+below its 3.5x acceptance floor, topk compression below the configured
+sparsity's analytic ratio, or the dequantize-and-aggregate reduce
+retaining less than `DEQUANT_RETENTION_FLOOR` of fedavg throughput.
 
     PYTHONPATH=src python -m benchmarks.ci_bench --scale quick \
         --out BENCH_ci.json --baseline benchmarks/BENCH_baseline.json --check
@@ -67,6 +71,22 @@ PEAK_RSS_TOLERANCE = 0.20        # same-host peak-memory regression gate
 # recompiles or host round-trips — measures ~0.05x), not a speedup.
 # Quick scale only, floor-only, like the fused gate (DESIGN.md §11).
 MESH_RATIO_FLOOR = 0.2
+# ISSUE 7: the qsgd acceptance clause — int8 + one float32 scale per
+# client must compress the uplink >= 3.5x vs dense float32 (analytic
+# ratio from Codec.bytes_on_wire, so it never flaps with host load; the
+# actual figure is ~3.998x at CNN scale and dips toward 3.5x only for
+# tiny models where the scale amortizes worse). The topk gate has no
+# constant floor: its analytic ratio is 0.5/topk_frac exactly, so the
+# compare gates against the configured sparsity itself.
+QSGD_RATIO_FLOOR = 3.5
+# ISSUE 7: the dequantize-and-aggregate reduce must retain a bounded
+# fraction of plain-fedavg throughput (retention = fedavg_us /
+# dequant_us). Observed ~0.3x on the CPU container — XLA:CPU pays the
+# int8->f32 cast + scale multiply without the 4x HBM-read saving the
+# kernel banks on TPU — so the floor guards the dispatch staying on the
+# jnp/kernel production path at all (routing through the interpret-mode
+# grid loop measures ~0.01x), not the TPU roofline. Quick scale only.
+DEQUANT_RETENTION_FLOOR = 0.1
 
 
 def bench_sync(clients, rounds):
@@ -112,6 +132,16 @@ def bench_robust(clients):
     interpret-mode selection kernel)."""
     from benchmarks.kernel_bench import measure_robust
     return measure_robust(clients)
+
+
+def bench_comm(clients):
+    """Upload-codec compression ratios (analytic, from
+    `Codec.bytes_on_wire` at paper-CNN dimension) + the fused
+    dequantize-and-aggregate reduce vs plain fedavg — the measurement is
+    `kernel_bench.measure_comm`, shared like the other helpers
+    (DESIGN.md §12)."""
+    from benchmarks.kernel_bench import measure_comm
+    return measure_comm(clients)
 
 
 def bench_fused(clients, rounds):
@@ -198,6 +228,12 @@ def run(scale):
           f"{rob['fedavg_us']:.0f}us ({rob['speedup']:.3f}x)", flush=True)
     fus["robust_trimmed_us"] = rob["trimmed_us"]
     fus["robust_fedavg_us"] = rob["fedavg_us"]
+    comm = bench_comm(C)
+    print(f"  comm  c{C}: dequant {comm['dequant_us']:.0f}us vs fedavg "
+          f"{comm['fedavg_us']:.0f}us "
+          f"(retention {comm['retention']:.3f}x); "
+          f"qsgd {comm['qsgd_ratio']:.2f}x, "
+          f"topk {comm['topk_ratio']:.2f}x uplink compression", flush=True)
     grid = {}
     for name in scenarios.CI_SMOKE_GRID:
         res = scenarios.run_scenario(name)
@@ -215,6 +251,7 @@ def run(scale):
         "async": asy,
         "robust": rob,
         "fused": fus,
+        "comm": comm,
         "scenarios": grid,
     }
     if chunked is not None:
@@ -284,6 +321,24 @@ def compare(new, baseline, tolerance=0.25, driver_tolerance=0.05):
                 f"robust retention {new['robust']['speedup']:.3f}x below "
                 f"the {ROBUST_RETENTION_FLOOR}x floor (trimmed-mean must "
                 f"stay within 10x of fedavg latency)")
+    if new["scale"] == "quick" and "comm" in new:
+        comm = new["comm"]
+        if comm["qsgd_ratio"] < QSGD_RATIO_FLOOR:
+            failures.append(
+                f"qsgd uplink compression {comm['qsgd_ratio']:.2f}x below "
+                f"the {QSGD_RATIO_FLOOR}x acceptance floor")
+        # topk's ratio is analytic (0.5/frac): anything under the
+        # configured sparsity's own ratio means the wire-cost model broke
+        want_topk = 0.5 / comm["topk_frac"]
+        if comm["topk_ratio"] < want_topk * (1.0 - 1e-6):
+            failures.append(
+                f"topk uplink compression {comm['topk_ratio']:.2f}x below "
+                f"the configured sparsity's {want_topk:.2f}x ratio")
+        if comm["retention"] < DEQUANT_RETENTION_FLOOR:
+            failures.append(
+                f"dequant-aggregate retention {comm['retention']:.3f}x "
+                f"below the {DEQUANT_RETENTION_FLOOR}x floor (fedavg/"
+                f"dequant must stay on the production dispatch path)")
     # peak-memory gate (ISSUE 5 donation satellite): raw RSS is not
     # portable across hardware/scale, so gate same-host only, like the
     # driver-overhead gate

@@ -152,6 +152,41 @@ def roofline_section():
     return "\n".join(lines) + "\n"
 
 
+def comm_section():
+    """Upload-codec runs (DESIGN.md §12): any result-JSON documents
+    under experiments/comm/ (single docs or --json lists), normalized
+    through the schema loader so older documents render too, with the
+    v2.2 byte-count columns."""
+    import sys
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.scenarios import load_result
+    docs = []
+    for blob in load("experiments/comm/*.json"):
+        docs.extend(blob if isinstance(blob, list) else [blob])
+    if not docs:
+        return "*(no codec runs recorded yet — `make comm-demo`)*\n"
+    lines = ["Uplink bytes are the analytic wire cost (participants x "
+             "`Codec.bytes_on_wire`); the compression ratio is dense "
+             "float32 uplink over encoded uplink. Dense runs show for "
+             "reference with no communication block.\n"]
+    lines.append("| scenario | codec | uplink (MB) | dense (MB) | "
+                 "ratio | test acc | macro-F1 |")
+    lines.append("|---|---|---|---|---|---|---|")
+    for doc in docs:
+        doc = load_result(doc)
+        m, comm = doc["metrics"], doc.get("communication")
+        if comm:
+            cells = (f"{comm['codec']} "
+                     f"| {comm['uplink_bytes']/1e6:.2f} "
+                     f"| {comm['dense_uplink_bytes']/1e6:.2f} "
+                     f"| {comm['compression_ratio']:.2f}x")
+        else:
+            cells = "dense | — | — | 1.00x"
+        lines.append(f"| {doc['scenario']} | {cells} "
+                     f"| {m['test_accuracy']:.3f} | {m['f1']:.3f} |")
+    return "\n".join(lines) + "\n"
+
+
 def perf_section():
     path = os.path.join(ROOT, "experiments/perf_log.json")
     if not os.path.exists(path):
@@ -194,6 +229,10 @@ paper study `python -m benchmarks.paper_tables full`; dry-runs
 ## §Roofline — per (arch x shape), single-pod
 
 {roofline_section()}
+
+## §Communication — upload codecs on the wire (DESIGN.md §12)
+
+{comm_section()}
 
 ## §Perf — hillclimbing log (hypothesis → change → measure → verdict)
 

@@ -167,6 +167,67 @@ def bench_robust_agg(client_counts=(8, 64, 256)):
     return rows
 
 
+def measure_comm(clients, iters=20):
+    """Upload-codec section (DESIGN.md §12): the fused
+    dequantize-and-aggregate reduce vs the plain fedavg weighted
+    reduction at paper-CNN scale, timed on the PRODUCTION entry points
+    (`kops.dequant_aggregate` / `kops.fedavg_aggregate` — whatever the
+    backend dispatch in kernels/ops.py routes to, so a dispatch
+    regression shows up here; kernel correctness is pinned in
+    tests/test_codecs.py).
+
+    `retention` is fedavg_us / dequant_us — the fraction of dense
+    aggregation throughput the dequantizing reduce retains (it reads 4x
+    fewer upload bytes but pays an int8->f32 cast + per-client scale
+    multiply; dimensionless, so the CI floor holds across runner
+    hardware). Compression ratios are ANALYTIC — dense f32 bytes over
+    `Codec.bytes_on_wire` at this model dimension — because the wire
+    cost is a shape property, not a timing. Shared with
+    `ci_bench.bench_comm` like the other measure_* helpers."""
+    from repro.core.codecs import get_codec
+    from repro.core.engine import stack_forest
+    from repro.core.fl_types import FLConfig
+    from repro.kernels import ops as kops
+    from repro.models.cnn import init_cnn
+
+    stacked = stack_forest([init_cnn(jax.random.PRNGKey(i))
+                            for i in range(clients)])
+    mat = kops.stacked_ravel(stacked)
+    n = int(mat.shape[1])
+    w = jnp.full((clients,), 1.0 / clients)
+    # an int8 payload of the right shape (values don't affect timing)
+    scale = jnp.max(jnp.abs(mat), axis=1) / 127.0
+    q = jnp.clip(jnp.round(mat / scale[:, None]), -127, 127).astype(jnp.int8)
+    favg_us = _time_min(lambda m: kops.fedavg_aggregate(m, w), mat,
+                        iters=iters)
+    deq_us = _time_min(
+        lambda qq: kops.dequant_aggregate(qq, scale, w), q, iters=iters)
+    fl = FLConfig(strategy="afl", num_clients=clients, participation=1.0)
+    dense_bytes = 4 * n
+    ratios = {name: dense_bytes / get_codec(name)(fl).bytes_on_wire(n)
+              for name in ("topk", "qsgd")}
+    return {"fedavg_us": favg_us, "dequant_us": deq_us,
+            "n_params": n, "retention": favg_us / deq_us,
+            "topk_ratio": ratios["topk"], "qsgd_ratio": ratios["qsgd"],
+            "topk_frac": fl.topk_frac, "quant_bits": fl.quant_bits}
+
+
+def bench_comm_agg(client_counts=(8, 64)):
+    """Dequantize-and-aggregate throughput sweep. The derived column is
+    the TPU roofline of the kernel's HBM traffic — the int8 payload is
+    a quarter of fedavg_agg's (C, N) f32 read."""
+    rows = []
+    for C in client_counts:
+        per = measure_comm(C)
+        hbm_bytes = C * per["n_params"] + 4 * per["n_params"] + 8 * C
+        derived = f"tpu_roofline_us={hbm_bytes / HBM_BW * 1e6:.2f}"
+        rows.append((f"dequant_agg_c{C}", per["dequant_us"], derived))
+        rows.append((f"dequant_agg_c{C}_vs_fedavg", per["retention"],
+                     f"fedavg/dequant_{per['retention']:.3f}x_"
+                     f"(ratio,_not_us)"))
+    return rows
+
+
 ENGINE_SWEEPS = {
     "smoke": (8,),
     "quick": (8, 32, 64),
@@ -359,6 +420,7 @@ def main(scale="quick"):
             + bench_aggregation_strategies()
             + bench_robust_agg((8,) if scale == "smoke"
                                else (8, 64, 256))
+            + bench_comm_agg((8,) if scale == "smoke" else (8, 64))
             + bench_engines(ENGINE_SWEEPS[scale])
             + bench_async_engines(tuple(sorted({min(ENGINE_SWEEPS[scale]),
                                                 max(ENGINE_SWEEPS[scale])})))

@@ -10,8 +10,10 @@ Beyond-paper options: --non-iid (Dirichlet label skew), --gossip
 (decentralized ring aggregation for AFL), strategy-plugin knobs
 (--prox-mu, --server-lr/--server-momentum), the adversarial axis
 (--attack/--attack-fraction/--attack-scale toggles Byzantine clients,
---defense/--clip-tau selects the robust aggregator — DESIGN.md §8), and
-the scenario registry: `--list-scenarios` / `--scenario NAME` runs a
+--defense/--clip-tau selects the robust aggregator — DESIGN.md §8), the
+communication axis (--codec/--topk-frac/--quant-bits compresses client
+uploads on the wire and reports the byte-count cost model —
+DESIGN.md §12), and the scenario registry: `--list-scenarios` / `--scenario NAME` runs a
 named point of the strategy x partition x topology x heterogeneity x
 adversary x engine space (core/scenarios.py) and prints its stable
 result document.
@@ -76,6 +78,17 @@ def main():
                          "event (DESIGN.md §8)")
     ap.add_argument("--clip-tau", type=float, default=10.0,
                     help="norm_clip: max L2 of an accepted update delta")
+    ap.add_argument("--codec", choices=api.codec_names(), default="none",
+                    help="upload codec: compress client uploads on the "
+                         "wire (core/codecs.py; DESIGN.md §12) — topk "
+                         "sparsification with error feedback, qsgd "
+                         "stochastic quantization, or a registered "
+                         "third-party codec")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="topk: fraction of coordinates shipped per round")
+    ap.add_argument("--quant-bits", type=int, choices=[8, 16], default=8,
+                    help="qsgd: 8 = int8 + per-client scale (~4x), "
+                         "16 = stochastic bfloat16 (2x)")
     ap.add_argument("--curves", action="store_true",
                     help="write per-round curves CSV (paper Figs. 9/11)")
     ap.add_argument("--engine", choices=["loop", "vectorized", "fused"],
@@ -119,7 +132,9 @@ def main():
                       attack=args.attack,
                       attack_fraction=args.attack_fraction,
                       attack_scale=args.attack_scale, defense=args.defense,
-                      clip_tau=args.clip_tau, engine=args.engine)
+                      clip_tau=args.clip_tau, codec=args.codec,
+                      topk_frac=args.topk_frac, quant_bits=args.quant_bits,
+                      engine=args.engine)
     sim = api.FederatedSimulation(fl, ds)
     if args.non_iid:
         from repro.data.partition import dirichlet_partition
@@ -140,6 +155,12 @@ def main():
     print(f"F1 / balanced acc:  {r.f1:.3f} / {r.balanced_accuracy:.3f}")
     print(f"build time:         {r.build_time_s:.2f}s")
     print(f"classification:     {r.classification_time_s:.4f}s")
+    comm = r.extra.get("communication")
+    if comm:
+        print(f"codec:              {comm['codec']} "
+              f"(uplink {comm['uplink_bytes']:,} B, "
+              f"dense {comm['dense_uplink_bytes']:,} B, "
+              f"{comm['compression_ratio']:.2f}x compression)")
     print("confusion matrix:")
     for row in r.confusion:
         print("   " + " ".join(f"{v:4d}" for v in row))

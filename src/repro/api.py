@@ -8,6 +8,11 @@ not (tests/test_api_surface.py snapshots it):
   Strategy plugins Strategy, RoundPlan, LocalSpec, register_strategy,
                    get_strategy, strategy_names, STRATEGY_REGISTRY,
                    STRATEGY_REGISTRY_VERSION
+  Upload codecs    Codec, register_codec, get_codec, codec_names,
+                   CODEC_REGISTRY, CODEC_REGISTRY_VERSION (DESIGN.md
+                   §12: compression of client uploads on the wire,
+                   declared per-codec defense validity, byte-count
+                   cost model in FLResult.extra["communication"])
   Driver           FederatedSimulation (the generic round driver),
                    FLResult
   Scenarios        ScenarioSpec, register_scenario, get_scenario,
@@ -42,6 +47,9 @@ DeprecationWarning.
 from __future__ import annotations
 
 from repro.core import aggregation as ops
+from repro.core.codecs import (CODEC_REGISTRY, CODEC_REGISTRY_VERSION,
+                               Codec, codec_names, get_codec,
+                               register_codec)
 from repro.core.fl_types import (ATTACKS, DEFENSES, ENGINES, STRATEGIES,
                                  FLConfig)
 from repro.core.scenarios import (CI_SMOKE_GRID, RESULT_SCHEMA_VERSION,
@@ -61,6 +69,8 @@ __all__ = sorted([
     "Strategy", "RoundPlan", "LocalSpec", "register_strategy",
     "get_strategy", "strategy_names", "STRATEGY_REGISTRY",
     "STRATEGY_REGISTRY_VERSION",
+    "Codec", "register_codec", "get_codec", "codec_names",
+    "CODEC_REGISTRY", "CODEC_REGISTRY_VERSION",
     "FederatedSimulation", "FLResult",
     "ScenarioSpec", "register_scenario", "get_scenario", "scenario_names",
     "run_scenario", "load_result", "RESULT_SCHEMA_VERSION",

@@ -276,6 +276,12 @@ class AsyncStrategy(strat_mod.Strategy):
                     from repro.core import robust
                     robust.clip_deltas_stacked(sim.init_params, stacked,
                                                fl.clip_tau)
+                if sim.codec is not None:
+                    # compile the codec round-trip per batch size (the
+                    # driver resets codec state/wire log after warmup)
+                    stacked = sim.transport(
+                        stacked, RoundPlan(list(range(k)),
+                                           [sim.init_params] * k, 0))
                 agg.async_batch_merge(sim.init_params, stacked,
                                       np.full(k, self.alpha, np.float32))
             # warmup_loop compiles a fixed 2-batch epoch and client 0's
@@ -323,6 +329,12 @@ class AsyncStrategy(strat_mod.Strategy):
                 from repro.core import robust
                 robust.clip_deltas_stacked(sim.init_params, stacked,
                                            fl.clip_tau)
+            if sim.codec is not None:
+                # per-distinct-batch-size codec round-trip compile (the
+                # driver resets codec state/wire log after warmup)
+                stacked = sim.transport(
+                    stacked, RoundPlan(list(range(k)),
+                                       [sim.init_params] * k, 0))
             agg.async_batch_merge(sim.init_params, stacked,
                                   np.full(k, self.alpha, np.float32))
 

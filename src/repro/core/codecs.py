@@ -1,0 +1,305 @@
+"""Pluggable upload codecs: compression of client uploads on the wire.
+
+A `Codec` transforms each client upload between local training and
+aggregation (DESIGN.md §12).  The driver seam is *corrupt -> encode ->
+decode -> aggregate*: the wire carries the (possibly corrupted) encoded
+update, and defenses always see dequantized dense coordinates — robust
+selection (trimmed-mean / median / Krum) is coordinate-wise or
+distance-based and is undefined on packed payloads, so decode happens
+before any defended reduce.  The fused dequantize-and-aggregate kernel
+(`kernels/comm_agg.py`) is the device fast path for the *plain* FedAvg
+reduce only.
+
+Codecs are registered by name exactly like strategies
+(`@register_codec` / `get_codec`, exported from `repro.api`), declare
+the defenses they compose with via a class-level `defenses` tuple
+(mirroring `Strategy.defenses`), and see every engine through one
+traceable round-trip — `scan_encode_decode` — so loop, vectorized and
+fused execution share bitwise-identical codec math.
+
+Randomness follows the §4 rng contract with a codec-private salt:
+unbiased stochastic rounding is keyed by (seed, event, absolute client
+id), so a client's quantization noise is reproducible across engines
+and independent of participation order.
+"""
+from typing import Dict, Tuple
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+
+from .fl_types import DEFENSES
+
+# Codec-private salt for the (seed, event, client) key derivation —
+# distinct from attacks._ATTACK_SALT so quantization noise and attack
+# noise are independent streams of the same run seed.
+_CODEC_SALT = 0xC0DE_C5ED
+
+
+def event_key(seed: int, event) -> jax.Array:
+    """Per-aggregation-event codec key (§4 rng contract, codec salt)."""
+    base = jax.random.PRNGKey(jnp.uint32(np.uint32(seed) ^ np.uint32(_CODEC_SALT)))
+    return jax.random.fold_in(base, event)
+
+
+def client_keys(key: jax.Array, client_ids) -> jax.Array:
+    """Fold absolute client ids into an event key -> (k, 2) key rows."""
+    ids = jnp.asarray(client_ids, jnp.int32) & 0x7FFFFFFF
+    return jax.vmap(lambda c: jax.random.fold_in(key, c))(ids)
+
+
+def upload_keys(seed: int, event, client_ids) -> jax.Array:
+    """(seed, event, client id) -> one rng key row per participant."""
+    return client_keys(event_key(seed, event), client_ids)
+
+
+class Codec:
+    """Lifecycle protocol for an upload codec.
+
+    Subclasses set `name`, declare `defenses` (the defense names the
+    codec composes with — validated at simulation build, exactly like
+    `Strategy.defenses`), and implement `encode` / `decode` /
+    `bytes_on_wire`.  `encode` and `decode` operate on the raveled
+    (k, N) float32 upload matrix of the participants of one
+    aggregation event — the same layout `fedavg_agg` reduces over.
+
+    Class attributes:
+      stateful      — the codec carries per-client state (error-feedback
+                      residuals) across rounds; the state rides the
+                      client-stacked scan carry under the fused engine.
+      needs_bases   — `encode` is relative to each participant's base
+                      (pre-training) parameters, e.g. delta sparsifiers.
+      supports_fused— the codec composes with the fused lax.scan
+                      executor (requires fixed payload shapes per round).
+    """
+
+    name: str = ""
+    defenses: Tuple[str, ...] = ("none",)
+    stateful: bool = False
+    needs_bases: bool = False
+    supports_fused: bool = True
+
+    def __init__(self, fl):
+        self.fl = fl
+
+    def validate(self, fl) -> None:
+        """Raise if the codec cannot run under this config."""
+        if fl.defense not in self.defenses:
+            raise ValueError(
+                f"codec {self.name!r} does not support defense "
+                f"{fl.defense!r}; declared: {self.defenses}")
+
+    # -- lifecycle ----------------------------------------------------
+    def init_state(self, num_clients: int, dim: int) -> Dict:
+        """Per-client codec state (empty for stateless codecs)."""
+        return {}
+
+    def encode(self, mat, keys, *, base=None, rows=None):
+        """(k, N) uploads -> (payload pytree, new per-client state rows).
+
+        `keys` is the (k, 2) key matrix from `upload_keys`; `base` is
+        the (k, N) raveled base parameters when `needs_bases`; `rows`
+        are the participants' state rows when `stateful`.
+        """
+        raise NotImplementedError
+
+    def decode(self, payload, *, base=None):
+        """Payload -> dequantized dense (k, N) float32 uploads."""
+        raise NotImplementedError
+
+    def bytes_on_wire(self, dim: int) -> int:
+        """Uplink bytes one client pays to ship one encoded upload."""
+        raise NotImplementedError
+
+    def scan_encode_decode(self, mat, keys, *, base=None, rows=None):
+        """One traceable encode->decode round-trip: (decoded, new rows).
+
+        This is the single entry point every engine uses (the per-round
+        driver calls it eagerly, the fused executor inside its scan), so
+        codec math is bitwise-identical across engines by construction.
+        """
+        payload, new_rows = self.encode(mat, keys, base=base, rows=rows)
+        return self.decode(payload, base=base), new_rows
+
+
+CODEC_REGISTRY: Dict[str, type] = {}
+CODEC_REGISTRY_VERSION = 1
+
+
+def register_codec(cls):
+    """Class decorator: register a Codec subclass under `cls.name`."""
+    name = getattr(cls, "name", "")
+    if not name or not isinstance(name, str):
+        raise ValueError("codec class must define a non-empty string `name`")
+    if name in CODEC_REGISTRY:
+        raise ValueError(f"codec {name!r} is already registered")
+    CODEC_REGISTRY[name] = cls
+    return cls
+
+
+def get_codec(name: str) -> type:
+    """Look up a registered codec class by name."""
+    try:
+        return CODEC_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; registered: {codec_names()}") from None
+
+
+def codec_names():
+    return sorted(CODEC_REGISTRY)
+
+
+@register_codec
+class NoneCodec(Codec):
+    """Dense float32 uploads — the identity wire format.
+
+    Registered so tooling can resolve `codec="none"` uniformly, but the
+    driver short-circuits on the name and never calls it on the hot
+    path: `codec="none"` runs the exact pre-codec code path (bitwise).
+    """
+
+    name = "none"
+    defenses = DEFENSES
+
+    def encode(self, mat, keys, *, base=None, rows=None):
+        return mat, rows
+
+    def decode(self, payload, *, base=None):
+        return payload
+
+    def bytes_on_wire(self, dim: int) -> int:
+        return 4 * dim
+
+
+@register_codec
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification with error-feedback residuals.
+
+    Encodes the training *delta* (upload - base) plus the client's
+    accumulated residual, ships the k largest-|.| coordinates as
+    (value, index) pairs, and banks the untransmitted remainder back
+    into the residual.  Error feedback is what makes sparsified SGD
+    converge (the residual re-injects every dropped coordinate until it
+    wins a top-k slot); the residual matrix is the per-client state that
+    rides the client-stacked scan carry under the fused engine.
+    """
+
+    name = "topk"
+    defenses = DEFENSES  # decode rebuilds dense coordinates pre-defense
+    stateful = True
+    needs_bases = True
+
+    def __init__(self, fl):
+        super().__init__(fl)
+        self.frac = float(fl.topk_frac)
+
+    def _k(self, dim: int) -> int:
+        return max(1, min(dim, int(np.ceil(self.frac * dim))))
+
+    def init_state(self, num_clients: int, dim: int) -> Dict:
+        return {"resid": jnp.zeros((num_clients, dim), jnp.float32)}
+
+    def encode(self, mat, keys, *, base=None, rows=None):
+        delta = mat - base + rows["resid"]
+        k = self._k(delta.shape[1])
+        _, idx = jax.lax.top_k(jnp.abs(delta), k)
+        vals = jnp.take_along_axis(delta, idx, axis=1)
+        c_rows = jnp.arange(delta.shape[0])[:, None]
+        new_rows = {"resid": delta.at[c_rows, idx].set(0.0)}
+        return {"values": vals, "idx": idx}, new_rows
+
+    def decode(self, payload, *, base=None):
+        vals, idx = payload["values"], payload["idx"]
+        c_rows = jnp.arange(vals.shape[0])[:, None]
+        sparse = jnp.zeros_like(base).at[c_rows, idx].set(vals)
+        return base + sparse
+
+    def bytes_on_wire(self, dim: int) -> int:
+        # 4-byte float value + 4-byte int32 index per kept coordinate.
+        return 8 * self._k(dim)
+
+
+@register_codec
+class QSGDCodec(Codec):
+    """Unbiased stochastic quantization of the raw upload.
+
+    `quant_bits=8`: per-client max-|.| scaling to int8 levels with
+    stochastic rounding (E[q * scale] == value), one float32 scale per
+    client on the wire -> ~4x compression.  `quant_bits=16`: stochastic
+    rounding to bfloat16 (the value is bracketed by its two nearest
+    bf16 neighbours and rounded up with probability proportional to the
+    distance) -> exactly 2x.  Rounding noise is keyed by
+    (seed, event, absolute client id), so it is reproducible and
+    engine-independent.  Quantizing the raw parameters (not a delta)
+    keeps the codec stateless and makes the fused dequantize-aggregate
+    kernel exact: sum_c w_c * scale_c * q_c.
+    """
+
+    name = "qsgd"
+    defenses = DEFENSES  # defenses run on the dequantized dense matrix
+
+    def __init__(self, fl):
+        super().__init__(fl)
+        self.bits = int(fl.quant_bits)
+
+    def encode(self, mat, keys, *, base=None, rows=None):
+        if self.bits == 8:
+            q, scale = jax.vmap(self._enc_int8)(mat, keys)
+            return {"q": q, "scale": scale}, rows
+        q = jax.vmap(self._enc_bf16)(mat, keys)
+        return {"q": q}, rows
+
+    @staticmethod
+    def _enc_int8(row, key):
+        scale = jnp.maximum(jnp.max(jnp.abs(row)), 1e-12) / 127.0
+        m = row / scale
+        low = jnp.floor(m)
+        u = jax.random.uniform(key, row.shape)
+        q = low + (u < (m - low)).astype(jnp.float32)
+        return jnp.clip(q, -127.0, 127.0).astype(jnp.int8), scale
+
+    @staticmethod
+    def _enc_bf16(row, key):
+        bits = jax.lax.bitcast_convert_type(row, jnp.uint32)
+        trunc = bits & jnp.uint32(0xFFFF0000)
+        a = jax.lax.bitcast_convert_type(trunc, jnp.float32)
+        b = jax.lax.bitcast_convert_type(trunc + jnp.uint32(0x10000),
+                                         jnp.float32)
+        lo, hi = jnp.minimum(a, b), jnp.maximum(a, b)
+        span = hi - lo
+        p = jnp.where(span > 0, (row - lo) / jnp.where(span > 0, span, 1.0),
+                      0.0)
+        u = jax.random.uniform(key, row.shape)
+        return jnp.where(u < p, hi, lo).astype(jnp.bfloat16)
+
+    def decode(self, payload, *, base=None):
+        if "scale" in payload:
+            return (payload["q"].astype(jnp.float32)
+                    * payload["scale"][:, None])
+        return payload["q"].astype(jnp.float32)
+
+    def bytes_on_wire(self, dim: int) -> int:
+        if self.bits == 8:
+            return dim + 4  # int8 per coordinate + one float32 scale
+        return 2 * dim
+
+
+def roundtrip_tree(codec: Codec, tree, keys, base_tree=None):
+    """Encode->decode one (unstacked) upload pytree — the CFL seam.
+
+    The sequential strategy merges one visit at a time, so there is no
+    stacked (k, N) upload matrix; this ravels the single tree to a
+    (1, N) row, runs the codec round-trip, and unravels.  Only
+    stateless codecs reach here (validated at simulation build:
+    error-feedback state needs the stacked driver seam).
+    """
+    flat, unravel = jax.flatten_util.ravel_pytree(tree)
+    base = None
+    if codec.needs_bases:
+        bflat, _ = jax.flatten_util.ravel_pytree(base_tree)
+        base = bflat[None, :]
+    dec, _ = codec.scan_encode_decode(flat[None, :], keys, base=base,
+                                      rows=None)
+    return unravel(dec[0])

@@ -239,11 +239,13 @@ def predict_clients(stacked_params, images, *, stacked_apply_fn):
 
 @functools.partial(jax.jit,
                    static_argnames=("loss_fn", "apply_fn", "lr", "momentum",
-                                    "attack", "defense", "clip_tau"))
+                                    "attack", "defense", "clip_tau",
+                                    "codec"))
 def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
                    loss_fn, apply_fn, lr, momentum, attack="none",
                    attack_scale=1.0, attack_flags=None, attack_keys=None,
-                   defense="none", clip_tau=10.0):
+                   defense="none", clip_tau=10.0, codec=None,
+                   codec_keys=None):
     """One CFL round — the sequential client-to-client continual pass — as
     a single `lax.scan` over clients in visit order.
 
@@ -260,8 +262,16 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
     honest local model — attackers train honestly and corrupt only the
     upload.
 
+    Upload codecs (DESIGN.md §12): the per-visit wire seam sits between
+    corruption and the merge — the merged update is the decoded encoding
+    of the (corrupted) local model, each visit keyed by `codec_keys`
+    (one key row per visit, derived from (seed, event, absolute client
+    id) with the codec salt). Only stateless codecs reach here (the
+    driver validates); with `codec=None` the traced program is exactly
+    the pre-codec one.
+
     Returns (final model, losses (C, T), post-train local accs (C,))."""
-    from repro.core import aggregation, attacks  # deferred: kernel-level
+    from repro.core import aggregation, attacks, codecs  # deferred
     opt = optimizers.sgd(lr, momentum=momentum)
     C = jax.tree.leaves(data)[0].shape[0]
     if attack_flags is None:
@@ -278,15 +288,27 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
                 f"from the run seed via attacks.client_keys)")
         # benign path: keys are threaded as scan inputs but never used
         attack_keys = jax.random.split(jax.random.PRNGKey(0), C)
+    if codec is not None and codec_keys is None:
+        # same contract as attack_keys: a constant-key fallback would
+        # make quantization noise seed-independent
+        raise ValueError(
+            f"cfl_round_scan: codec={codec.name!r} needs per-visit "
+            f"codec_keys (derive them via codecs.upload_keys)")
 
     def visit(model, inputs):
-        cdata, ex, ey, flag, key = inputs
+        if codec is not None:
+            cdata, ex, ey, flag, key, ckey = inputs
+        else:
+            cdata, ex, ey, flag, key = inputs
         local, losses, _ = _local_sgd_scan(model, cdata, opt, loss_fn)
         preds = jnp.argmax(apply_fn(local, ex), axis=-1)
         acc = jnp.mean((preds == ey).astype(jnp.float32))
         if attack not in ("none", "label_flip"):
             local = attacks.corrupt_tree(local, model, flag, key,
                                          kind=attack, scale=attack_scale)
+        if codec is not None:
+            local = codecs.roundtrip_tree(codec, local, ckey[None],
+                                          base_tree=model)
         if defense == "norm_clip":
             model = aggregation.defended_cfl_merge(model, local, alpha,
                                                    clip_tau)
@@ -294,10 +316,11 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
             model = aggregation.cfl_merge_stacked(model, local, alpha)
         return model, (losses, acc)
 
-    model, (losses, accs) = jax.lax.scan(
-        visit, model,
-        (data, eval_images, eval_labels, jnp.asarray(attack_flags, bool),
-         attack_keys))
+    xs = (data, eval_images, eval_labels,
+          jnp.asarray(attack_flags, bool), attack_keys)
+    if codec is not None:
+        xs = xs + (jnp.asarray(codec_keys),)
+    model, (losses, accs) = jax.lax.scan(visit, model, xs)
     return model, losses, accs
 
 
@@ -445,7 +468,8 @@ class VectorizedClientEngine:
 
     def cfl_round(self, model, order, data, alpha, *, attack="none",
                   attack_scale=1.0, attack_flags=None, attack_keys=None,
-                  defense="none", clip_tau=10.0):
+                  defense="none", clip_tau=10.0, codec=None,
+                  codec_keys=None):
         idx = jnp.asarray(np.asarray(order))
         return cfl_round_scan(model, data, self.eval_x[idx], self.eval_y[idx],
                               alpha, loss_fn=self.loss_fn,
@@ -454,4 +478,5 @@ class VectorizedClientEngine:
                               attack_scale=attack_scale,
                               attack_flags=attack_flags,
                               attack_keys=attack_keys, defense=defense,
-                              clip_tau=clip_tau)
+                              clip_tau=clip_tau, codec=codec,
+                              codec_keys=codec_keys)

@@ -102,6 +102,14 @@ class FLConfig:
     # sweep past the single-stack memory ceiling.
     mesh_devices: int = 0          # 0/1 = single-device fused scan
     fused_chunk: int = 0           # 0 = whole participant stack at once
+    # upload codec (DESIGN.md §12). Names any codec registered in
+    # `core.codecs.CODEC_REGISTRY` ("none", "topk", "qsgd", plugins);
+    # like `strategy`, membership is validated when the simulation
+    # resolves the codec (this module stays dependency-free).
+    # codec="none" runs the exact pre-codec upload path (bitwise).
+    codec: str = "none"
+    topk_frac: float = 0.1         # topk: fraction of coordinates kept
+    quant_bits: int = 8            # qsgd: 8 (int8 + scale) | 16 (bf16)
     # simulation engine
     engine: str = "loop"           # loop       — per-client Python loop
                                    #              (paper-faithful timing: one
@@ -136,6 +144,15 @@ class FLConfig:
                 "clients must divide evenly into groups"
         assert self.mesh_devices >= 0, self.mesh_devices
         assert self.fused_chunk >= 0, self.fused_chunk
+        assert isinstance(self.codec, str) and self.codec, self.codec
+        assert 0.0 < self.topk_frac <= 1.0, self.topk_frac
+        assert self.quant_bits in (8, 16), self.quant_bits
+        if self.mesh_devices > 1 and self.codec != "none":
+            raise ValueError(
+                "upload codecs do not yet compose with the mesh-sharded "
+                "fused executor (per-shard codec state and collective "
+                "dequantize are future work — DESIGN.md §12); run "
+                "mesh_devices<=1 or codec='none'")
         if self.mesh_devices > 1 and self.engine != "fused":
             raise ValueError(
                 "mesh_devices only applies to the fused executor "

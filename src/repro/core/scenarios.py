@@ -31,14 +31,17 @@ import json
 import os
 from typing import Dict, List, Optional, Tuple, Union
 
+from repro.core.codecs import CODEC_REGISTRY_VERSION, codec_names, get_codec
 from repro.core.fl_types import ATTACKS, DEFENSES
 from repro.core.strategies import (STRATEGY_REGISTRY_VERSION, get_strategy,
                                    strategy_names)
 
-# v2.1: adds the "strategy" block (plugin name + registry version).
-# v2 added the "attack" block. Older documents are still readable
-# through `load_result`.
-RESULT_SCHEMA_VERSION = 2.1
+# v2.2: adds the "communication" block (per-round uplink/downlink
+# bytes, compression ratio, codec name + registry version; null for
+# dense runs). v2.1 added the "strategy" block (plugin name + registry
+# version); v2 added the "attack" block. Older documents are still
+# readable through `load_result`.
+RESULT_SCHEMA_VERSION = 2.2
 
 # One output-dir convention for every result/curve writer: the example
 # CLI's curves, `--json` grid dumps, and experiment artifacts all land
@@ -120,6 +123,10 @@ class ScenarioSpec:
     defense: str = "none"            # core/robust.py
     defense_f: int = 0               # 0 = derive from attack_fraction
     clip_tau: float = 10.0
+    # upload codec (DESIGN.md §12)
+    codec: str = "none"              # core/codecs.py registry
+    topk_frac: float = 0.1           # topk: fraction of coords shipped
+    quant_bits: int = 8              # qsgd: 8 (int8+scale) | 16 (bf16)
     seed: int = 0
 
     def __post_init__(self):
@@ -150,6 +157,23 @@ class ScenarioSpec:
                 f"{self.name}: defense {self.defense!r} does not apply to "
                 f"the {self.strategy}/{self.topology} aggregation event "
                 f"(expected one of {allowed_d}; DESIGN.md §8)")
+        if self.codec not in codec_names():
+            raise ValueError(
+                f"{self.name}: unknown codec {self.codec!r} "
+                f"(registered: {codec_names()})")
+        if self.codec != "none":
+            cls = get_codec(self.codec)
+            if self.defense not in cls.defenses:
+                raise ValueError(
+                    f"{self.name}: codec {self.codec!r} does not support "
+                    f"defense {self.defense!r} (declared: {cls.defenses}; "
+                    f"DESIGN.md §12)")
+            if cls.stateful and getattr(get_strategy(self.strategy),
+                                        "codec_seam", "driver") != "driver":
+                raise ValueError(
+                    f"{self.name}: stateful codec {self.codec!r} needs the "
+                    f"stacked driver upload seam, which strategy "
+                    f"{self.strategy!r} does not use (DESIGN.md §12)")
 
     def to_fl_config(self):
         """The underlying FLConfig: `strategy` resolves 1:1 through the
@@ -174,6 +198,8 @@ class ScenarioSpec:
             attack=self.attack, attack_fraction=self.attack_fraction,
             attack_scale=self.attack_scale, defense=self.defense,
             defense_f=self.defense_f, clip_tau=self.clip_tau,
+            codec=self.codec, topk_frac=self.topk_frac,
+            quant_bits=self.quant_bits,
             engine=self.engine)
 
     def asdict(self) -> Dict:
@@ -355,14 +381,55 @@ register(ScenarioSpec(
     strategy="async", topology="event", speed_model="uniform",
     attack="gauss", attack_scale=3.0, defense="norm_clip", clip_tau=3.0))
 
+# communication axis — upload codecs on the wire (DESIGN.md §12). The
+# acceptance pair is `comm-qsgd-accept-32c-vec` vs `attack-none-32c-vec`
+# (same data/schedule/seed, only the codec toggles): ISSUE 7 requires
+# >= 3.5x uplink compression with macro-F1 within 0.02 of the dense run.
+register(ScenarioSpec(
+    "comm-topk-afl-vec", "top-k sparsification (10% of coordinates) with "
+    "error-feedback residuals on the AFL star",
+    strategy="afl", topology="star", participation=1.0, local_epochs=2,
+    codec="topk", topk_frac=0.1))
+register(ScenarioSpec(
+    "comm-qsgd-hfl-fused", "int8 stochastic quantization under the fused "
+    "executor: dequantize-and-aggregate inside the round scan",
+    strategy="hfl", topology="hierarchical", engine="fused",
+    local_epochs=2, codec="qsgd"))
+register(ScenarioSpec(
+    "comm-qsgd-signflip-median-vec", "the codec x adversary crossing: "
+    "sign-flip attackers quantized on the wire, median aggregation over "
+    "the dequantized coordinates",
+    strategy="afl", topology="star", participation=1.0, codec="qsgd",
+    attack="sign_flip", attack_scale=4.0, defense="median"))
+register(ScenarioSpec(
+    "comm-topk-async-loop", "top-k + error feedback riding the async "
+    "merge batches under the loop engine",
+    strategy="async", topology="event", engine="loop",
+    speed_model="uniform", codec="topk", topk_frac=0.25))
+# the acceptance pair runs the 32-client basis for 12 rounds (vs the
+# attack family's 10): both runs converge there, so the measurement
+# isolates the quantization noise floor instead of mid-training
+# variance (at 10 rounds the runs sit on the steep part of the curve
+# and seed-level noise alone moves macro-F1 by more than the 0.02 bar)
+_COMM32 = dict(_ACC32, rounds=12)
+register(ScenarioSpec(
+    "comm-dense-accept-32c-vec", "32-client dense reference of the "
+    "codec acceptance pair (the macro-F1 baseline qsgd is held to)",
+    **_COMM32))
+register(ScenarioSpec(
+    "comm-qsgd-accept-32c-vec", "32-client qsgd acceptance run: the "
+    "dense twin with int8 uploads (~4x uplink compression at matched "
+    "macro-F1)",
+    codec="qsgd", **_COMM32))
+
 # the CI bench-smoke grid: one sync-centralized, one sync-decentralized,
 # one async-heterogeneous, one adversarial scenario, one scenario per
-# PR 4 strategy plugin family, plus one fused-executor scenario
-# (see .github/workflows/ci.yml)
+# PR 4 strategy plugin family, one fused-executor scenario, plus one
+# upload-codec scenario (see .github/workflows/ci.yml)
 CI_SMOKE_GRID: Tuple[str, ...] = (
     "iid-hfl-vec", "ring-gossip-vec", "async-straggler-vec",
     "attack-replace-cfl-clip-vec", "fedprox-dirichlet-vec",
-    "fedadam-iid-vec", "iid-hfl-fused")
+    "fedadam-iid-vec", "iid-hfl-fused", "comm-qsgd-signflip-median-vec")
 
 
 # ---------------------------------------------------------------------------
@@ -409,6 +476,10 @@ def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
                 sim.strategy.event_size()),
             "clip_tau": spec.clip_tau,
         }
+    comm_block = r.extra.get("communication")
+    if comm_block is not None:
+        comm_block = {**comm_block,
+                      "registry_version": CODEC_REGISTRY_VERSION}
     return {
         "schema_version": RESULT_SCHEMA_VERSION,
         "scenario": spec.name,
@@ -431,6 +502,7 @@ def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
         },
         "async": async_block,
         "attack": attack_block,
+        "communication": comm_block,
     }
 
 
@@ -440,19 +512,26 @@ def load_result(doc: Dict) -> Dict:
     schema_version themselves. v1 documents (pre-adversarial) carry no
     "attack" key — they read as unattacked documents; v2 documents
     (pre-plugin) carry no "strategy" block — the plugin name falls back
-    to the spec's strategy field with a null registry version."""
+    to the spec's strategy field with a null registry version; v2.1
+    documents (pre-codec) carry no "communication" block — they read as
+    dense (uncompressed) runs."""
     v = doc.get("schema_version")
     if v == RESULT_SCHEMA_VERSION:
         return doc
+    if v == 2.1:
+        return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
+                "communication": None}
     if v == 2:
         plugin = (doc.get("spec") or {}).get("strategy")
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
-                "strategy": {"plugin": plugin, "registry_version": None}}
+                "strategy": {"plugin": plugin, "registry_version": None},
+                "communication": None}
     if v == 1:
         plugin = (doc.get("spec") or {}).get("strategy")
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
                 "attack": None,
-                "strategy": {"plugin": plugin, "registry_version": None}}
+                "strategy": {"plugin": plugin, "registry_version": None},
+                "communication": None}
     raise ValueError(f"unknown result schema_version {v!r}")
 
 

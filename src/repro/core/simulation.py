@@ -56,9 +56,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attacks
+from repro.core import codecs as codecs_mod
 from repro.core import engine as engine_mod
 from repro.core import strategies as strat_mod
 from repro.core import aggregation
+from repro.kernels import ops
 from repro.core.fl_types import FLConfig
 from repro.core.metrics import Timer, classification_metrics
 from repro.data.partition import iid_partition
@@ -170,6 +172,11 @@ class FusedContext:
         self.y_test = consts["y_test"]
         self.track = sim.strategy.track_curves
         self.mesh_axis = mesh_axis
+        # per-client codec state for the CURRENT scan step (error-
+        # feedback residuals): the executor threads it through the scan
+        # carry and parks it here across the strategy's scan_round call
+        # (None when the codec is stateless or inactive)
+        self._codec_carry = None
 
     def local_pids(self, pids):
         """Absolute participant ids -> rows of this shard's sub-stack
@@ -211,6 +218,31 @@ class FusedContext:
         return attacks.corrupt_stacked(uploads, bases, xs["flags"],
                                        xs["keys"], kind=fl.attack,
                                        scale=fl.attack_scale)
+
+    def transport(self, uploads, bases, xs):
+        """In-scan codec round-trip — the fused twin of
+        `FederatedSimulation.transport` (DESIGN.md §12): encode -> decode
+        the (corrupted) upload stack with keys hoisted into
+        `xs['ckeys']`; error-feedback rows ride the scan carry via
+        `_codec_carry`. Identity when codec='none' (bitwise degeneracy:
+        the traced program is unchanged)."""
+        codec = self.sim.codec
+        if codec is None:
+            return uploads
+        mat = ops.stacked_ravel(uploads)
+        base = ops.stacked_ravel(bases) if codec.needs_bases else None
+        if codec.stateful:
+            pids = self.local_pids(xs["pids"])
+            rows = jax.tree.map(lambda a: a[pids], self._codec_carry)
+            dec, new_rows = codec.scan_encode_decode(
+                mat, xs["ckeys"], base=base, rows=rows)
+            self._codec_carry = jax.tree.map(
+                lambda a, r: a.at[pids].set(r), self._codec_carry,
+                new_rows)
+        else:
+            dec, _ = codec.scan_encode_decode(mat, xs["ckeys"],
+                                              base=base, rows=None)
+        return ops.stacked_unravel(uploads, dec)
 
     def test_acc(self, model):
         """Per-round curve point on the full test split (one in-scan
@@ -257,6 +289,35 @@ class FederatedSimulation:
                 raise ValueError(str(e)) from None
             self.strategy = cls(fl)
         self.strategy.validate()
+        # resolve the upload codec (DESIGN.md §12). codec="none" leaves
+        # `self.codec` as None and every transport seam is an identity
+        # early-return — the exact pre-codec code path, bitwise.
+        self.model_dim = sum(
+            int(np.prod(l.shape, dtype=np.int64))
+            for l in jax.tree.leaves(self.init_params))
+        self.codec = None
+        self.codec_state = {}
+        self._comm_log: List[int] = []   # participants per logged event
+        if fl.codec != "none":
+            self.codec = codecs_mod.get_codec(fl.codec)(fl)
+            self.codec.validate(fl)
+            if (self.codec.stateful
+                    and self.strategy.codec_seam != "driver"):
+                raise ValueError(
+                    f"codec {fl.codec!r} carries per-client state "
+                    f"(error feedback), which needs the stacked driver "
+                    f"upload seam; strategy {self.strategy.name!r} "
+                    f"aggregates sequentially "
+                    f"(codec_seam={self.strategy.codec_seam!r}) — use a "
+                    f"stateless codec or a stacked strategy")
+            if fl.engine == "fused" and not self.codec.supports_fused:
+                raise ValueError(
+                    f"codec {fl.codec!r} does not support the fused "
+                    f"executor (Codec.supports_fused)")
+            self.codec_state = self.codec.init_state(fl.num_clients,
+                                                     self.model_dim)
+            # one jitted round-trip shared by all per-round events
+            self._codec_apply = jax.jit(self.codec.scan_encode_decode)
         # Byzantine subset: drawn from a dedicated generator (never the
         # schedule rng) so the attack axis leaves the DESIGN.md §4 parity
         # contract intact
@@ -450,6 +511,46 @@ class FederatedSimulation:
                                        kind=fl.attack,
                                        scale=fl.attack_scale)
 
+    def transport(self, uploads, plan):
+        """Ship one event's upload stack through the active codec:
+        encode -> decode on the raveled (k, N) matrix, error-feedback
+        rows gathered/scattered against the per-client codec state, and
+        the event's analytic wire bytes logged (DESIGN.md §12). Identity
+        when codec='none' — the exact pre-codec path. Runs AFTER
+        `corrupt` (the wire carries the corrupted encoded update) and
+        BEFORE aggregation (defenses see dequantized coordinates)."""
+        codec = self.codec
+        if codec is None:
+            return uploads
+        fl = self.fl
+        mat = ops.stacked_ravel(uploads)
+        keys = codecs_mod.upload_keys(fl.seed, plan.event,
+                                      np.asarray(plan.participants,
+                                                 np.int32))
+        base = (ops.stacked_ravel(self._bases_stacked(plan))
+                if codec.needs_bases else None)
+        if codec.stateful:
+            pids = jnp.asarray(np.asarray(plan.participants, np.int32))
+            rows = jax.tree.map(lambda a: a[pids], self.codec_state)
+            dec, new_rows = self._codec_apply(mat, keys, base=base,
+                                              rows=rows)
+            self.codec_state = jax.tree.map(
+                lambda a, r: a.at[pids].set(r), self.codec_state,
+                new_rows)
+        else:
+            dec, _ = self._codec_apply(mat, keys, base=base, rows=None)
+        self._comm_log.append(len(plan.participants))
+        return ops.stacked_unravel(uploads, dec)
+
+    def _reset_codec(self):
+        """Re-zero codec state + wire log (warmups dry-run the transport
+        to compile it, which must not leak residuals/bytes into the
+        measured run)."""
+        if self.codec is not None:
+            self.codec_state = self.codec.init_state(self.fl.num_clients,
+                                                     self.model_dim)
+            self._comm_log = []
+
     def sequential_round(self, model, order, event, alpha, spec, rng):
         """One continual (CFL-style) pass: clients train in visit order,
         each (possibly corrupted, possibly norm-clipped) update merging
@@ -457,6 +558,12 @@ class FederatedSimulation:
         merges; vectorized: one `lax.scan` with in-scan corruption (the
         visit base is the carried state). Returns (model, losses, accs)."""
         fl = self.fl
+        codec = self.codec
+        ckeys = (codecs_mod.upload_keys(fl.seed, event,
+                                        np.asarray(order, np.int32))
+                 if codec is not None else None)
+        if codec is not None:
+            self._comm_log.append(len(order))
         if self.vec is not None:
             eng = self.vec
             data = eng.batched_clients(rng, order, fl.local_epochs)
@@ -469,13 +576,13 @@ class FederatedSimulation:
                 attack_scale=fl.attack_scale,
                 attack_flags=self.attack_mask[np.asarray(order, int)],
                 attack_keys=keys, defense=fl.defense,
-                clip_tau=fl.clip_tau)
+                clip_tau=fl.clip_tau, codec=codec, codec_keys=ckeys)
             return (model, np.asarray(losses[:, -eng.nb:]).mean(axis=1),
                     np.asarray(accs))
         attacking = fl.attack not in ("none", "label_flip")
         key = attacks.event_key(fl.seed, event)
         losses, accs = [], []
-        for c in order:
+        for i, c in enumerate(order):
             local, loss, acc = self._local_train(model, c, spec=spec)
             if attacking and self.attack_mask[c]:
                 # base = the model this visit pulled (the carried state),
@@ -483,6 +590,12 @@ class FederatedSimulation:
                 local = attacks.corrupt_tree(
                     local, model, True, jax.random.fold_in(key, int(c)),
                     kind=fl.attack, scale=fl.attack_scale)
+            if codec is not None:
+                # wire seam per visit: the merged update is the decoded
+                # encoding of the (corrupted) local model, keyed like the
+                # vectorized pass (absolute client id)
+                local = codecs_mod.roundtrip_tree(
+                    codec, local, ckeys[i][None], base_tree=model)
             if fl.defense == "norm_clip":
                 from repro.core import robust
                 local = robust.clip_update(model, local, fl.clip_tau)
@@ -562,6 +675,7 @@ class FederatedSimulation:
         curves = {"train_acc": [], "train_loss": [], "test_acc": []}
         state = strat.init_state(self)
         strat.warmup(self)
+        self._reset_codec()
         n_events = strat.num_events(self)
         all_accs: List[float] = []
         train_acc = 0.0
@@ -638,15 +752,41 @@ class FederatedSimulation:
               "event": jnp.arange(R, dtype=jnp.int32)}
         for key, val in strat.scan_extra_xs(self, R).items():
             xs[key] = jnp.asarray(val)
+        codec_state = None
+        if self.codec is not None:
+            # codec rng hoisted like the attack keys: one (k, 2) key
+            # block per round, derived from (seed, event, client id)
+            ckeys = ([np.asarray(codecs_mod.upload_keys(fl.seed, ev,
+                                                        pids_l[ev]))
+                      for ev in range(R)])
+            xs["ckeys"] = jnp.asarray(
+                np.stack(ckeys) if R else np.zeros((0, k, 2), np.uint32))
+            if self.codec.stateful:
+                codec_state = self.codec.init_state(fl.num_clients,
+                                                    self.model_dim)
         consts = _fused_consts(self)
         # private copy of the initial carry: the scan donates it, and
         # state0's leaves may alias long-lived arrays (init_params)
         carry0 = jax.tree.map(jnp.array, strat.scan_carry(self, state0))
+        if codec_state is not None:
+            # error-feedback residuals ride the scan carry next to the
+            # strategy's state (device-resident for the whole run, same
+            # donation discipline); carry0 stays untouched when the
+            # codec is stateless or inactive — the compiled program is
+            # the pre-codec one
+            carry0 = (carry0, codec_state)
 
         mesh_axis = "data" if fl.mesh_devices > 1 else None
 
         def _run(carry, xs, consts):
             fx = FusedContext(self, consts, mesh_axis=mesh_axis)
+            if codec_state is not None:
+                def body(c, x):
+                    sc, cc = c
+                    fx._codec_carry = cc
+                    sc, out = strat.scan_round(fx, sc, x)
+                    return (sc, fx._codec_carry), out
+                return jax.lax.scan(body, carry, xs)
             return jax.lax.scan(
                 lambda c, x: strat.scan_round(fx, c, x), carry, xs)
 
@@ -672,6 +812,11 @@ class FederatedSimulation:
             # single-device path's absent transfer)
             dev0 = jax.devices()[0]
             carry = jax.tree.map(lambda l: jax.device_put(l, dev0), carry)
+        if codec_state is not None:
+            carry, self.codec_state = carry
+        if self.codec is not None:
+            # analytic wire accounting, from the hoisted schedules
+            self._comm_log = [len(p) for p in pids_l]
         state = strat.scan_uncarry(self, carry)
         acc_r, loss_r, tacc_r = (np.asarray(acc_r), np.asarray(loss_r),
                                  np.asarray(tacc_r))
@@ -819,6 +964,8 @@ class FederatedSimulation:
         m = classification_metrics(y_true, y_pred, 10)
 
         extra = dict(strat.extra_result(self, state))
+        if self.codec is not None:
+            extra["communication"] = self._communication_block()
         if self.vec is not None and self.vec.dropped_samples:
             # the stacked engine trains every client for the federation-
             # minimum batch count (core/engine.py ShardTruncationWarning)
@@ -839,6 +986,29 @@ class FederatedSimulation:
             round_test_acc=curves["test_acc"],
             extra=extra,
         )
+
+    def _communication_block(self) -> Dict[str, Any]:
+        """The byte-count cost model (DESIGN.md §12), assembled from the
+        per-event participant log. Accounting is ANALYTIC — bytes follow
+        from the wire format and the event's participant count, never
+        from measuring device buffers — so it is engine-independent by
+        construction. Uplink = what participants ship through the codec;
+        downlink = the dense model broadcast each participant pulled
+        (codecs compress the upload path only); the compression ratio is
+        dense-f32 uplink over codec uplink."""
+        codec, dim = self.codec, self.model_dim
+        per_up = [k * codec.bytes_on_wire(dim) for k in self._comm_log]
+        per_down = [k * 4 * dim for k in self._comm_log]
+        up, dense = sum(per_up), sum(per_down)
+        return {
+            "codec": codec.name,
+            "uplink_bytes_per_round": per_up,
+            "downlink_bytes_per_round": per_down,
+            "uplink_bytes": int(up),
+            "downlink_bytes": int(sum(per_down)),
+            "dense_uplink_bytes": int(dense),
+            "compression_ratio": (dense / up) if up else 1.0,
+        }
 
     def _track(self, curves, accs, losses, model_for_eval):
         curves["train_acc"].append(float(np.mean(np.asarray(accs))))

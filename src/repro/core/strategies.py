@@ -146,6 +146,13 @@ class Strategy:
     track_curves = True
     mean_train_acc_over_events = False
     timeline_result = False
+    # Where upload codecs attach (DESIGN.md §12): "driver" = the generic
+    # corrupt->transport->aggregate seam over the stacked upload matrix
+    # (everything that uses the default run_event / scan_round, async
+    # included); "sequential" = per-visit merging (CFL) where only
+    # STATELESS codecs apply — error-feedback state needs the stacked
+    # seam, and the driver validates that composition at build time.
+    codec_seam = "driver"
 
     def __init__(self, fl):
         self.fl = fl
@@ -213,6 +220,7 @@ class Strategy:
         spec = self.local_spec(sim, state, plan)
         uploads, losses, accs = sim.local_train(plan, spec, rng)
         uploads = sim.corrupt(uploads, plan)
+        uploads = sim.transport(uploads, plan)
         state = self.aggregate_event(sim, state, plan, uploads)
         return state, accs, losses
 
@@ -239,8 +247,9 @@ class Strategy:
         uploads = engine_mod.stack_forest(engine_mod.unstack_forest(
             engine_mod.replicate_tree(sim.init_params,
                                       len(plan.participants))))
-        state = self.aggregate_event(sim, state, plan,
-                                     sim.corrupt(uploads, plan))
+        state = self.aggregate_event(
+            sim, state, plan,
+            sim.transport(sim.corrupt(uploads, plan), plan))
         self.served_fn(sim, state)()
 
     # -- fused executor (DESIGN.md §10) -------------------------------------
@@ -352,6 +361,7 @@ class Strategy:
             chunk=fl.fused_chunk)
         accs = fx.local_accs(params, pids)
         uploads = fx.corrupt(params, bases, xs)
+        uploads = fx.transport(uploads, bases, xs)
         carry = self.scan_aggregate(fx, carry, xs, uploads)
         return carry, (fx.pmean(jnp.mean(accs)),
                        fx.pmean(jnp.mean(losses[:, -fx.nb:])),
@@ -680,6 +690,7 @@ class CFLStrategy(Strategy):
     name = "cfl"
     topologies = ("sequential",)
     defenses = {"sequential": ("none", "norm_clip")}
+    codec_seam = "sequential"   # per-visit wire: stateless codecs only
 
     def init_state(self, sim):
         return {"model": sim.init_params}
@@ -726,7 +737,8 @@ class CFLStrategy(Strategy):
             lr=fl.lr, momentum=fl.momentum, attack=fl.attack,
             attack_scale=fl.attack_scale, attack_flags=xs["flags"],
             attack_keys=xs["keys"], defense=fl.defense,
-            clip_tau=fl.clip_tau)
+            clip_tau=fl.clip_tau, codec=fx.sim.codec,
+            codec_keys=xs.get("ckeys"))
         carry = {"model": model}
         return carry, (jnp.mean(accs), jnp.mean(losses[:, -fx.nb:]),
                        fx.test_acc(model))

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import comm_agg as _ca
 from repro.kernels import fedavg_agg as _fa
 from repro.kernels import flash_attention as _fl
 from repro.kernels import robust_agg as _ra
@@ -29,6 +30,20 @@ def on_cpu() -> bool:
 def fedavg_aggregate(stacked, weights, *, interpret=None):
     interpret = on_cpu() if interpret is None else interpret
     return _fa.fedavg_agg(stacked, weights, interpret=interpret)
+
+
+# -- fused dequantize + aggregate (upload codecs, DESIGN.md §12) --------------
+# The device fast path for the plain-FedAvg reduce over int8-quantized
+# uploads. Like the robust kernel, the CPU default is the pure-jnp
+# reference (`dequant_agg_jnp` — a single fused XLA reduce, also the
+# path the generic round driver traces) and tests opt into the Pallas
+# kernel with interpret=True.
+
+def dequant_aggregate(values, scales, weights, *, interpret=None):
+    if interpret is None and on_cpu():
+        return _ca.dequant_agg_jnp(values, scales, weights)
+    return _ca.dequant_agg(values, scales, weights,
+                           interpret=bool(interpret))
 
 
 # -- robust aggregation (trimmed mean / median) -------------------------------

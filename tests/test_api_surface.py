@@ -16,6 +16,9 @@ API_SURFACE = sorted([
     "Strategy", "RoundPlan", "LocalSpec", "register_strategy",
     "get_strategy", "strategy_names", "STRATEGY_REGISTRY",
     "STRATEGY_REGISTRY_VERSION",
+    # upload-codec protocol + registry
+    "Codec", "register_codec", "get_codec", "codec_names",
+    "CODEC_REGISTRY", "CODEC_REGISTRY_VERSION",
     # driver
     "FederatedSimulation", "FLResult",
     # scenarios + result schema
@@ -49,8 +52,21 @@ def test_api_registry_contents():
 
 
 def test_api_schema_constants():
-    assert api.RESULT_SCHEMA_VERSION == 2.1
+    assert api.RESULT_SCHEMA_VERSION == 2.2
     assert api.STRATEGY_REGISTRY_VERSION == 1
+    assert api.CODEC_REGISTRY_VERSION == 1
+
+
+def test_api_codec_registry_contents():
+    """Every shipped codec is reachable by name through the public
+    registry and declares its defense validity."""
+    names = api.codec_names()
+    assert {"none", "topk", "qsgd"} <= set(names)
+    for name in names:
+        cls = api.get_codec(name)
+        assert issubclass(cls, api.Codec)
+        assert cls.name == name
+        assert cls.defenses  # every codec declares what it composes with
 
 
 def test_legacy_simulation_import_is_canonical():

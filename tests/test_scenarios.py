@@ -41,7 +41,7 @@ def test_every_spec_resolves_to_fl_config():
 
 
 def test_ci_smoke_grid_is_registered():
-    assert len(scenarios.CI_SMOKE_GRID) == 7
+    assert len(scenarios.CI_SMOKE_GRID) == 8
     for name in scenarios.CI_SMOKE_GRID:
         assert name in scenarios.REGISTRY
     # the grid carries one adversarial scenario (ISSUE 3 satellite)
@@ -51,8 +51,11 @@ def test_ci_smoke_grid_is_registered():
     grid_strategies = {scenarios.get(n).strategy
                        for n in scenarios.CI_SMOKE_GRID}
     assert {"fedprox", "fedadam"} <= grid_strategies
-    # ... and one fused-executor scenario (ISSUE 5 satellite)
+    # ... one fused-executor scenario (ISSUE 5 satellite)
     assert any(scenarios.get(n).engine == "fused"
+               for n in scenarios.CI_SMOKE_GRID)
+    # ... and one upload-codec scenario (ISSUE 7 satellite)
+    assert any(scenarios.get(n).codec != "none"
                for n in scenarios.CI_SMOKE_GRID)
 
 
@@ -122,15 +125,16 @@ def test_run_scenario_result_schema():
 
 def test_result_schema_backward_compat_read():
     """Schema bump contract (DESIGN.md §6): v1 documents (no attack
-    block) and v2 documents (no strategy block) normalize through
-    `load_result` to the current version, so every consumer reads one
-    shape."""
+    block), v2 documents (no strategy block), and v2.1 documents (no
+    communication block) normalize through `load_result` to the current
+    version, so every consumer reads one shape."""
     v1 = {"schema_version": 1, "scenario": "legacy",
           "metrics": {"test_accuracy": 0.9}, "async": None}
     doc = scenarios.load_result(v1)
-    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.1
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.2
     assert doc["attack"] is None
     assert doc["strategy"] == {"plugin": None, "registry_version": None}
+    assert doc["communication"] is None
     assert doc["metrics"]["test_accuracy"] == 0.9
     v2 = {"schema_version": 2, "scenario": "legacy2",
           "spec": {"strategy": "afl"}, "attack": None}
@@ -139,6 +143,13 @@ def test_result_schema_backward_compat_read():
     assert doc["attack"] is None                  # v2 block preserved
     assert doc["strategy"]["plugin"] == "afl"
     assert doc["strategy"]["registry_version"] is None
+    assert doc["communication"] is None
+    v21 = {"schema_version": 2.1, "scenario": "legacy21", "attack": None,
+           "strategy": {"plugin": "hfl", "registry_version": 1}}
+    doc = scenarios.load_result(v21)
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
+    assert doc["strategy"]["plugin"] == "hfl"     # v2.1 block preserved
+    assert doc["communication"] is None
 
 
 def test_run_scenario_sync_has_null_async_block():
