@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test deps lint bench bench-engines scenarios bench-ci attack-demo \
-        strategy-demo fused-demo mesh-demo test-mesh comm-demo
+        strategy-demo fused-demo mesh-demo test-mesh comm-demo trace-demo
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -53,6 +53,16 @@ fused-demo:
 comm-demo:
 	$(PY) -m repro.core.scenarios --run comm-topk-afl-vec \
 	    comm-qsgd-hfl-fused comm-qsgd-signflip-median-vec
+
+# observability end-to-end (DESIGN.md §13): the 16-client fused
+# sign-flip/median scenario with the per-phase breakdown table and the
+# Chrome-trace artifact (open experiments/traces/obs_trace_fused_16c.json
+# in Perfetto / chrome://tracing)
+trace-demo:
+	mkdir -p experiments/traces
+	$(PY) examples/federated_image_classification.py \
+	    --scenario obs-trace-fused-16c \
+	    --trace-out experiments/traces/obs_trace_fused_16c.json
 
 # the mesh-sharded fused executor (DESIGN.md §11): the same fused run
 # single-device vs with the client axis sharded over 8 forced host

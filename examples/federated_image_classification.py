@@ -16,7 +16,12 @@ uploads on the wire and reports the byte-count cost model —
 DESIGN.md §12), and the scenario registry: `--list-scenarios` / `--scenario NAME` runs a
 named point of the strategy x partition x topology x heterogeneity x
 adversary x engine space (core/scenarios.py) and prints its stable
-result document.
+result document. Observability (DESIGN.md §13): telemetry is on by
+default and a per-phase time breakdown prints with the metrics;
+--trace-out PATH writes the run's Chrome-trace JSON (open in Perfetto /
+chrome://tracing), --xla-profile DIR captures a jax.profiler trace
+alongside, --no-telemetry runs the untraced driver (results are bitwise
+identical either way).
 
     PYTHONPATH=src python examples/federated_image_classification.py \
         --strategy afl --clients 16 --engine vectorized \
@@ -106,7 +111,19 @@ def main():
                          "flag-built config (core/scenarios.py)")
     ap.add_argument("--list-scenarios", action="store_true",
                     help="print the scenario registry and exit")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="write the run's Chrome-trace JSON (DESIGN.md "
+                         "§13; open in Perfetto / chrome://tracing)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the host tracer (results are bitwise "
+                         "identical either way)")
+    ap.add_argument("--xla-profile", metavar="DIR",
+                    help="capture a jax.profiler trace of the run into "
+                         "DIR (TensorBoard / Perfetto; device-level "
+                         "timelines beneath the host spans)")
     args = ap.parse_args()
+    if args.no_telemetry and args.trace_out:
+        ap.error("--trace-out needs telemetry (drop --no-telemetry)")
 
     if args.list_scenarios:
         from repro.core import scenarios
@@ -115,8 +132,14 @@ def main():
     if args.scenario:
         import json
         from repro.core import scenarios
-        res = scenarios.run_scenario(args.scenario)
+        from repro.obs import profiler_trace
+        with profiler_trace(args.xla_profile):
+            res = scenarios.run_scenario(args.scenario,
+                                         trace_out=args.trace_out)
+        _print_phase_table(res.get("telemetry"))
         print(json.dumps(res, indent=1))
+        if args.trace_out:
+            print(f"trace -> {args.trace_out}")
         return
 
     ds = DATASETS[args.dataset](n_train=args.n_train,
@@ -134,6 +157,7 @@ def main():
                       attack_scale=args.attack_scale, defense=args.defense,
                       clip_tau=args.clip_tau, codec=args.codec,
                       topk_frac=args.topk_frac, quant_bits=args.quant_bits,
+                      telemetry=not args.no_telemetry,
                       engine=args.engine)
     sim = api.FederatedSimulation(fl, ds)
     if args.non_iid:
@@ -141,7 +165,11 @@ def main():
         _, ytr = ds["train"]
         sim.set_partition(dirichlet_partition(ytr, args.clients, alpha=0.5))
 
-    r = sim.run()
+    from repro.obs import profiler_trace, write_chrome_trace
+    with profiler_trace(args.xla_profile):
+        r = sim.run()
+    if args.trace_out:
+        write_chrome_trace(sim.telemetry, args.trace_out)
     print(f"\n=== {args.strategy.upper()} on {ds['name']} "
           f"({'non-IID' if args.non_iid else 'IID'}) ===")
     if args.attack != "none" or args.defense != "none":
@@ -153,8 +181,10 @@ def main():
     print(f"testing acc:        {r.test_accuracy:.3f}")
     print(f"precision/recall:   {r.precision:.3f} / {r.recall:.3f}")
     print(f"F1 / balanced acc:  {r.f1:.3f} / {r.balanced_accuracy:.3f}")
-    print(f"build time:         {r.build_time_s:.2f}s")
+    print(f"build time:         {r.build_time_s:.2f}s "
+          f"(+ {r.warmup_time_s:.2f}s warmup)")
     print(f"classification:     {r.classification_time_s:.4f}s")
+    _print_phase_table(r.extra.get("telemetry"))
     comm = r.extra.get("communication")
     if comm:
         print(f"codec:              {comm['codec']} "
@@ -180,6 +210,34 @@ def main():
                     r.round_train_acc, r.round_train_loss, r.round_test_acc)):
                 w.writerow([i, ta, tl, te])
         print(f"curves -> {path}")
+    if args.trace_out:
+        print(f"trace -> {args.trace_out}")
+
+
+def _print_phase_table(tel):
+    """The per-phase time breakdown from the result document's
+    telemetry block (DESIGN.md §13): steady-state lifecycle phases
+    first, then the fused executor's per-phase device-time proxy when
+    the run produced one."""
+    if not tel or not tel.get("enabled"):
+        return
+    proxy = tel.get("fused_phase_proxy") or {}
+    # drop the proxy's container spans — only the lifecycle phases
+    # nested inside them belong in the breakdown
+    proxy = {k: v for k, v in proxy.items()
+             if k not in ("fused_phase_proxy", "round")}
+    for title, block in (("phase breakdown (host dispatch):",
+                          tel.get("phases")),
+                         ("fused per-phase proxy (device time, 1 round):",
+                          proxy)):
+        if not block:
+            continue
+        total = sum(e["total_s"] for e in block.values()) or 1.0
+        print(title)
+        for name, e in sorted(block.items(),
+                              key=lambda kv: -kv[1]["total_s"]):
+            print(f"   {name:18s} {e['total_s']:8.3f}s "
+                  f"x{e['count']:<4d} ({100 * e['total_s'] / total:5.1f}%)")
 
 
 if __name__ == "__main__":

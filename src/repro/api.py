@@ -20,6 +20,11 @@ not (tests/test_api_surface.py snapshots it):
                    RESULT_SCHEMA_VERSION, CI_SMOKE_GRID, output_path
   Aggregation ops  ops (the kernel-backed host/stacked/mesh operator
                    module, `repro.core.aggregation`)
+  Observability    Telemetry (the host-side tracer every simulation
+                   carries as `sim.telemetry`), write_chrome_trace,
+                   validate_chrome_trace (DESIGN.md §13: lifecycle
+                   spans, in-scan fused counters, Chrome-trace export,
+                   the result-JSON "telemetry" block)
 
 Minimal plugin example (no core edits — see
 tests/test_plugin_strategy.py for the full version):
@@ -63,6 +68,8 @@ from repro.core.strategies import (STRATEGY_REGISTRY,
                                    STRATEGY_REGISTRY_VERSION, LocalSpec,
                                    RoundPlan, Strategy, get_strategy,
                                    register_strategy, strategy_names)
+from repro.obs import (Telemetry, validate_chrome_trace,
+                       write_chrome_trace)
 
 __all__ = sorted([
     "ATTACKS", "DEFENSES", "ENGINES", "STRATEGIES", "FLConfig",
@@ -75,5 +82,6 @@ __all__ = sorted([
     "ScenarioSpec", "register_scenario", "get_scenario", "scenario_names",
     "run_scenario", "load_result", "RESULT_SCHEMA_VERSION",
     "CI_SMOKE_GRID", "output_path",
+    "Telemetry", "write_chrome_trace", "validate_chrome_trace",
     "ops",
 ])

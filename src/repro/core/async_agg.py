@@ -227,6 +227,15 @@ class AsyncStrategy(strat_mod.Strategy):
         state["base_version"][plan.participants] = state["server_step"]
         state["staleness"].extend(plan.meta["taus"])
         state["makespan"] = plan.meta["time"]
+        # tick-batch counters/series (muted during the driver-suppressed
+        # warmup dry-runs — DESIGN.md §13)
+        tel = sim.telemetry
+        taus = plan.meta["taus"]
+        tel.counter("async.merges", len(plan.participants))
+        tel.counter("async.batches", 1)
+        tel.append_series("batch_size", len(plan.participants))
+        tel.append_series("mean_staleness",
+                          float(np.mean(taus)) if taus else 0.0)
         return state
 
     def round_model(self, state):

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import cnn as cnn_mod
+from repro.obs import telemetry
 from repro.optim import optimizers
 
 Params = Any
@@ -452,6 +453,7 @@ class VectorizedClientEngine:
         exclusively (see `train_clients_donated`) so the trained
         parameters reuse those buffers instead of doubling the
         federation's peak memory."""
+        telemetry.count("engine.train_dispatch")
         return train_clients_donated(
             stacked_params, data,
             stacked_loss_fn=stacked_loss_fn or self.stacked_loss_fn,
@@ -470,6 +472,7 @@ class VectorizedClientEngine:
                   attack_scale=1.0, attack_flags=None, attack_keys=None,
                   defense="none", clip_tau=10.0, codec=None,
                   codec_keys=None):
+        telemetry.count("engine.cfl_round_dispatch")
         idx = jnp.asarray(np.asarray(order))
         return cfl_round_scan(model, data, self.eval_x[idx], self.eval_y[idx],
                               alpha, loss_fn=self.loss_fn,

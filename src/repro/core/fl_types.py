@@ -110,6 +110,12 @@ class FLConfig:
     codec: str = "none"
     topk_frac: float = 0.1         # topk: fraction of coordinates kept
     quant_bits: int = 8            # qsgd: 8 (int8 + scale) | 16 (bf16)
+    # telemetry (DESIGN.md §13). On by default: the host tracer records
+    # lifecycle spans/counters and the fused executor adds in-scan
+    # per-round counters — results are bitwise identical either way and
+    # the rounds/s overhead is gated at <=5% (benchmarks/ci_bench.py
+    # "obs" section). False runs the exact untraced driver.
+    telemetry: bool = True
     # simulation engine
     engine: str = "loop"           # loop       — per-client Python loop
                                    #              (paper-faithful timing: one

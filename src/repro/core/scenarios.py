@@ -36,12 +36,16 @@ from repro.core.fl_types import ATTACKS, DEFENSES
 from repro.core.strategies import (STRATEGY_REGISTRY_VERSION, get_strategy,
                                    strategy_names)
 
-# v2.2: adds the "communication" block (per-round uplink/downlink
-# bytes, compression ratio, codec name + registry version; null for
-# dense runs). v2.1 added the "strategy" block (plugin name + registry
+# v2.3: adds the "telemetry" block (per-phase span totals, run-level
+# spans, counters/series, dispatch deltas, peak RSS — DESIGN.md §13;
+# {"enabled": false} when telemetry is off) and the warmup/steady
+# timing split (timing.warmup_time_s / timing.steady_time_s). v2.2
+# added the "communication" block (per-round uplink/downlink bytes,
+# compression ratio, codec name + registry version; null for dense
+# runs); v2.1 added the "strategy" block (plugin name + registry
 # version); v2 added the "attack" block. Older documents are still
 # readable through `load_result`.
-RESULT_SCHEMA_VERSION = 2.2
+RESULT_SCHEMA_VERSION = 2.3
 
 # One output-dir convention for every result/curve writer: the example
 # CLI's curves, `--json` grid dumps, and experiment artifacts all land
@@ -127,6 +131,9 @@ class ScenarioSpec:
     codec: str = "none"              # core/codecs.py registry
     topk_frac: float = 0.1           # topk: fraction of coords shipped
     quant_bits: int = 8              # qsgd: 8 (int8+scale) | 16 (bf16)
+    # observability (DESIGN.md §13): on-by-default tracer; results are
+    # bitwise identical either way
+    telemetry: bool = True
     seed: int = 0
 
     def __post_init__(self):
@@ -199,7 +206,7 @@ class ScenarioSpec:
             attack_scale=self.attack_scale, defense=self.defense,
             defense_f=self.defense_f, clip_tau=self.clip_tau,
             codec=self.codec, topk_frac=self.topk_frac,
-            quant_bits=self.quant_bits,
+            quant_bits=self.quant_bits, telemetry=self.telemetry,
             engine=self.engine)
 
     def asdict(self) -> Dict:
@@ -422,6 +429,17 @@ register(ScenarioSpec(
     "macro-F1)",
     codec="qsgd", **_COMM32))
 
+# observability (DESIGN.md §13): the trace-demo / CI trace-artifact
+# scenario — fused executor (exercising the in-scan counters AND the
+# per-phase proxy), sign-flip attackers under median defense so the
+# corrupt/defense phases show up in the per-phase breakdown
+register(ScenarioSpec(
+    "obs-trace-fused-16c", "16-client fused sign-flip/median run for "
+    "the telemetry trace demo (make trace-demo / the CI trace artifact)",
+    strategy="afl", topology="star", engine="fused", participation=1.0,
+    num_clients=16, rounds=4, n_train=1024, attack="sign_flip",
+    attack_scale=4.0, defense="median"))
+
 # the CI bench-smoke grid: one sync-centralized, one sync-decentralized,
 # one async-heterogeneous, one adversarial scenario, one scenario per
 # PR 4 strategy plugin family, one fused-executor scenario, plus one
@@ -443,14 +461,19 @@ def resolve(spec: ScenarioSpec):
     return FederatedSimulation.from_scenario(spec), spec
 
 
-def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
+def run_scenario(scenario: Union[str, ScenarioSpec],
+                 trace_out: Optional[str] = None) -> Dict:
     """Run one scenario and return the stable result document
     (DESIGN.md §6). `rounds_per_s` is the round-throughput number the CI
     regression gate tracks: sync rounds (or async merge-batches) per
-    second of build time."""
+    second of build time. `trace_out` additionally writes the run's
+    Chrome-trace JSON there (open in Perfetto / chrome://tracing)."""
     spec = get(scenario) if isinstance(scenario, str) else scenario
     sim, _ = resolve(spec)
     r = sim.run()
+    if trace_out:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(sim.telemetry, trace_out)
     async_block = None
     units = spec.rounds
     if getattr(sim.strategy, "timeline_result", False):
@@ -496,6 +519,8 @@ def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
         },
         "timing": {
             "build_time_s": r.build_time_s,
+            "warmup_time_s": r.warmup_time_s,
+            "steady_time_s": r.steady_time_s,
             "classification_time_s": r.classification_time_s,
             "rounds_per_s": (units / r.build_time_s
                              if r.build_time_s > 0 else 0.0),
@@ -503,6 +528,7 @@ def run_scenario(scenario: Union[str, ScenarioSpec]) -> Dict:
         "async": async_block,
         "attack": attack_block,
         "communication": comm_block,
+        "telemetry": r.extra.get("telemetry"),
     }
 
 
@@ -514,24 +540,28 @@ def load_result(doc: Dict) -> Dict:
     (pre-plugin) carry no "strategy" block — the plugin name falls back
     to the spec's strategy field with a null registry version; v2.1
     documents (pre-codec) carry no "communication" block — they read as
-    dense (uncompressed) runs."""
+    dense (uncompressed) runs; v2.2 documents (pre-observability) carry
+    no "telemetry" block — they read as untraced runs."""
     v = doc.get("schema_version")
     if v == RESULT_SCHEMA_VERSION:
         return doc
+    if v == 2.2:
+        return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
+                "telemetry": None}
     if v == 2.1:
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
-                "communication": None}
+                "communication": None, "telemetry": None}
     if v == 2:
         plugin = (doc.get("spec") or {}).get("strategy")
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
                 "strategy": {"plugin": plugin, "registry_version": None},
-                "communication": None}
+                "communication": None, "telemetry": None}
     if v == 1:
         plugin = (doc.get("spec") or {}).get("strategy")
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
                 "attack": None,
                 "strategy": {"plugin": plugin, "registry_version": None},
-                "communication": None}
+                "communication": None, "telemetry": None}
     raise ValueError(f"unknown result schema_version {v!r}")
 
 
@@ -547,7 +577,13 @@ def main(argv: Optional[List[str]] = None):
     ap.add_argument("--json", metavar="PATH",
                     help="also write results as a JSON list (bare "
                          f"filenames land under {OUTPUT_DIR}/results/)")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="write the run's Chrome-trace JSON (single "
+                         "--run scenario only; open in Perfetto)")
     args = ap.parse_args(argv)
+    if args.trace_out and not (args.run and len(args.run) == 1
+                               and not args.grid):
+        ap.error("--trace-out needs exactly one --run scenario")
 
     if args.list or not (args.run or args.grid):
         for n in names():
@@ -562,12 +598,14 @@ def main(argv: Optional[List[str]] = None):
     todo = list(args.run or []) + (list(CI_SMOKE_GRID) if args.grid else [])
     results = []
     for name in todo:
-        res = run_scenario(name)
+        res = run_scenario(name, trace_out=args.trace_out)
         results.append(res)
         m, t = res["metrics"], res["timing"]
         print(f"{name}: test_acc={m['test_accuracy']:.3f} "
               f"f1={m['f1']:.3f} build={t['build_time_s']:.2f}s "
               f"rounds_per_s={t['rounds_per_s']:.3f}")
+    if args.trace_out:
+        print(f"trace -> {args.trace_out}")
     if args.json:
         path = (args.json if os.path.dirname(args.json)
                 else output_path("results", args.json))

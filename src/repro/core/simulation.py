@@ -63,6 +63,9 @@ from repro.core import aggregation
 from repro.kernels import ops
 from repro.core.fl_types import FLConfig
 from repro.core.metrics import Timer, classification_metrics
+from repro.obs import collectors as obs_collectors
+from repro.obs import export as obs_export
+from repro.obs.telemetry import Telemetry
 from repro.data.partition import iid_partition
 from repro.models import cnn as cnn_mod
 from repro.optim import optimizers
@@ -84,7 +87,15 @@ class FLResult:
     round_train_acc: List[float]
     round_train_loss: List[float]
     round_test_acc: List[float]
-    # strategy-specific extras (async: merges/batches/staleness/makespan)
+    # DESIGN.md §3 timing split: `build_time_s` is the steady-state
+    # measured window (compilation excluded, identical meaning under
+    # every engine); `warmup_time_s` is the warmup/compile window that
+    # precedes it; `steady_time_s` aliases build_time_s under the
+    # explicit name
+    warmup_time_s: float = 0.0
+    steady_time_s: float = 0.0
+    # strategy-specific extras (async: merges/batches/staleness/makespan;
+    # always: the schema-v2.3 "telemetry" block)
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, float]:
@@ -276,6 +287,9 @@ class FederatedSimulation:
         self.fl = fl
         self.dataset = dataset
         self.rng = np.random.default_rng(fl.seed)
+        # per-run tracer (DESIGN.md §13); dispatch counters are
+        # snapshotted at construction so the run's delta is its own
+        self.telemetry = Telemetry(enabled=fl.telemetry)
         key = jax.random.PRNGKey(fl.seed)
         self.init_params = (model_init or cnn_mod.init_cnn)(key)
         # resolve the strategy plugin: an instance is used as-is (plugin
@@ -434,6 +448,16 @@ class FederatedSimulation:
                     if self.fl.engine in ("vectorized", "fused") else None)
 
     # -- driver primitives (the plugin-facing surface) ----------------------
+    def tel_sync(self, x):
+        """Telemetry phase boundary: under the fused per-phase proxy
+        (`Telemetry.sync_active`) block until `x`'s device work finishes,
+        so the enclosing span measures device time. A no-op in steady
+        state — spans there deliberately measure dispatch windows only
+        (the ≤5% overhead budget, DESIGN.md §13). Returns `x`."""
+        if self.telemetry.sync_active:
+            jax.block_until_ready(x)
+        return x
+
     def defense_kwargs(self, event_size=None) -> Dict[str, Any]:
         """kwargs for the defended aggregation operators, with the
         Byzantine allowance resolved for this event's client count."""
@@ -471,29 +495,33 @@ class FederatedSimulation:
         the uploads carry a leading participant axis under BOTH engines,
         so strategies aggregate through one stacked-operator path."""
         fl = self.fl
-        if self.vec is not None:
-            eng = self.vec
-            data = eng.batched_clients(rng, plan.participants,
-                                       fl.local_epochs)
-            # the train dispatch donates its base stack (buffer reuse for
-            # the trained params), so it receives a private fresh build;
-            # corruption / FedProx share the cached instance instead
-            bases = self._build_bases_stacked(plan)
-            extra = (self._bases_stacked(plan) if spec.extra == "bases"
-                     else None)
-            params, losses, _ = eng.train(
-                bases, data, stacked_loss_fn=spec.stacked_loss_fn,
-                extra=extra)
-            accs = eng.local_accs(params, plan.participants)
-            return (params, np.asarray(losses[:, -eng.nb:]).mean(axis=1),
-                    accs)
-        locals_, losses, accs = [], [], []
-        for c, base in zip(plan.participants, plan.bases):
-            p, loss, acc = self._local_train(base, c, spec=spec)
-            locals_.append(p)
-            losses.append(loss)
-            accs.append(acc)
-        return engine_mod.stack_forest(locals_), losses, accs
+        with self.telemetry.span("local_train", k=len(plan.participants)):
+            if self.vec is not None:
+                eng = self.vec
+                data = eng.batched_clients(rng, plan.participants,
+                                           fl.local_epochs)
+                # the train dispatch donates its base stack (buffer reuse
+                # for the trained params), so it receives a private fresh
+                # build; corruption / FedProx share the cached instance
+                bases = self._build_bases_stacked(plan)
+                extra = (self._bases_stacked(plan) if spec.extra == "bases"
+                         else None)
+                params, losses, _ = eng.train(
+                    bases, data, stacked_loss_fn=spec.stacked_loss_fn,
+                    extra=extra)
+                accs = eng.local_accs(params, plan.participants)
+                out = (params,
+                       np.asarray(losses[:, -eng.nb:]).mean(axis=1), accs)
+            else:
+                locals_, losses, accs = [], [], []
+                for c, base in zip(plan.participants, plan.bases):
+                    p, loss, acc = self._local_train(base, c, spec=spec)
+                    locals_.append(p)
+                    losses.append(loss)
+                    accs.append(acc)
+                out = (engine_mod.stack_forest(locals_), losses, accs)
+            self.tel_sync(out[0])
+        return out
 
     def corrupt(self, uploads, plan):
         """Corrupt attacker rows of the trained upload stack against the
@@ -504,12 +532,16 @@ class FederatedSimulation:
         flags = self.attack_mask[np.asarray(plan.participants, int)]
         if fl.attack in ("none", "label_flip") or not flags.any():
             return uploads
-        bases = self._bases_stacked(plan)
-        keys = attacks.client_keys(
-            attacks.event_key(fl.seed, plan.event), plan.participants)
-        return attacks.corrupt_stacked(uploads, bases, flags, keys,
-                                       kind=fl.attack,
-                                       scale=fl.attack_scale)
+        with self.telemetry.span("corrupt",
+                                 attackers=int(flags.sum())):
+            bases = self._bases_stacked(plan)
+            keys = attacks.client_keys(
+                attacks.event_key(fl.seed, plan.event), plan.participants)
+            out = attacks.corrupt_stacked(uploads, bases, flags, keys,
+                                          kind=fl.attack,
+                                          scale=fl.attack_scale)
+            self.tel_sync(out)
+        return out
 
     def transport(self, uploads, plan):
         """Ship one event's upload stack through the active codec:
@@ -523,24 +555,30 @@ class FederatedSimulation:
         if codec is None:
             return uploads
         fl = self.fl
-        mat = ops.stacked_ravel(uploads)
-        keys = codecs_mod.upload_keys(fl.seed, plan.event,
-                                      np.asarray(plan.participants,
-                                                 np.int32))
-        base = (ops.stacked_ravel(self._bases_stacked(plan))
-                if codec.needs_bases else None)
-        if codec.stateful:
-            pids = jnp.asarray(np.asarray(plan.participants, np.int32))
-            rows = jax.tree.map(lambda a: a[pids], self.codec_state)
-            dec, new_rows = self._codec_apply(mat, keys, base=base,
-                                              rows=rows)
-            self.codec_state = jax.tree.map(
-                lambda a, r: a.at[pids].set(r), self.codec_state,
-                new_rows)
-        else:
-            dec, _ = self._codec_apply(mat, keys, base=base, rows=None)
-        self._comm_log.append(len(plan.participants))
-        return ops.stacked_unravel(uploads, dec)
+        with self.telemetry.span("encode_decode", codec=codec.name):
+            mat = ops.stacked_ravel(uploads)
+            keys = codecs_mod.upload_keys(fl.seed, plan.event,
+                                          np.asarray(plan.participants,
+                                                     np.int32))
+            base = (ops.stacked_ravel(self._bases_stacked(plan))
+                    if codec.needs_bases else None)
+            if codec.stateful:
+                pids = jnp.asarray(np.asarray(plan.participants, np.int32))
+                rows = jax.tree.map(lambda a: a[pids], self.codec_state)
+                dec, new_rows = self._codec_apply(mat, keys, base=base,
+                                                  rows=rows)
+                self.codec_state = jax.tree.map(
+                    lambda a, r: a.at[pids].set(r), self.codec_state,
+                    new_rows)
+            else:
+                dec, _ = self._codec_apply(mat, keys, base=base, rows=None)
+            self._comm_log.append(len(plan.participants))
+            self.telemetry.counter(
+                "codec.uplink_bytes",
+                len(plan.participants) * codec.bytes_on_wire(self.model_dim))
+            out = ops.stacked_unravel(uploads, dec)
+            self.tel_sync(out)
+        return out
 
     def _reset_codec(self):
         """Re-zero codec state + wire log (warmups dry-run the transport
@@ -557,6 +595,13 @@ class FederatedSimulation:
         into the carried model. Loop engine: per-visit dispatch + host
         merges; vectorized: one `lax.scan` with in-scan corruption (the
         visit base is the carried state). Returns (model, losses, accs)."""
+        with self.telemetry.span("sequential_round", k=len(order)):
+            out = self._sequential_round(model, order, event, alpha,
+                                         spec, rng)
+            self.tel_sync(out[0])
+        return out
+
+    def _sequential_round(self, model, order, event, alpha, spec, rng):
         fl = self.fl
         codec = self.codec
         ckeys = (codecs_mod.upload_keys(fl.seed, event,
@@ -564,6 +609,9 @@ class FederatedSimulation:
                  if codec is not None else None)
         if codec is not None:
             self._comm_log.append(len(order))
+            self.telemetry.counter(
+                "codec.uplink_bytes",
+                len(order) * codec.bytes_on_wire(self.model_dim))
         if self.vec is not None:
             eng = self.vec
             data = eng.batched_clients(rng, order, fl.local_epochs)
@@ -672,9 +720,15 @@ class FederatedSimulation:
         if self.fl.engine == "fused":
             return self.run_fused()
         fl, strat = self.fl, self.strategy
+        tel = self.telemetry
         curves = {"train_acc": [], "train_loss": [], "test_acc": []}
         state = strat.init_state(self)
-        strat.warmup(self)
+        # warmup dry-runs the lifecycle to compile it — suppressed so
+        # compile time never pollutes the phase totals (DESIGN.md §13);
+        # the warmup window is timed separately (§3 build/steady split)
+        warmup_timer = Timer()
+        with tel.span("warmup", cat="run"), warmup_timer, tel.suppress():
+            strat.warmup(self)
         self._reset_codec()
         n_events = strat.num_events(self)
         all_accs: List[float] = []
@@ -692,7 +746,8 @@ class FederatedSimulation:
         if strat.mean_train_acc_over_events:
             train_acc = float(np.mean(all_accs)) if all_accs else 0.0
         return self._classify_and_result(state, curves, train_acc,
-                                         build_timer)
+                                         build_timer,
+                                         warmup_timer=warmup_timer)
 
     # -- the fused executor (DESIGN.md §10) ---------------------------------
     def run_fused(self) -> FLResult:
@@ -721,6 +776,7 @@ class FederatedSimulation:
                 f"strategy {strat.name!r} does not support the fused "
                 f"executor (Strategy.supports_fused; async-style "
                 f"data-dependent schedules cannot be hoisted into a scan)")
+        tel = self.telemetry
         R = strat.num_events(self)
         state0 = strat.init_state(self)
 
@@ -729,42 +785,46 @@ class FederatedSimulation:
         # are drawn against the INITIAL state — part of the
         # supports_fused contract (see strategies.py): a fused
         # strategy's participant choice depends on (event, rng) only.
-        pids_l, idx_l, keys_l = [], [], []
-        for ev in range(R):
-            plan = strat.select_participants(self, state0, ev, self.rng)
-            parts = np.asarray(plan.participants, np.int32)
-            pids_l.append(parts)
-            idx_l.append(self.vec.batch_indices(self.rng,
-                                                plan.participants,
-                                                fl.local_epochs))
-            keys_l.append(np.asarray(attacks.client_keys(
-                attacks.event_key(fl.seed, ev), parts)))
-        k = len(pids_l[0]) if R else strat.event_size()
-        T = fl.local_epochs * self.vec.nb
-        pids = (np.stack(pids_l) if R
-                else np.zeros((0, k), np.int32))
-        idx = (np.stack(idx_l) if R
-               else np.zeros((0, k, T, fl.local_batch_size), np.int32))
-        keys = (np.stack(keys_l) if R else np.zeros((0, k, 2), np.uint32))
-        xs = {"pids": jnp.asarray(pids), "idx": jnp.asarray(idx),
-              "flags": jnp.asarray(self.attack_mask[pids]),
-              "keys": jnp.asarray(keys),
-              "event": jnp.arange(R, dtype=jnp.int32)}
-        for key, val in strat.scan_extra_xs(self, R).items():
-            xs[key] = jnp.asarray(val)
-        codec_state = None
-        if self.codec is not None:
-            # codec rng hoisted like the attack keys: one (k, 2) key
-            # block per round, derived from (seed, event, client id)
-            ckeys = ([np.asarray(codecs_mod.upload_keys(fl.seed, ev,
-                                                        pids_l[ev]))
-                      for ev in range(R)])
-            xs["ckeys"] = jnp.asarray(
-                np.stack(ckeys) if R else np.zeros((0, k, 2), np.uint32))
-            if self.codec.stateful:
-                codec_state = self.codec.init_state(fl.num_clients,
-                                                    self.model_dim)
-        consts = _fused_consts(self)
+        with tel.span("precompute", cat="run", rounds=R):
+            pids_l, idx_l, keys_l = [], [], []
+            for ev in range(R):
+                plan = strat.select_participants(self, state0, ev,
+                                                 self.rng)
+                parts = np.asarray(plan.participants, np.int32)
+                pids_l.append(parts)
+                idx_l.append(self.vec.batch_indices(self.rng,
+                                                    plan.participants,
+                                                    fl.local_epochs))
+                keys_l.append(np.asarray(attacks.client_keys(
+                    attacks.event_key(fl.seed, ev), parts)))
+            k = len(pids_l[0]) if R else strat.event_size()
+            T = fl.local_epochs * self.vec.nb
+            pids = (np.stack(pids_l) if R
+                    else np.zeros((0, k), np.int32))
+            idx = (np.stack(idx_l) if R
+                   else np.zeros((0, k, T, fl.local_batch_size), np.int32))
+            keys = (np.stack(keys_l) if R
+                    else np.zeros((0, k, 2), np.uint32))
+            xs = {"pids": jnp.asarray(pids), "idx": jnp.asarray(idx),
+                  "flags": jnp.asarray(self.attack_mask[pids]),
+                  "keys": jnp.asarray(keys),
+                  "event": jnp.arange(R, dtype=jnp.int32)}
+            for key, val in strat.scan_extra_xs(self, R).items():
+                xs[key] = jnp.asarray(val)
+            codec_state = None
+            if self.codec is not None:
+                # codec rng hoisted like the attack keys: one (k, 2) key
+                # block per round, derived from (seed, event, client id)
+                ckeys = ([np.asarray(codecs_mod.upload_keys(fl.seed, ev,
+                                                            pids_l[ev]))
+                          for ev in range(R)])
+                xs["ckeys"] = jnp.asarray(
+                    np.stack(ckeys) if R
+                    else np.zeros((0, k, 2), np.uint32))
+                if self.codec.stateful:
+                    codec_state = self.codec.init_state(fl.num_clients,
+                                                        self.model_dim)
+            consts = _fused_consts(self)
         # private copy of the initial carry: the scan donates it, and
         # state0's leaves may alias long-lived arrays (init_params)
         carry0 = jax.tree.map(jnp.array, strat.scan_carry(self, state0))
@@ -777,18 +837,32 @@ class FederatedSimulation:
             carry0 = (carry0, codec_state)
 
         mesh_axis = "data" if fl.mesh_devices > 1 else None
+        # in-scan per-round counters (DESIGN.md §13): ride the scan's
+        # stacked outputs next to the metric curves, one transfer at run
+        # end. Off under the mesh — `_mesh_wrap`'s out_specs describe
+        # the bare metric triple (per-shard counter semantics are
+        # future work).
+        scan_tel = tel.enabled and mesh_axis is None
 
         def _run(carry, xs, consts):
             fx = FusedContext(self, consts, mesh_axis=mesh_axis)
-            if codec_state is not None:
-                def body(c, x):
+
+            def body(c, x):
+                if codec_state is not None:
                     sc, cc = c
                     fx._codec_carry = cc
-                    sc, out = strat.scan_round(fx, sc, x)
-                    return (sc, fx._codec_carry), out
-                return jax.lax.scan(body, carry, xs)
-            return jax.lax.scan(
-                lambda c, x: strat.scan_round(fx, c, x), carry, xs)
+                    sc_new, out = strat.scan_round(fx, sc, x)
+                    c_new = (sc_new, fx._codec_carry)
+                else:
+                    sc = c
+                    sc_new, out = strat.scan_round(fx, sc, x)
+                    c_new = sc_new
+                if scan_tel:
+                    out = (out, obs_collectors.round_counters(
+                        strat, fx, sc, sc_new, x))
+                return c_new, out
+
+            return jax.lax.scan(body, carry, xs)
 
         run_fn = _run
         if mesh_axis is not None:
@@ -797,14 +871,27 @@ class FederatedSimulation:
 
         # warmup = compile the scan once (AOT, so the donated carry is
         # not consumed) + the classification-phase predict shapes
-        compiled = jax.jit(run_fn, donate_argnums=(0,)).lower(
-            carry0, xs, consts).compile()
-        self._warmup_predicts()
+        warmup_timer = Timer()
+        with tel.span("warmup", cat="run"), warmup_timer, tel.suppress():
+            compiled = jax.jit(run_fn, donate_argnums=(0,)).lower(
+                carry0, xs, consts).compile()
+            self._warmup_predicts()
+        # per-phase device-time proxy (obs/collectors.py): one
+        # instrumented per-round event, every phase blocking on its
+        # device work. Skipped when chunked (the per-round path would
+        # materialize the UNCHUNKED participant stack) or meshed.
+        if tel.enabled and not fl.fused_chunk and mesh_axis is None:
+            obs_collectors.fused_phase_proxy(self)
+            self._reset_codec()
 
         build_timer = Timer()
-        with build_timer:
-            carry, (acc_r, loss_r, tacc_r) = compiled(carry0, xs, consts)
-            jax.block_until_ready((carry, acc_r, loss_r, tacc_r))
+        with build_timer, tel.span("fused_scan", cat="run", rounds=R):
+            carry, outs = compiled(carry0, xs, consts)
+            jax.block_until_ready((carry, outs))
+        if scan_tel:
+            (acc_r, loss_r, tacc_r), scan_counters = outs
+        else:
+            (acc_r, loss_r, tacc_r), scan_counters = outs, {}
         if mesh_axis is not None:
             # the classification phase mixes this state with
             # single-device test shards — re-home the final carry so
@@ -817,6 +904,17 @@ class FederatedSimulation:
         if self.codec is not None:
             # analytic wire accounting, from the hoisted schedules
             self._comm_log = [len(p) for p in pids_l]
+        # one bulk transfer of the in-scan counters + the host-known
+        # per-round series (participants, codec wire bytes)
+        for cname, vals in scan_counters.items():
+            tel.record_series("scan." + cname, np.asarray(vals))
+        tel.record_series("participants", [len(p) for p in pids_l])
+        if self.codec is not None:
+            bw = self.codec.bytes_on_wire(self.model_dim)
+            tel.record_series("codec.uplink_bytes",
+                              [len(p) * bw for p in pids_l])
+            tel.counter("codec.uplink_bytes",
+                        sum(len(p) * bw for p in pids_l))
         state = strat.scan_uncarry(self, carry)
         acc_r, loss_r, tacc_r = (np.asarray(acc_r), np.asarray(loss_r),
                                  np.asarray(tacc_r))
@@ -836,7 +934,8 @@ class FederatedSimulation:
         _predict(strat.served_fn(self, state)(),
                  self._test_head_dev(shard))
         return self._classify_and_result(state, curves, train_acc,
-                                         build_timer)
+                                         build_timer,
+                                         warmup_timer=warmup_timer)
 
     def _mesh_wrap(self, run, carry0, xs, consts, pids):
         """DESIGN.md §11: the fused scan under `shard_map`, the stacked
@@ -935,7 +1034,7 @@ class FederatedSimulation:
         return dev
 
     def _classify_and_result(self, state, curves, train_acc,
-                             build_timer) -> FLResult:
+                             build_timer, warmup_timer=None) -> FLResult:
         """The paper's classification-time protocol (§1.2.7) + result
         assembly, shared by the per-round and fused drivers: centralized
         strategies serve the full test set at the server (after
@@ -949,19 +1048,20 @@ class FederatedSimulation:
         shard = (len(x_test) if strat.centralized
                  else -(-len(x_test) // fl.num_clients))
         xs = self._test_head_dev(shard)
-        best = None
-        for _ in range(3):          # min-of-3: immune to scheduler noise
-            t = Timer()
-            with t:
-                served = served_fn()
-                pred_head = np.asarray(_predict(served, xs))
-            best = t.elapsed if best is None else min(best, t.elapsed)
-        class_timer = Timer()
-        class_timer.elapsed = best
-        pred_tail = (self._eval(served)[shard:] if shard < len(x_test)
-                     else np.empty((0,), pred_head.dtype))
-        y_pred = np.concatenate([pred_head, pred_tail])
-        m = classification_metrics(y_true, y_pred, 10)
+        with self.telemetry.span("classify", cat="run"):
+            best = None
+            for _ in range(3):      # min-of-3: immune to scheduler noise
+                t = Timer()
+                with t:
+                    served = served_fn()
+                    pred_head = np.asarray(_predict(served, xs))
+                best = t.elapsed if best is None else min(best, t.elapsed)
+            class_timer = Timer()
+            class_timer.elapsed = best
+            pred_tail = (self._eval(served)[shard:] if shard < len(x_test)
+                         else np.empty((0,), pred_head.dtype))
+            y_pred = np.concatenate([pred_head, pred_tail])
+            m = classification_metrics(y_true, y_pred, 10)
 
         extra = dict(strat.extra_result(self, state))
         if self.codec is not None:
@@ -973,6 +1073,9 @@ class FederatedSimulation:
             # consumers see the documented loop/vectorized divergence
             extra["truncated_samples_per_epoch"] = dict(
                 self.vec.dropped_samples)
+        # the schema-v2.3 telemetry block (always present; when disabled
+        # it is the single-key {"enabled": False} stub)
+        extra["telemetry"] = obs_export.result_block(self.telemetry)
 
         return FLResult(
             strategy=strat.name, dataset=self.dataset["name"],
@@ -984,6 +1087,9 @@ class FederatedSimulation:
             round_train_acc=curves["train_acc"],
             round_train_loss=curves["train_loss"],
             round_test_acc=curves["test_acc"],
+            warmup_time_s=(warmup_timer.elapsed
+                           if warmup_timer is not None else 0.0),
+            steady_time_s=build_timer.elapsed,
             extra=extra,
         )
 
@@ -1013,7 +1119,8 @@ class FederatedSimulation:
     def _track(self, curves, accs, losses, model_for_eval):
         curves["train_acc"].append(float(np.mean(np.asarray(accs))))
         curves["train_loss"].append(float(np.mean(np.asarray(losses))))
-        preds = self._eval(model_for_eval)
+        with self.telemetry.span("eval"):
+            preds = self._eval(model_for_eval)
         curves["test_acc"].append(
             float(np.mean(preds == self.dataset["test"][1])))
 

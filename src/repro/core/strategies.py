@@ -214,14 +214,24 @@ class Strategy:
     def run_event(self, sim, state, event: int, rng=None):
         """plan -> local training (engine dispatch in the driver) ->
         attack corruption -> defended aggregation. Returns
-        (state, per-client accs, per-client losses)."""
+        (state, per-client accs, per-client losses). Every lifecycle
+        phase is wrapped in a telemetry span (DESIGN.md §13); async-style
+        strategies set `timeline_result` and their rounds chain into one
+        trace flow."""
         rng = sim.rng if rng is None else rng
-        plan = self.select_participants(sim, state, event, rng)
-        spec = self.local_spec(sim, state, plan)
-        uploads, losses, accs = sim.local_train(plan, spec, rng)
-        uploads = sim.corrupt(uploads, plan)
-        uploads = sim.transport(uploads, plan)
-        state = self.aggregate_event(sim, state, plan, uploads)
+        tel = sim.telemetry
+        flow = {"flow": "rounds"} if self.timeline_result else {}
+        with tel.span("round", cat="run", event=event, **flow):
+            with tel.span("select", event=event):
+                plan = self.select_participants(sim, state, event, rng)
+                spec = self.local_spec(sim, state, plan)
+            tel.append_series("participants", len(plan.participants))
+            uploads, losses, accs = sim.local_train(plan, spec, rng)
+            uploads = sim.corrupt(uploads, plan)
+            uploads = sim.transport(uploads, plan)
+            with tel.span("aggregate", event=event):
+                state = self.aggregate_event(sim, state, plan, uploads)
+                sim.tel_sync(state)
         return state, accs, losses
 
     def warmup(self, sim):
@@ -366,6 +376,23 @@ class Strategy:
         return carry, (fx.pmean(jnp.mean(accs)),
                        fx.pmean(jnp.mean(losses[:, -fx.nb:])),
                        fx.test_acc(self.round_model(carry)))
+
+    def scan_telemetry(self, fx, carry, new_carry, xs) -> Dict[str, Any]:
+        """Strategy-specific in-scan per-round counters (traceable;
+        DESIGN.md §13): {name: scalar} computed from the pre/post-round
+        scan carries, stacked by the fused driver next to the metric
+        outputs and transferred once at run end. The default reports the
+        L2 norm of the round's global-model step — a convergence-health
+        series every fused strategy gets for free. Must not change any
+        carried value: counters are read-only consumers, which is what
+        keeps fused results bitwise identical telemetry on/off."""
+        prev = self.round_model(carry)
+        new = self.round_model(new_carry)
+        d2 = sum(jnp.sum(jnp.square(b.astype(jnp.float32)
+                                    - a.astype(jnp.float32)))
+                 for a, b in zip(jax.tree.leaves(prev),
+                                 jax.tree.leaves(new)))
+        return {"model_delta_l2": jnp.sqrt(d2)}
 
 
 # ---------------------------------------------------------------------------
@@ -555,6 +582,20 @@ class HFLStrategy(Strategy):
         return {"groups": groups, "global": global_model,
                 "up": uploads, "start": start_groups}
 
+    def scan_telemetry(self, fx, carry, new_carry, xs):
+        # the hierarchy's dissemination lag, as a per-round series: L2
+        # spread of the group models around their mean (collapses to 0
+        # on global-dissemination rounds)
+        out = super().scan_telemetry(fx, carry, new_carry, xs)
+        groups = new_carry["groups"]
+        d2 = sum(jnp.sum(jnp.square(
+                     g.astype(jnp.float32)
+                     - jnp.mean(g.astype(jnp.float32), axis=0,
+                                keepdims=True)))
+                 for g in jax.tree.leaves(groups))
+        out["group_spread_l2"] = jnp.sqrt(d2)
+        return out
+
 
 @register_strategy
 class AFLStrategy(Strategy):
@@ -701,10 +742,17 @@ class CFLStrategy(Strategy):
 
     def run_event(self, sim, state, event, rng=None):
         rng = sim.rng if rng is None else rng
-        plan = self.select_participants(sim, state, event, rng)
-        model, losses, accs = sim.sequential_round(
-            state["model"], plan.participants, plan.event,
-            self.fl.merge_alpha, self.local_spec(sim, state, plan), rng)
+        tel = sim.telemetry
+        with tel.span("round", cat="run", event=event):
+            with tel.span("select", event=event):
+                plan = self.select_participants(sim, state, event, rng)
+            tel.append_series("participants", len(plan.participants))
+            # training + merge fuse in sequential_round, which records
+            # its own phase span
+            model, losses, accs = sim.sequential_round(
+                state["model"], plan.participants, plan.event,
+                self.fl.merge_alpha, self.local_spec(sim, state, plan),
+                rng)
         return {"model": model}, accs, losses
 
     def aggregate_event(self, sim, state, plan, uploads):

@@ -1,0 +1,64 @@
+"""Device-resident in-scan counters + the fused per-phase timing proxy
+(DESIGN.md §13).
+
+Host spans cannot see inside the fused executor's compiled R-round
+`lax.scan` (DESIGN.md §10), so fused-engine telemetry has two pieces:
+
+* `round_counters` — per-round scalar accumulators traced INTO the scan
+  body: they ride the scan's stacked outputs next to the metric curves
+  and transfer once at run end, preserving the one-transfer contract.
+  The driver-owned counter is the attacker count per round; strategies
+  add their own through `Strategy.scan_telemetry` (model-delta L2 by
+  default, HFL adds the group-spread L2).
+
+* `fused_phase_proxy` — per-phase DEVICE timings via block_until_ready
+  segmentation at warmup: one throwaway per-round event runs under
+  `Telemetry.category("proxy")`, where every lifecycle phase blocks on
+  its device work (`FederatedSimulation.tel_sync`), so the recorded
+  span durations approximate the in-scan per-phase cost. The event runs
+  twice — first suppressed (compiling the per-round programs the fused
+  run otherwise never compiles), then measured — with a throwaway rng,
+  so `sim.rng` and the measured scan are untouched. The driver skips
+  the proxy when `fused_chunk > 0` (the proxy would materialize the
+  UNCHUNKED participant stack and blow the memory envelope chunking
+  exists to bound) and under the mesh path (the per-round programs are
+  single-device).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_counters(strat, fx, carry_prev, carry_new, xs
+                   ) -> Dict[str, Any]:
+    """The per-round in-scan counter dict for one scan step (traced).
+    All values are cast to float32 scalars so the stacked outputs form
+    one homogeneous (R,)-per-counter block."""
+    out = {"attackers": jnp.sum(xs["flags"].astype(jnp.int32))}
+    try:
+        extra = strat.scan_telemetry(fx, carry_prev, carry_new, xs)
+    except NotImplementedError:
+        extra = {}
+    for k, v in extra.items():
+        out[k] = v
+    return {k: jnp.asarray(v, jnp.float32) for k, v in out.items()}
+
+
+def fused_phase_proxy(sim) -> None:
+    """Run one instrumented per-round event so the trace carries a
+    per-phase device-time breakdown for the fused run (see module
+    docstring for the compile/measure double-run and skip conditions)."""
+    strat, tel = sim.strategy, sim.telemetry
+    event = strat.num_events(sim) - 1
+    if event < 0:
+        return
+    with tel.suppress():                      # compile pass
+        strat.run_event(sim, strat.init_state(sim), event,
+                        rng=np.random.default_rng(sim.fl.seed))
+    with tel.category("proxy"), \
+            tel.span("fused_phase_proxy", cat="proxy"):
+        strat.run_event(sim, strat.init_state(sim), event,
+                        rng=np.random.default_rng(sim.fl.seed))

@@ -25,6 +25,8 @@ API_SURFACE = sorted([
     "ScenarioSpec", "register_scenario", "get_scenario", "scenario_names",
     "run_scenario", "load_result", "RESULT_SCHEMA_VERSION",
     "CI_SMOKE_GRID", "output_path",
+    # observability (DESIGN.md §13)
+    "Telemetry", "write_chrome_trace", "validate_chrome_trace",
     # aggregation operator module
     "ops",
 ])
@@ -52,7 +54,7 @@ def test_api_registry_contents():
 
 
 def test_api_schema_constants():
-    assert api.RESULT_SCHEMA_VERSION == 2.2
+    assert api.RESULT_SCHEMA_VERSION == 2.3
     assert api.STRATEGY_REGISTRY_VERSION == 1
     assert api.CODEC_REGISTRY_VERSION == 1
 

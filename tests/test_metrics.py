@@ -1,0 +1,113 @@
+"""core/metrics.py edge cases (ISSUE 8 satellite): zero-support
+classes, single-class shards, and agreement with sklearn's macro
+averages over the present-class label set.
+
+The macro averages are PRESENT-CLASS macros (DESIGN.md §3): classes
+with zero support in y_true are dropped from the mean rather than
+contributing a 0 term — federated shards routinely miss classes
+entirely (label-skew Dirichlet partitions), and a 10-class macro over
+a 3-class shard would deflate every per-shard metric by 70% for
+structural rather than predictive reasons.
+"""
+import numpy as np
+import pytest
+
+from repro.core.metrics import Timer, classification_metrics, confusion_matrix
+
+
+def test_confusion_matrix_counts_and_shape():
+    y_true = [0, 0, 1, 2, 2, 2]
+    y_pred = [0, 1, 1, 2, 0, 2]
+    cm = confusion_matrix(y_true, y_pred, num_classes=4)
+    assert cm.shape == (4, 4)
+    assert cm.dtype == np.int64
+    assert cm.sum() == len(y_true)
+    assert cm[0, 0] == 1 and cm[0, 1] == 1
+    assert cm[2, 2] == 2 and cm[2, 0] == 1
+    # class 3 never appears on either axis
+    assert cm[3].sum() == 0 and cm[:, 3].sum() == 0
+
+
+def test_zero_support_class_dropped_from_macro():
+    # class 2 has zero support; class 0/1 are classified perfectly, so
+    # the present-class macro must be exactly 1.0 (a 3-class macro
+    # including the absent class would report 2/3)
+    y_true = [0, 0, 1, 1]
+    y_pred = [0, 0, 1, 1]
+    m = classification_metrics(y_true, y_pred, num_classes=3)
+    assert m["accuracy"] == 1.0
+    assert m["precision"] == 1.0
+    assert m["recall"] == 1.0
+    assert m["f1"] == 1.0
+    assert m["balanced_accuracy"] == 1.0
+
+
+def test_zero_support_class_absorbing_predictions():
+    # predictions land ON the absent class: those rows are wrong for
+    # their true class, and the absent class still doesn't enter the
+    # macro (it has no support to be "recalled" from)
+    y_true = [0, 0, 1, 1]
+    y_pred = [0, 2, 1, 2]
+    m = classification_metrics(y_true, y_pred, num_classes=3)
+    assert m["accuracy"] == 0.5
+    # both present classes: precision 1.0 (their predictions are clean),
+    # recall 0.5 (half their support leaked to class 2)
+    assert m["precision"] == 1.0
+    assert m["recall"] == 0.5
+    assert m["f1"] == pytest.approx(2 / 3)
+    # no NaNs anywhere despite the 0-support divide
+    assert all(np.isfinite(v) for k, v in m.items() if k != "confusion")
+
+
+def test_single_class_shard():
+    # a pure single-class shard (extreme label skew): perfect prediction
+    # must give exactly 1.0 across the board, not NaN from the 9 empty
+    # rows of the confusion matrix
+    y_true = [7] * 12
+    y_pred = [7] * 12
+    m = classification_metrics(y_true, y_pred, num_classes=10)
+    for k in ("accuracy", "precision", "recall", "f1",
+              "balanced_accuracy"):
+        assert m[k] == 1.0, k
+    assert m["confusion"][7, 7] == 12
+
+
+def test_single_class_shard_all_wrong():
+    y_true = [3] * 5
+    y_pred = [4] * 5
+    m = classification_metrics(y_true, y_pred, num_classes=10)
+    assert m["accuracy"] == 0.0
+    assert m["recall"] == 0.0
+    assert m["precision"] == 0.0
+    assert m["f1"] == 0.0
+
+
+def test_sklearn_agreement():
+    skm = pytest.importorskip("sklearn.metrics")
+    rng = np.random.default_rng(0)
+    y_true = rng.integers(0, 8, size=400)        # classes 8/9 absent
+    y_pred = rng.integers(0, 10, size=400)       # predictions use all 10
+    m = classification_metrics(y_true, y_pred, num_classes=10)
+    present = sorted(set(y_true.tolist()))
+    assert m["accuracy"] == pytest.approx(
+        skm.accuracy_score(y_true, y_pred))
+    assert m["precision"] == pytest.approx(skm.precision_score(
+        y_true, y_pred, labels=present, average="macro", zero_division=0))
+    assert m["recall"] == pytest.approx(skm.recall_score(
+        y_true, y_pred, labels=present, average="macro", zero_division=0))
+    assert m["f1"] == pytest.approx(skm.f1_score(
+        y_true, y_pred, labels=present, average="macro", zero_division=0))
+    np.testing.assert_array_equal(
+        m["confusion"],
+        skm.confusion_matrix(y_true, y_pred, labels=range(10)))
+
+
+def test_timer_accumulates_across_entries():
+    t = Timer()
+    with t:
+        pass
+    first = t.elapsed
+    assert first >= 0.0 and t.start_time is None
+    with t:
+        pass
+    assert t.elapsed >= first

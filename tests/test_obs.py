@@ -1,0 +1,399 @@
+"""Observability subsystem (ISSUE 8, DESIGN.md §13).
+
+Four invariant families:
+
+* the tracer itself — span recording, categories, suppress/override
+  scoping, dispatch-counter attribution, thread safety;
+* the Chrome-trace exporter — every produced trace passes the format
+  validator (matched B/E stacks, monotone per-track ts), and the
+  validator actually rejects malformed documents;
+* BITWISE result parity with telemetry on vs off, under all three
+  engines — telemetry is on by default, so it must be a pure observer
+  (the in-scan counters read existing scan values, never feed back);
+* the result-document contract — schema v2.3's `telemetry` block, the
+  warmup/steady timing split, and `load_result` back-compat for
+  v1-v2.2 documents.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.fl_types import FLConfig
+from repro.core.simulation import FederatedSimulation
+from repro.data.synthetic import mnist_like
+from repro.obs import (Telemetry, chrome_trace, count, dispatch_snapshot,
+                       profiler_trace, result_block, validate_chrome_trace,
+                       write_chrome_trace)
+
+
+@pytest.fixture(scope="module")
+def obs_ds():
+    # 8 clients x 32 samples, shard-divisible (the §4 parity regime)
+    return mnist_like(seed=0, n_train=256, n_test=128)
+
+
+def _cfg(engine, **kw):
+    base = dict(num_clients=8, num_groups=2, rounds=2, local_epochs=1,
+                local_batch_size=8, lr=0.05, seed=0, participation=1.0)
+    base.update(kw)
+    return FLConfig(engine=engine, **base)
+
+
+# ---------------------------------------------------------------------------
+# tracer unit tests
+# ---------------------------------------------------------------------------
+
+def test_span_records_name_cat_duration():
+    tel = Telemetry()
+    with tel.span("local_train", k=4):
+        pass
+    with tel.span("warmup", cat="run"):
+        pass
+    assert [s["name"] for s in tel.spans] == ["local_train", "warmup"]
+    assert tel.spans[0]["cat"] == "phase"       # default category
+    assert tel.spans[0]["args"] == {"k": 4}
+    assert tel.spans[1]["cat"] == "run"
+    for s in tel.spans:
+        assert s["dur_us"] >= 0.0 and s["ts_us"] >= 0.0
+
+
+def test_disabled_telemetry_records_nothing():
+    tel = Telemetry(enabled=False)
+    with tel.span("x"):
+        pass
+    tel.counter("c", 3)
+    tel.append_series("s", 1.0)
+    tel.record_series("r", [1.0, 2.0])
+    assert not tel.spans and not tel.counters and not tel.series
+    assert not tel.active
+    assert result_block(tel) == {"enabled": False}
+
+
+def test_suppress_mutes_everything():
+    tel = Telemetry()
+    with tel.suppress():
+        with tel.span("hidden"):
+            pass
+        tel.counter("c")
+        tel.append_series("s", 1.0)
+    assert not tel.spans and not tel.counters and not tel.series
+    with tel.span("visible"):
+        pass
+    assert [s["name"] for s in tel.spans] == ["visible"]
+
+
+def test_category_override_retags_and_mutes_counters():
+    tel = Telemetry()
+    with tel.category("proxy"):
+        assert tel.sync_active
+        with tel.span("local_train", cat="phase"):
+            pass
+        tel.counter("c")               # muted: proxy is a measurement pass
+        tel.append_series("s", 1.0)    # muted
+    assert not tel.sync_active
+    assert tel.spans[0]["cat"] == "proxy"
+    assert not tel.counters and not tel.series
+
+
+def test_counters_and_series_accumulate():
+    tel = Telemetry()
+    tel.counter("codec.uplink_bytes", 100)
+    tel.counter("codec.uplink_bytes", 50)
+    tel.append_series("participants", 4)
+    tel.append_series("participants", 6)
+    tel.record_series("scan.attackers", np.float32([1, 2]))
+    assert tel.counters == {"codec.uplink_bytes": 150.0}
+    assert tel.series["participants"] == [4.0, 6.0]
+    assert tel.series["scan.attackers"] == [1.0, 2.0]
+
+
+def test_summary_groups_by_name_within_category():
+    tel = Telemetry()
+    for _ in range(3):
+        with tel.span("eval"):
+            pass
+    with tel.span("classify", cat="run"):
+        pass
+    phases = tel.summary("phase")
+    assert set(phases) == {"eval"}
+    assert phases["eval"]["count"] == 3
+    assert phases["eval"]["mean_s"] == pytest.approx(
+        phases["eval"]["total_s"] / 3)
+    assert set(tel.summary("run")) == {"classify"}
+
+
+def test_dispatch_delta_attributes_to_one_run():
+    count("test_obs.fake", 2)
+    tel = Telemetry()                   # snapshots AFTER the 2 above
+    count("test_obs.fake", 3)
+    assert dispatch_snapshot()["test_obs.fake"] >= 5
+    assert tel.dispatch_delta()["test_obs.fake"] == 3
+
+
+def test_tracer_is_thread_safe():
+    tel = Telemetry()
+
+    def work():
+        for i in range(200):
+            with tel.span("t"):
+                pass
+            tel.counter("n")
+            tel.append_series("s", i)
+
+    threads = [threading.Thread(target=work) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(tel.spans) == 800
+    assert tel.counters["n"] == 800.0
+    assert len(tel.series["s"]) == 800
+    assert not validate_chrome_trace(chrome_trace(tel))
+
+
+# ---------------------------------------------------------------------------
+# chrome-trace exporter + validator
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_structure_and_flows():
+    tel = Telemetry()
+    with tel.span("round", cat="run", flow="rounds"):
+        with tel.span("local_train"):
+            pass
+    with tel.span("round", cat="run", flow="rounds"):
+        pass
+    tel.append_series("participants", 4)
+    doc = chrome_trace(tel)
+    assert validate_chrome_trace(doc) == []
+    evs = doc["traceEvents"]
+    phs = [e["ph"] for e in evs]
+    # named process + one thread_name per track (run, local_train,
+    # counters), B/E pairs, a 2-point flow (s then f), one counter sample
+    assert phs.count("M") == 4
+    assert phs.count("B") == 3 and phs.count("E") == 3
+    assert phs.count("s") == 1 and phs.count("f") == 1
+    assert phs.count("C") == 1
+    # the flow arg is consumed by the exporter, not emitted as a span arg
+    b_args = [e["args"] for e in evs if e["ph"] == "B"]
+    assert all("flow" not in a for a in b_args)
+    assert json.loads(json.dumps(doc)) == doc     # JSON-serializable
+
+
+def test_chrome_trace_empty_run_is_valid():
+    assert validate_chrome_trace(chrome_trace(Telemetry())) == []
+
+
+def test_validator_rejects_malformed_documents():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({"traceEvents": "no"}) != []
+    base = {"pid": 1, "tid": 1}
+    # ts goes backwards on one track
+    doc = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 10.0, "args": {}, **base},
+        {"name": "a", "ph": "E", "ts": 5.0, **base}]}
+    assert any("backwards" in e for e in validate_chrome_trace(doc))
+    # E without a matching open B
+    doc = {"traceEvents": [{"name": "a", "ph": "E", "ts": 1.0, **base}]}
+    assert any("no open B" in e for e in validate_chrome_trace(doc))
+    # B/E name mismatch (stack discipline)
+    doc = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 1.0, "args": {}, **base},
+        {"name": "b", "ph": "E", "ts": 2.0, **base}]}
+    assert any("does not match" in e for e in validate_chrome_trace(doc))
+    # unclosed B
+    doc = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 1.0, "args": {}, **base}]}
+    assert any("unclosed" in e for e in validate_chrome_trace(doc))
+    # unknown phase letter / missing keys
+    doc = {"traceEvents": [{"name": "a", "ph": "Z", "ts": 1.0, **base}]}
+    assert any("unknown ph" in e for e in validate_chrome_trace(doc))
+    doc = {"traceEvents": [{"ph": "B", "args": {}}]}
+    assert validate_chrome_trace(doc) != []
+
+
+def test_write_chrome_trace_roundtrip(tmp_path):
+    tel = Telemetry()
+    with tel.span("eval"):
+        pass
+    path = write_chrome_trace(tel, str(tmp_path / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_chrome_trace(doc) == []
+
+
+# ---------------------------------------------------------------------------
+# engine integration: bitwise parity + recorded content
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["loop", "vectorized", "fused"])
+def test_bitwise_parity_telemetry_on_off(obs_ds, engine):
+    """Telemetry must be a pure observer: the EXACT same bits with the
+    toggle flipped (the acceptance clause is bitwise, not allclose)."""
+    kw = dict(strategy="afl", attack="sign_flip", defense="median",
+              attack_scale=4.0)
+    r_on = FederatedSimulation(
+        _cfg(engine, telemetry=True, **kw), obs_ds).run()
+    r_off = FederatedSimulation(
+        _cfg(engine, telemetry=False, **kw), obs_ds).run()
+    assert r_on.test_accuracy == r_off.test_accuracy
+    assert r_on.train_accuracy == r_off.train_accuracy
+    np.testing.assert_array_equal(np.asarray(r_on.round_train_loss),
+                                  np.asarray(r_off.round_train_loss))
+    np.testing.assert_array_equal(np.asarray(r_on.round_test_acc),
+                                  np.asarray(r_off.round_test_acc))
+    np.testing.assert_array_equal(r_on.confusion, r_off.confusion)
+
+
+@pytest.mark.parametrize("engine", ["loop", "vectorized"])
+def test_driver_records_lifecycle_phases(obs_ds, engine):
+    sim = FederatedSimulation(
+        _cfg(engine, strategy="afl", attack="sign_flip",
+             defense="median"), obs_ds)
+    sim.run()
+    tel = sim.telemetry
+    phases = tel.summary("phase")
+    for name in ("select", "local_train", "corrupt", "aggregate", "eval"):
+        assert name in phases, name
+        assert phases[name]["count"] >= 2       # one per round
+    run_spans = tel.summary("run")
+    assert "warmup" in run_spans and "round" in run_spans
+    assert "classify" in run_spans
+    assert tel.series["participants"] == [8.0, 8.0]
+    assert validate_chrome_trace(chrome_trace(tel)) == []
+
+
+def test_fused_in_scan_counters_and_proxy(obs_ds):
+    cfg = _cfg("fused", strategy="afl", attack="sign_flip",
+               defense="median", rounds=3)
+    sim = FederatedSimulation(cfg, obs_ds)
+    sim.run()
+    tel = sim.telemetry
+    # in-scan counters ride the scan outputs: one value per round, and
+    # the attacker count is a constant the host also knows
+    assert len(tel.series["scan.attackers"]) == 3
+    assert tel.series["scan.attackers"] == [float(len(sim.attackers))] * 3
+    assert len(tel.series["scan.model_delta_l2"]) == 3
+    assert all(v > 0 for v in tel.series["scan.model_delta_l2"])
+    # run-level structure + the per-phase device-time proxy
+    run_spans = tel.summary("run")
+    for name in ("precompute", "warmup", "fused_scan", "classify"):
+        assert name in run_spans, name
+    proxy = tel.summary("proxy")
+    assert "local_train" in proxy and "aggregate" in proxy
+    assert validate_chrome_trace(chrome_trace(tel)) == []
+
+
+def test_fused_chunked_skips_proxy(obs_ds):
+    cfg = _cfg("fused", strategy="afl", fused_chunk=4)
+    sim = FederatedSimulation(cfg, obs_ds)
+    sim.run()
+    assert sim.telemetry.summary("proxy") == {}
+    assert len(sim.telemetry.series["scan.model_delta_l2"]) == 2
+
+
+def test_hfl_fused_group_spread_series(obs_ds):
+    cfg = _cfg("fused", strategy="hfl", rounds=3)
+    sim = FederatedSimulation(cfg, obs_ds)
+    sim.run()
+    spread = sim.telemetry.series["scan.group_spread_l2"]
+    assert len(spread) == 3
+    assert all(v >= 0 for v in spread)
+
+
+def test_async_counters_and_flow_trace(obs_ds):
+    cfg = FLConfig(strategy="async", engine="vectorized", num_clients=8,
+                   local_batch_size=8, seed=0, updates_per_client=2,
+                   rounds=2)
+    sim = FederatedSimulation(cfg, obs_ds)
+    r = sim.run()
+    tel = sim.telemetry
+    assert tel.counters["async.merges"] == r.extra["merges"]
+    assert tel.counters["async.batches"] == r.extra["batches"]
+    assert len(tel.series["batch_size"]) == r.extra["batches"]
+    doc = chrome_trace(tel)
+    assert validate_chrome_trace(doc) == []
+    # tick-batch rounds chain into one flow (s ... f)
+    phs = [e["ph"] for e in doc["traceEvents"]]
+    assert phs.count("s") == 1 and phs.count("f") == 1
+
+
+def test_dispatch_counters_per_engine(obs_ds):
+    sim = FederatedSimulation(_cfg("vectorized", strategy="afl"), obs_ds)
+    sim.run()
+    delta = sim.telemetry.dispatch_delta()
+    assert delta.get("engine.train_dispatch", 0) >= 1
+    assert delta.get("kernel.fedavg_agg", 0) >= 1
+
+
+# ---------------------------------------------------------------------------
+# result-document contract (schema v2.3)
+# ---------------------------------------------------------------------------
+
+def test_result_block_and_timing_split(obs_ds):
+    sim = FederatedSimulation(_cfg("vectorized", strategy="afl"), obs_ds)
+    r = sim.run()
+    # warmup/steady split (§3): build_time_s stays the steady-state
+    # number the throughput gates track; warmup (compile) is separate
+    assert r.warmup_time_s > 0.0
+    assert r.steady_time_s == r.build_time_s
+    block = r.extra["telemetry"]
+    assert block["enabled"] is True
+    assert "local_train" in block["phases"]
+    assert "warmup" in block["run"]
+    assert block["peak_rss_mb"] > 0
+    assert block["series"]["participants"] == [8.0, 8.0]
+    assert json.loads(json.dumps(block)) == block
+
+
+def test_result_block_disabled(obs_ds):
+    sim = FederatedSimulation(
+        _cfg("vectorized", strategy="afl", telemetry=False), obs_ds)
+    r = sim.run()
+    assert r.extra["telemetry"] == {"enabled": False}
+
+
+def test_run_scenario_trace_out_and_v23_schema(tmp_path):
+    from repro.core import scenarios
+    path = str(tmp_path / "t.json")
+    doc = scenarios.run_scenario("iid-hfl-fused", trace_out=path)
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.3
+    assert doc["telemetry"]["enabled"] is True
+    assert "fused_scan" in doc["telemetry"]["run"]
+    assert doc["timing"]["warmup_time_s"] > 0.0
+    assert doc["timing"]["steady_time_s"] == doc["timing"]["build_time_s"]
+    with open(path) as f:
+        assert validate_chrome_trace(json.load(f)) == []
+    # the document normalizes through load_result unchanged
+    assert scenarios.load_result(json.loads(json.dumps(doc))) == \
+        json.loads(json.dumps(doc))
+
+
+def test_load_result_backcompat_v22_and_older():
+    from repro.core.scenarios import RESULT_SCHEMA_VERSION, load_result
+    v22 = {"schema_version": 2.2, "scenario": "x",
+           "spec": {"strategy": "hfl"}, "strategy": {"plugin": "hfl"},
+           "communication": None}
+    up = load_result(v22)
+    assert up["schema_version"] == RESULT_SCHEMA_VERSION
+    assert up["telemetry"] is None
+    assert up["strategy"] == {"plugin": "hfl"}
+    v21 = {"schema_version": 2.1, "spec": {"strategy": "cfl"},
+           "strategy": {"plugin": "cfl"}}
+    up = load_result(v21)
+    assert up["telemetry"] is None and up["communication"] is None
+    v1 = {"schema_version": 1, "spec": {"strategy": "afl"}}
+    up = load_result(v1)
+    assert up["telemetry"] is None and up["attack"] is None
+    assert up["strategy"]["plugin"] == "afl"
+
+
+def test_profiler_trace_noop_and_real(tmp_path):
+    with profiler_trace(None):          # falsy logdir: pure no-op
+        x = 1
+    assert x == 1
+    with profiler_trace(str(tmp_path / "xla")):
+        import jax.numpy as jnp
+        jnp.zeros(4).block_until_ready()
+    assert (tmp_path / "xla").exists()

@@ -125,16 +125,18 @@ def test_run_scenario_result_schema():
 
 def test_result_schema_backward_compat_read():
     """Schema bump contract (DESIGN.md §6): v1 documents (no attack
-    block), v2 documents (no strategy block), and v2.1 documents (no
-    communication block) normalize through `load_result` to the current
-    version, so every consumer reads one shape."""
+    block), v2 documents (no strategy block), v2.1 documents (no
+    communication block), and v2.2 documents (no telemetry block)
+    normalize through `load_result` to the current version, so every
+    consumer reads one shape."""
     v1 = {"schema_version": 1, "scenario": "legacy",
           "metrics": {"test_accuracy": 0.9}, "async": None}
     doc = scenarios.load_result(v1)
-    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.2
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.3
     assert doc["attack"] is None
     assert doc["strategy"] == {"plugin": None, "registry_version": None}
     assert doc["communication"] is None
+    assert doc["telemetry"] is None
     assert doc["metrics"]["test_accuracy"] == 0.9
     v2 = {"schema_version": 2, "scenario": "legacy2",
           "spec": {"strategy": "afl"}, "attack": None}
@@ -150,6 +152,14 @@ def test_result_schema_backward_compat_read():
     assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
     assert doc["strategy"]["plugin"] == "hfl"     # v2.1 block preserved
     assert doc["communication"] is None
+    assert doc["telemetry"] is None
+    v22 = {"schema_version": 2.2, "scenario": "legacy22", "attack": None,
+           "strategy": {"plugin": "afl", "registry_version": 1},
+           "communication": {"codec": "qsgd"}}
+    doc = scenarios.load_result(v22)
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
+    assert doc["communication"] == {"codec": "qsgd"}  # v2.2 preserved
+    assert doc["telemetry"] is None
 
 
 def test_run_scenario_sync_has_null_async_block():
@@ -214,3 +224,31 @@ def test_compare_flags_regressions():
                    _bench_doc(3.0, 1.9, scale="smoke")) == []
     fails = compare({**_bench_doc(3.0, 2.8), "scenarios": {}}, base)
     assert any("coverage" in f for f in fails)
+
+
+def test_compare_obs_overhead_gate():
+    """The ISSUE 8 telemetry budget: on-by-default tracing must cost
+    <= 5% rounds/s under every engine. The gate reads only the new
+    document (the overhead is a same-run on/off ratio, not a
+    baseline-relative number) and stays silent for pre-ISSUE-8
+    documents that carry no "obs" section."""
+    from benchmarks.ci_bench import OBS_OVERHEAD_TOLERANCE
+
+    def _obs(overhead):
+        return {eng: {"overhead": overhead, "on_rounds_per_s": 1.0,
+                      "off_rounds_per_s": 1.0 + overhead}
+                for eng in ("loop", "vectorized", "fused")}
+
+    base = _bench_doc(3.0, 2.8)
+    ok = {**_bench_doc(3.0, 2.8), "obs": _obs(0.02)}
+    assert compare(ok, base) == []
+    bad = {**_bench_doc(3.0, 2.8),
+           "obs": _obs(OBS_OVERHEAD_TOLERANCE + 0.03)}
+    fails = compare(bad, base)
+    assert len(fails) == 3                 # one per engine
+    assert all("telemetry overhead" in f for f in fails)
+    # smoke scale: informational only, like the other floors
+    smoke = {**_bench_doc(3.0, 2.8, scale="smoke"), "obs": _obs(0.5)}
+    assert compare(smoke, _bench_doc(3.0, 2.8, scale="smoke")) == []
+    # absent section (old run): no gate
+    assert compare(_bench_doc(3.0, 2.8), base) == []
