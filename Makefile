@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test deps lint bench bench-engines scenarios bench-ci attack-demo \
-        strategy-demo fused-demo mesh-demo test-mesh comm-demo trace-demo
+        strategy-demo fused-demo mesh-demo test-mesh comm-demo trace-demo \
+        serve-demo
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -63,6 +64,16 @@ trace-demo:
 	$(PY) examples/federated_image_classification.py \
 	    --scenario obs-trace-fused-16c \
 	    --trace-out experiments/traces/obs_trace_fused_16c.json
+
+# federation-in-the-loop serving end-to-end (DESIGN.md §14): the fused
+# executor with per-round models stacked in-scan and hot-swaps replayed
+# at round boundaries, then burst traffic against the bounded queue
+# (shedding exercised and accounted), then the codec x adversary x
+# serving crossing under diurnal load — each result document carries
+# the schema-v2.4 "serving" block (p50/p95/p99, shed rate, staleness)
+serve-demo:
+	$(PY) -m repro.core.scenarios --run serve-iid-fused serve-hfl-burst \
+	    serve-qsgd-signflip-median
 
 # the mesh-sharded fused executor (DESIGN.md §11): the same fused run
 # single-device vs with the client axis sharded over 8 forced host

@@ -373,6 +373,50 @@ def measure_obs(clients=16, rounds=4, reps=5):
     return out
 
 
+def measure_serve(clients=16, rounds=2, reps=20):
+    """Serving section (ISSUE 9): the wall-clock steady-state throughput
+    of the compiled padded-batch classify dispatch — the one model call
+    per micro-batch, so `serve_batch / best_latency` is the requests/s
+    the engine sustains at full occupancy — plus the VIRTUAL-clock
+    serving block of a full serve-enabled run (p99/shed under the affine
+    service-time model; deterministic in the config, so those numbers
+    gate as exact ceilings, not host-tolerant ratios). Best-of-`reps`
+    like the other gated numbers (DESIGN.md §14)."""
+    import numpy as np
+    from repro.core.fl_types import FLConfig
+    from repro.core.simulation import FederatedSimulation
+    from repro.data.synthetic import mnist_like
+
+    ds = mnist_like(n_train=clients * 8, n_test=128)
+    fl = FLConfig(strategy="hfl", num_clients=clients, rounds=rounds,
+                  local_epochs=1, local_batch_size=8, lr=0.05, seed=0,
+                  engine="vectorized", serve=True)
+    sim = FederatedSimulation(fl, ds)
+    blk = sim.run().extra["serving"]
+    # steady-state wall clock: rebuild the run's dispatch closure (the
+    # session warm-up compiles it) and time FULL admission-cap batches
+    sess = sim._make_serve_session(rounds)
+    dispatch = sess.batcher.dispatch_fn
+    params = sim.init_params
+    ei = np.arange(fl.serve_batch, dtype=np.int64)
+    best = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        dispatch(params, ei)        # returns host ndarray: synchronized
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return {
+        "batch": fl.serve_batch,
+        "dispatch_us": best * 1e6,
+        "requests_per_s": fl.serve_batch / best,
+        "virtual_p50_ms": blk["latency_ms"]["p50"],
+        "virtual_p99_ms": blk["latency_ms"]["p99"],
+        "shed_rate": blk["shed_rate"],
+        "qps": blk["qps"],
+        "served_accuracy": blk["served_accuracy"],
+    }
+
+
 FUSED_CHUNK = 128
 FUSED_CHUNKED_SWEEPS = {
     "smoke": (),

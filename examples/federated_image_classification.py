@@ -21,7 +21,9 @@ default and a per-phase time breakdown prints with the metrics;
 --trace-out PATH writes the run's Chrome-trace JSON (open in Perfetto /
 chrome://tracing), --xla-profile DIR captures a jax.profiler trace
 alongside, --no-telemetry runs the untraced driver (results are bitwise
-identical either way).
+identical either way). Serving (DESIGN.md §14): --serve attaches the
+federation-in-the-loop serving side-car (--qps/--arrival shape the
+traffic) and prints the serving block — training results never change.
 
     PYTHONPATH=src python examples/federated_image_classification.py \
         --strategy afl --clients 16 --engine vectorized \
@@ -94,6 +96,22 @@ def main():
     ap.add_argument("--quant-bits", type=int, choices=[8, 16], default=8,
                     help="qsgd: 8 = int8 + per-client scale (~4x), "
                          "16 = stochastic bfloat16 (2x)")
+    from repro.core.fl_types import ARRIVALS
+    ap.add_argument("--serve", action="store_true",
+                    help="federation-in-the-loop serving (DESIGN.md "
+                         "§14): an open-loop traffic trace is "
+                         "micro-batched against the global model on a "
+                         "virtual clock, with a round-boundary hot-swap "
+                         "after every aggregation event; prints the "
+                         "serving block (p50/p95/p99, shed rate, "
+                         "staleness). Training results are bitwise "
+                         "identical with or without it")
+    ap.add_argument("--qps", type=float, default=64.0,
+                    help="serving: mean offered load, requests/s of "
+                         "virtual time")
+    ap.add_argument("--arrival", choices=ARRIVALS, default="poisson",
+                    help="serving: arrival process shape (same mean "
+                         "load; burst/diurnal redistribute it)")
     ap.add_argument("--curves", action="store_true",
                     help="write per-round curves CSV (paper Figs. 9/11)")
     ap.add_argument("--engine", choices=["loop", "vectorized", "fused"],
@@ -158,7 +176,8 @@ def main():
                       clip_tau=args.clip_tau, codec=args.codec,
                       topk_frac=args.topk_frac, quant_bits=args.quant_bits,
                       telemetry=not args.no_telemetry,
-                      engine=args.engine)
+                      engine=args.engine, serve=args.serve,
+                      serve_qps=args.qps, serve_arrival=args.arrival)
     sim = api.FederatedSimulation(fl, ds)
     if args.non_iid:
         from repro.data.partition import dirichlet_partition
@@ -191,6 +210,21 @@ def main():
               f"(uplink {comm['uplink_bytes']:,} B, "
               f"dense {comm['dense_uplink_bytes']:,} B, "
               f"{comm['compression_ratio']:.2f}x compression)")
+    srv = r.extra.get("serving")
+    if srv:
+        lm = srv["latency_ms"]
+        acc = srv["served_accuracy"]
+        print(f"serving:            {srv['arrival']} "
+              f"{srv['qps_target']:.0f} qps target -> "
+              f"{srv['completed']}/{srv['requests']} served "
+              f"({srv['shed_rate']:.1%} shed), "
+              f"{srv['swap_count']} hot-swaps")
+        print(f"  latency (virtual) p50 {lm['p50']:.1f}ms / "
+              f"p95 {lm['p95']:.1f}ms / p99 {lm['p99']:.1f}ms; "
+              f"occupancy {srv['batch_occupancy']:.2f}; "
+              f"staleness mean {srv['staleness']['mean']:.2f} "
+              f"max {srv['staleness']['max']}"
+              + (f"; served acc {acc:.3f}" if acc is not None else ""))
     print("confusion matrix:")
     for row in r.confusion:
         print("   " + " ".join(f"{v:4d}" for v in row))

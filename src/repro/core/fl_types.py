@@ -20,6 +20,10 @@ ATTACKS = ("none", "sign_flip", "gauss", "label_flip", "model_replace")
 DEFENSES = ("none", "median", "trimmed_mean", "norm_clip", "krum",
             "multi_krum")
 
+# Serving traffic shapes (DESIGN.md §14): deterministic open-loop arrival
+# processes for the federation-in-the-loop serving engine.
+ARRIVALS = ("poisson", "burst", "diurnal")
+
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
@@ -110,6 +114,24 @@ class FLConfig:
     codec: str = "none"
     topk_frac: float = 0.1         # topk: fraction of coordinates kept
     quant_bits: int = 8            # qsgd: 8 (int8 + scale) | 16 (bf16)
+    # federation-in-the-loop serving (DESIGN.md §14). serve=True runs the
+    # request-serving engine alongside training: an open-loop synthetic
+    # traffic generator (its OWN seed fold — it never consumes the run
+    # rng, so training stays bitwise identical with serving on or off)
+    # feeds a micro-batching engine in VIRTUAL time, and every round
+    # boundary hot-swaps the freshly aggregated global model into the
+    # double-buffered serving slot without draining in-flight batches.
+    serve: bool = False
+    serve_qps: float = 64.0        # mean offered load (requests / virtual s)
+    serve_arrival: str = "poisson"  # poisson | burst | diurnal
+    serve_batch: int = 8           # micro-batch admission cap
+    serve_max_wait: float = 0.05   # max queue wait before dispatch (virtual s)
+    serve_queue: int = 64          # bounded queue depth (overflow is shed)
+    serve_round_duration: float = 1.0  # virtual seconds of traffic per round
+    serve_service_base: float = 0.004  # service-time model: base latency (s)
+    serve_service_per_item: float = 0.001  # + per-request cost (s)
+    serve_dispatch: bool = True    # run the real compiled classify per batch
+                                   # (False: pure queueing simulation)
     # telemetry (DESIGN.md §13). On by default: the host tracer records
     # lifecycle spans/counters and the fused executor adds in-scan
     # per-round counters — results are bitwise identical either way and
@@ -159,6 +181,25 @@ class FLConfig:
                 "fused executor (per-shard codec state and collective "
                 "dequantize are future work — DESIGN.md §12); run "
                 "mesh_devices<=1 or codec='none'")
+        if self.serve and self.mesh_devices > 1:
+            raise ValueError(
+                "serving does not yet compose with the mesh-sharded "
+                "fused executor (the shard_map out_specs describe the "
+                "bare metric triple — stacking per-round served models "
+                "per shard is future work, like the in-scan telemetry "
+                "counters; DESIGN.md §14); run mesh_devices<=1 or "
+                "serve=False")
+        if self.serve:
+            assert self.serve_arrival in ARRIVALS, self.serve_arrival
+            assert self.serve_qps > 0, self.serve_qps
+            assert self.serve_batch >= 1, self.serve_batch
+            assert self.serve_max_wait >= 0, self.serve_max_wait
+            assert self.serve_queue >= self.serve_batch, \
+                "queue depth below the batch cap can never fill a batch"
+            assert self.serve_round_duration > 0, self.serve_round_duration
+            assert self.serve_service_base >= 0, self.serve_service_base
+            assert self.serve_service_per_item >= 0, \
+                self.serve_service_per_item
         if self.mesh_devices > 1 and self.engine != "fused":
             raise ValueError(
                 "mesh_devices only applies to the fused executor "

@@ -32,20 +32,23 @@ import os
 from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.codecs import CODEC_REGISTRY_VERSION, codec_names, get_codec
-from repro.core.fl_types import ATTACKS, DEFENSES
+from repro.core.fl_types import ARRIVALS, ATTACKS, DEFENSES
 from repro.core.strategies import (STRATEGY_REGISTRY_VERSION, get_strategy,
                                    strategy_names)
 
-# v2.3: adds the "telemetry" block (per-phase span totals, run-level
-# spans, counters/series, dispatch deltas, peak RSS — DESIGN.md §13;
-# {"enabled": false} when telemetry is off) and the warmup/steady
-# timing split (timing.warmup_time_s / timing.steady_time_s). v2.2
-# added the "communication" block (per-round uplink/downlink bytes,
-# compression ratio, codec name + registry version; null for dense
-# runs); v2.1 added the "strategy" block (plugin name + registry
-# version); v2 added the "attack" block. Older documents are still
-# readable through `load_result`.
-RESULT_SCHEMA_VERSION = 2.3
+# v2.4: adds the "serving" block (federation-in-the-loop serving —
+# DESIGN.md §14: virtual-clock qps, latency percentiles, shed rate,
+# batch occupancy, hot-swap count, served-staleness histogram; null
+# when serving is off). v2.3 added the "telemetry" block (per-phase
+# span totals, run-level spans, counters/series, dispatch deltas, peak
+# RSS — DESIGN.md §13; {"enabled": false} when telemetry is off) and
+# the warmup/steady timing split (timing.warmup_time_s /
+# timing.steady_time_s); v2.2 added the "communication" block
+# (per-round uplink/downlink bytes, compression ratio, codec name +
+# registry version; null for dense runs); v2.1 added the "strategy"
+# block (plugin name + registry version); v2 added the "attack" block.
+# Older documents are still readable through `load_result`.
+RESULT_SCHEMA_VERSION = 2.4
 
 # One output-dir convention for every result/curve writer: the example
 # CLI's curves, `--json` grid dumps, and experiment artifacts all land
@@ -134,6 +137,16 @@ class ScenarioSpec:
     # observability (DESIGN.md §13): on-by-default tracer; results are
     # bitwise identical either way
     telemetry: bool = True
+    # federation-in-the-loop serving (DESIGN.md §14): virtual-clock
+    # request serving with round-boundary hot-swap; training results
+    # are bitwise identical with serving on or off
+    serve: bool = False
+    serve_qps: float = 64.0
+    serve_arrival: str = "poisson"   # poisson | burst | diurnal
+    serve_batch: int = 8
+    serve_max_wait: float = 0.05
+    serve_queue: int = 64
+    serve_round_duration: float = 1.0
     seed: int = 0
 
     def __post_init__(self):
@@ -181,6 +194,10 @@ class ScenarioSpec:
                     f"{self.name}: stateful codec {self.codec!r} needs the "
                     f"stacked driver upload seam, which strategy "
                     f"{self.strategy!r} does not use (DESIGN.md §12)")
+        if self.serve and self.serve_arrival not in ARRIVALS:
+            raise ValueError(
+                f"{self.name}: unknown arrival process "
+                f"{self.serve_arrival!r} (expected one of {ARRIVALS})")
 
     def to_fl_config(self):
         """The underlying FLConfig: `strategy` resolves 1:1 through the
@@ -207,6 +224,12 @@ class ScenarioSpec:
             defense_f=self.defense_f, clip_tau=self.clip_tau,
             codec=self.codec, topk_frac=self.topk_frac,
             quant_bits=self.quant_bits, telemetry=self.telemetry,
+            serve=self.serve, serve_qps=self.serve_qps,
+            serve_arrival=self.serve_arrival,
+            serve_batch=self.serve_batch,
+            serve_max_wait=self.serve_max_wait,
+            serve_queue=self.serve_queue,
+            serve_round_duration=self.serve_round_duration,
             engine=self.engine)
 
     def asdict(self) -> Dict:
@@ -440,14 +463,43 @@ register(ScenarioSpec(
     num_clients=16, rounds=4, n_train=1024, attack="sign_flip",
     attack_scale=4.0, defense="median"))
 
+# federation-in-the-loop serving (DESIGN.md §14): train+serve scenarios
+# exercising each arrival shape. The fused twin is the acceptance run
+# (hot-swap replay of the in-scan model stack); the burst scenario is
+# sized to overflow the bounded queue so shedding shows up in the
+# block; the codec x adversary crossing serves the model the defended
+# quantized aggregation actually produces.
+register(ScenarioSpec(
+    "serve-iid-fused", "fused-executor HFL with the serving side-car: "
+    "per-round global models stacked in-scan, hot-swap replayed at "
+    "round boundaries, Poisson traffic",
+    strategy="hfl", topology="hierarchical", local_epochs=2,
+    engine="fused", serve=True))
+register(ScenarioSpec(
+    "serve-hfl-burst", "centralized HFL under on/off burst traffic: "
+    "3x-rate bursts against the bounded queue — occupancy high, "
+    "overflow shed and accounted",
+    strategy="hfl", topology="hierarchical", local_epochs=2, serve=True,
+    serve_arrival="burst", serve_qps=256.0, serve_batch=4,
+    serve_queue=8, serve_max_wait=0.02))
+register(ScenarioSpec(
+    "serve-qsgd-signflip-median", "the full-stack crossing: sign-flip "
+    "attackers quantized on the wire, median-defended aggregation, and "
+    "the surviving global model served under diurnal traffic",
+    strategy="afl", topology="star", participation=1.0, codec="qsgd",
+    attack="sign_flip", attack_scale=4.0, defense="median", serve=True,
+    serve_arrival="diurnal"))
+
 # the CI bench-smoke grid: one sync-centralized, one sync-decentralized,
 # one async-heterogeneous, one adversarial scenario, one scenario per
-# PR 4 strategy plugin family, one fused-executor scenario, plus one
-# upload-codec scenario (see .github/workflows/ci.yml)
+# PR 4 strategy plugin family, one fused-executor scenario, one
+# upload-codec scenario, plus one train+serve scenario
+# (see .github/workflows/ci.yml)
 CI_SMOKE_GRID: Tuple[str, ...] = (
     "iid-hfl-vec", "ring-gossip-vec", "async-straggler-vec",
     "attack-replace-cfl-clip-vec", "fedprox-dirichlet-vec",
-    "fedadam-iid-vec", "iid-hfl-fused", "comm-qsgd-signflip-median-vec")
+    "fedadam-iid-vec", "iid-hfl-fused", "comm-qsgd-signflip-median-vec",
+    "serve-iid-fused")
 
 
 # ---------------------------------------------------------------------------
@@ -529,6 +581,7 @@ def run_scenario(scenario: Union[str, ScenarioSpec],
         "attack": attack_block,
         "communication": comm_block,
         "telemetry": r.extra.get("telemetry"),
+        "serving": r.extra.get("serving"),
     }
 
 
@@ -541,27 +594,32 @@ def load_result(doc: Dict) -> Dict:
     to the spec's strategy field with a null registry version; v2.1
     documents (pre-codec) carry no "communication" block — they read as
     dense (uncompressed) runs; v2.2 documents (pre-observability) carry
-    no "telemetry" block — they read as untraced runs."""
+    no "telemetry" block — they read as untraced runs; v2.3 documents
+    (pre-serving) carry no "serving" block — they read as train-only
+    runs."""
     v = doc.get("schema_version")
     if v == RESULT_SCHEMA_VERSION:
         return doc
+    if v == 2.3:
+        return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
+                "serving": None}
     if v == 2.2:
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
-                "telemetry": None}
+                "telemetry": None, "serving": None}
     if v == 2.1:
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
-                "communication": None, "telemetry": None}
+                "communication": None, "telemetry": None, "serving": None}
     if v == 2:
         plugin = (doc.get("spec") or {}).get("strategy")
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
                 "strategy": {"plugin": plugin, "registry_version": None},
-                "communication": None, "telemetry": None}
+                "communication": None, "telemetry": None, "serving": None}
     if v == 1:
         plugin = (doc.get("spec") or {}).get("strategy")
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
                 "attack": None,
                 "strategy": {"plugin": plugin, "registry_version": None},
-                "communication": None, "telemetry": None}
+                "communication": None, "telemetry": None, "serving": None}
     raise ValueError(f"unknown result schema_version {v!r}")
 
 

@@ -731,6 +731,11 @@ class FederatedSimulation:
             strat.warmup(self)
         self._reset_codec()
         n_events = strat.num_events(self)
+        # federation-in-the-loop serving (DESIGN.md §14): the session's
+        # traffic draws from its own seed fold, and the publish hook
+        # below only READS the round model — training is bitwise
+        # identical with serving on or off
+        serve_sess = self._make_serve_session(n_events)
         all_accs: List[float] = []
         train_acc = 0.0
         build_timer = Timer()
@@ -743,6 +748,11 @@ class FederatedSimulation:
                 if strat.track_curves:
                     self._track(curves, accs, losses,
                                 strat.round_model(state))
+                if serve_sess is not None:
+                    # round boundary: serve the window's traffic on the
+                    # old model, then hot-swap the fresh aggregate in
+                    serve_sess.publish_round(ev + 1,
+                                             strat.round_model(state))
         if strat.mean_train_acc_over_events:
             train_acc = float(np.mean(all_accs)) if all_accs else 0.0
         return self._classify_and_result(state, curves, train_acc,
@@ -843,6 +853,14 @@ class FederatedSimulation:
         # the bare metric triple (per-shard counter semantics are
         # future work).
         scan_tel = tel.enabled and mesh_axis is None
+        # serving (DESIGN.md §14): the fused engine cannot publish at
+        # round boundaries — the rounds live inside one scan — so the
+        # per-round GLOBAL model rides the stacked outputs (same
+        # discipline as the in-scan counters above) and the publishes
+        # are REPLAYED in round order after the scan; the virtual-clock
+        # serving block comes out byte-identical to the per-round
+        # drivers'. serve+mesh is rejected by FLConfig (out_specs).
+        serve_stack = fl.serve
 
         def _run(carry, xs, consts):
             fx = FusedContext(self, consts, mesh_axis=mesh_axis)
@@ -857,6 +875,8 @@ class FederatedSimulation:
                     sc = c
                     sc_new, out = strat.scan_round(fx, sc, x)
                     c_new = sc_new
+                if serve_stack:
+                    out = (out, strat.round_model(sc_new))
                 if scan_tel:
                     out = (out, obs_collectors.round_counters(
                         strat, fx, sc, sc_new, x))
@@ -889,9 +909,13 @@ class FederatedSimulation:
             carry, outs = compiled(carry0, xs, consts)
             jax.block_until_ready((carry, outs))
         if scan_tel:
-            (acc_r, loss_r, tacc_r), scan_counters = outs
+            outs, scan_counters = outs
         else:
-            (acc_r, loss_r, tacc_r), scan_counters = outs, {}
+            scan_counters = {}
+        round_models = None
+        if serve_stack:
+            outs, round_models = outs
+        acc_r, loss_r, tacc_r = outs
         if mesh_axis is not None:
             # the classification phase mixes this state with
             # single-device test shards — re-home the final carry so
@@ -933,6 +957,17 @@ class FederatedSimulation:
                  else -(-len(x_test) // fl.num_clients))
         _predict(strat.served_fn(self, state)(),
                  self._test_head_dev(shard))
+        serve_sess = self._make_serve_session(R)
+        if serve_sess is not None:
+            # replay the publishes the per-round drivers perform live:
+            # one hot-swap per round, in round order, at the same
+            # virtual times — the serving block is engine-independent
+            with tel.span("serve_replay", cat="serve", rounds=R):
+                for ev in range(R):
+                    serve_sess.publish_round(
+                        ev + 1,
+                        jax.tree.map(lambda l, _e=ev: l[_e],
+                                     round_models))
         return self._classify_and_result(state, curves, train_acc,
                                          build_timer,
                                          warmup_timer=warmup_timer)
@@ -1066,6 +1101,12 @@ class FederatedSimulation:
         extra = dict(strat.extra_result(self, state))
         if self.codec is not None:
             extra["communication"] = self._communication_block()
+        serve_sess = getattr(self, "_serve_session", None)
+        if serve_sess is not None:
+            # drains the tail traffic + summarizes (DESIGN.md §14);
+            # virtual-clock quantities — engine-independent by
+            # construction
+            extra["serving"] = serve_sess.result_block()
         if self.vec is not None and self.vec.dropped_samples:
             # the stacked engine trains every client for the federation-
             # minimum batch count (core/engine.py ShardTruncationWarning)
@@ -1092,6 +1133,39 @@ class FederatedSimulation:
             steady_time_s=build_timer.elapsed,
             extra=extra,
         )
+
+    def _make_serve_session(self, n_events: int):
+        """Build the DESIGN.md §14 serving side-car (None when serving
+        is off). The dispatch seam pads every micro-batch to the
+        `serve_batch` admission cap so the whole serving run is ONE
+        compiled classify shape — compiled here, outside every timed
+        window. Sets `self._serve_session` (consumed by
+        `_classify_and_result` for the schema-v2.4 block)."""
+        fl = self.fl
+        self._serve_session = None
+        if not fl.serve:
+            return None
+        from repro import serve as serve_mod
+        x_test, y_test = self.dataset["test"]
+        dispatch = None
+        if fl.serve_dispatch:
+            xj = jnp.asarray(x_test)
+            yt = np.asarray(y_test)
+            pad = fl.serve_batch
+
+            def dispatch(params, example_idx):
+                ei = np.asarray(example_idx, np.int64)
+                idx = np.zeros(pad, np.int64)
+                idx[: len(ei)] = ei
+                preds = np.asarray(
+                    _predict(params, xj[jnp.asarray(idx)]))
+                return preds[: len(ei)] == yt[ei]
+
+        self._serve_session = serve_mod.ServeSession(
+            fl, n_events=n_events, n_test=len(x_test),
+            init_params=self.init_params, dispatch_fn=dispatch,
+            telemetry=self.telemetry)
+        return self._serve_session
 
     def _communication_block(self) -> Dict[str, Any]:
         """The byte-count cost model (DESIGN.md §12), assembled from the

@@ -1,5 +1,7 @@
 """Serving: prefill + batched single-token decode steps, with the
-decode-state sharding rules used by the decode_32k / long_500k dry-runs.
+decode-state sharding rules used by the decode_32k / long_500k dry-runs,
+and the token-model adapter for the federation-in-the-loop serving
+engine (repro.serve — DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -7,6 +9,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.sharding import specs as sh
@@ -25,42 +28,74 @@ def make_serve_step(model):
     return serve_step
 
 
+def make_decode_dispatch(cfg, prompts, next_tokens):
+    """The `repro.serve.MicroBatcher` dispatch seam for TOKEN models:
+    one micro-batch = prefill each request's prompt through
+    `models.decode.decode_step` and score the greedy next-token
+    prediction against `next_tokens` (the CNN classify dispatch in
+    core/simulation.py is the image analogue). `prompts` is the
+    (n_examples, S) request corpus the traffic generator indexes into;
+    returns per-request correctness, the contract `ServeSession`
+    aggregates into `served_accuracy`."""
+    from repro.models import decode as decode_mod
+    prompts = np.asarray(prompts)
+    next_tokens = np.asarray(next_tokens)
+
+    def dispatch(params, example_idx):
+        ei = np.asarray(example_idx, np.int64)
+        toks = jnp.asarray(prompts[ei])
+        out = decode_mod.greedy_generate(params, cfg, toks, num_steps=1)
+        return np.asarray(out[:, -1]) == next_tokens[ei]
+
+    return dispatch
+
+
 def decode_state_shardings(state_shape, mesh, cfg):
     """Sharding rules for decode-state leaves.
 
-    (B, cap, Hk, dh) KV caches: batch over the FSDP axis when divisible;
-    heads over "model" when divisible, else the cache *sequence* dim over
-    "model" (sequence-parallel attention — essential for long_500k where
-    batch=1 and head counts don't divide the axis). Recurrent SSM/xLSTM
-    states: batch over FSDP, heads over "model" when divisible.
+    (B, cap, Hk, dh) per-layer KV caches: batch over the FSDP axis when
+    divisible; heads over "model" when divisible, else the cache
+    *sequence* dim over "model" (sequence-parallel attention — essential
+    for long_500k where batch=1 and head counts don't divide the axis).
+    (L, B, cap, Hk, dh) layer-STACKED caches (models/kvcache.py): same
+    rule shifted by one — the layer dim is indexed every decode step and
+    must stay whole (sharding it would gather half the cache per layer;
+    it used to fall into the generic dim0-is-batch rule, which sharded
+    exactly that dim). Recurrent SSM/xLSTM states: batch over FSDP,
+    channels over "model" when divisible. Meshes without a "model" axis
+    (e.g. the 1-D client mesh) shard the batch dim only.
     """
     fa = sh.fsdp_axes(mesh)
     ba = fa if len(fa) > 1 else fa[0]
-    msize = mesh.shape["model"]
+    msize = dict(mesh.shape).get("model", 0)
+
+    def kv_spec(shape, b, seq, heads):
+        spec = [None] * len(shape)
+        if shape[b] % sh.axis_size(mesh, ba) == 0:
+            spec[b] = ba
+        if msize and shape[heads] % msize == 0:   # heads over model
+            spec[heads] = "model"
+        elif msize and shape[seq] % msize == 0 and shape[seq] > 1024:
+            spec[seq] = "model"                   # cache seq over model
+        return spec
 
     def rule(leaf):
         if leaf.ndim == 0:
             return NamedSharding(mesh, P())
-        if leaf.ndim == 4:                       # (B, cap|H, ... )
-            B, d1, d2, d3 = leaf.shape
-            spec = [None] * 4
-            if B % sh.axis_size(mesh, ba) == 0:
-                spec[0] = ba
-            if d2 % msize == 0:                  # heads over model
-                spec[2] = "model"
-            elif d1 % msize == 0 and d1 > 1024:  # cache seq over model
-                spec[1] = "model"
-            return NamedSharding(mesh, sh.fit_spec(leaf.shape, P(*spec), mesh))
-        if leaf.ndim == 3:                       # (B, W-1, conv_ch) etc
+        if leaf.ndim == 5:                       # (L, B, cap, Hk, dh)
+            spec = kv_spec(leaf.shape, 1, 2, 3)
+        elif leaf.ndim == 4:                     # (B, cap|H, ... )
+            spec = kv_spec(leaf.shape, 0, 1, 2)
+        elif leaf.ndim == 3:                     # (B, W-1, conv_ch) etc
             spec = [None] * 3
             if leaf.shape[0] % sh.axis_size(mesh, ba) == 0:
                 spec[0] = ba
-            if leaf.shape[2] % msize == 0:
+            if msize and leaf.shape[2] % msize == 0:
                 spec[2] = "model"
-            return NamedSharding(mesh, sh.fit_spec(leaf.shape, P(*spec), mesh))
-        spec = [None] * leaf.ndim
-        if leaf.shape and leaf.shape[0] % sh.axis_size(mesh, ba) == 0:
-            spec[0] = ba
+        else:
+            spec = [None] * leaf.ndim
+            if leaf.shape and leaf.shape[0] % sh.axis_size(mesh, ba) == 0:
+                spec[0] = ba
         return NamedSharding(mesh, sh.fit_spec(leaf.shape, P(*spec), mesh))
 
     return jax.tree.map(rule, state_shape)

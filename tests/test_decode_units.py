@@ -1,0 +1,138 @@
+"""Direct unit coverage for models/decode.py + models/kvcache.py (the
+serving stack's token path — DESIGN.md §14), plus the launch/serve.py
+decode dispatch adapter. test_decode_parity.py exercises these through
+the Model wrapper; here the module functions are pinned directly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.launch.serve import make_decode_dispatch
+from repro.models import decode as decode_mod
+from repro.models import kvcache
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("phi3-mini-3.8b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    return cfg, model, params
+
+
+# -- kvcache ----------------------------------------------------------------
+
+def test_init_cache_shapes_and_index():
+    c = kvcache.init_cache(num_layers=3, batch=2, capacity=8,
+                           num_kv_heads=4, head_dim=5, prefill_len=2)
+    assert c.k.shape == (3, 2, 8, 4, 5) and c.v.shape == c.k.shape
+    assert int(c.index) == 2 and c.capacity == 8
+    k0, v0 = kvcache.cache_layer(c, 1)
+    assert k0.shape == (2, 8, 4, 5) and v0.shape == (2, 8, 4, 5)
+
+
+def test_update_layer_linear_append():
+    B, cap, Hk, dh = 1, 6, 2, 3
+    ck = jnp.zeros((B, cap, Hk, dh))
+    cv = jnp.zeros((B, cap, Hk, dh))
+    for t in range(4):
+        new = jnp.full((B, 1, Hk, dh), float(t + 1))
+        ck, cv = kvcache.update_layer(ck, cv, jnp.int32(t), new, new)
+    got = np.asarray(ck[0, :, 0, 0])
+    np.testing.assert_allclose(got, [1, 2, 3, 4, 0, 0])
+
+
+def test_update_layer_ring_wraps():
+    """window > 0: writes at index >= capacity wrap (ring buffer)."""
+    B, cap, Hk, dh = 1, 4, 1, 1
+    ck = jnp.zeros((B, cap, Hk, dh))
+    cv = jnp.zeros((B, cap, Hk, dh))
+    for t in range(6):      # two writes past capacity
+        new = jnp.full((B, 1, Hk, dh), float(t + 1))
+        ck, cv = kvcache.update_layer(ck, cv, jnp.int32(t), new, new,
+                                      window=cap)
+    # slots: t=4 -> pos 0, t=5 -> pos 1; 3,4 survive from the first lap
+    np.testing.assert_allclose(np.asarray(ck[0, :, 0, 0]), [5, 6, 3, 4])
+
+
+def test_update_layer_no_wrap_without_window():
+    """window == 0: the write position is NOT wrapped (the caller sizes
+    the cache to the full sequence)."""
+    ck = jnp.zeros((1, 4, 1, 1))
+    new = jnp.full((1, 1, 1, 1), 9.0)
+    ck2, _ = kvcache.update_layer(ck, ck, jnp.int32(2), new, new)
+    np.testing.assert_allclose(np.asarray(ck2[0, :, 0, 0]), [0, 0, 9, 0])
+
+
+def test_valid_mask_prefix_and_window():
+    full = np.asarray(kvcache.valid_mask(jnp.int32(2), 5))
+    np.testing.assert_array_equal(full, [True, True, True, False, False])
+    # ring cache: everything written so far is attendable, capped at cap
+    ring_early = np.asarray(kvcache.valid_mask(jnp.int32(1), 4, window=4))
+    np.testing.assert_array_equal(ring_early, [True, True, False, False])
+    ring_sat = np.asarray(kvcache.valid_mask(jnp.int32(9), 4, window=4))
+    np.testing.assert_array_equal(ring_sat, [True] * 4)
+
+
+# -- decode.py direct -------------------------------------------------------
+
+def test_decode_step_matches_full_forward(tiny):
+    """Module-level decode_step teacher-forced over a prompt reproduces
+    the full-sequence forward logits on the tiny transformer."""
+    cfg, model, params = tiny
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    logits_par, _ = model.apply(params, {"tokens": toks})
+    state = decode_mod.init_decode_state(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, state = decode_mod.decode_step(params, cfg, state,
+                                           toks[:, t:t + 1])
+        outs.append(lg)
+    assert int(state["index"]) == S
+    logits_seq = jnp.concatenate(outs, axis=1)
+    err = float(jnp.max(jnp.abs(logits_par - logits_seq)))
+    assert err < 5e-2, err
+
+
+def test_greedy_generate_prefix_and_continuation(tiny):
+    """greedy_generate echoes the prompt verbatim and continues with the
+    argmax of the full-sequence forward at each step."""
+    cfg, model, params = tiny
+    B, S0, steps = 1, 6, 3
+    prompt = jax.random.randint(jax.random.PRNGKey(11), (B, S0), 0,
+                                cfg.vocab_size)
+    out = decode_mod.greedy_generate(params, cfg, prompt, steps)
+    assert out.shape == (B, S0 + steps)
+    np.testing.assert_array_equal(np.asarray(out[:, :S0]),
+                                  np.asarray(prompt))
+    # reference: grow the sequence through the parallel forward
+    seq = prompt
+    for _ in range(steps):
+        logits, _ = model.apply(params, {"tokens": seq})
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        seq = jnp.concatenate([seq, nxt], axis=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(seq))
+
+
+def test_make_decode_dispatch_contract(tiny):
+    """launch/serve.py's token dispatch adapter obeys the MicroBatcher
+    seam: per-request bool vector, correctness == greedy next-token
+    agreement."""
+    cfg, model, params = tiny
+    n, S0 = 5, 4
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(5), (n, S0), 0, cfg.vocab_size))
+    # targets = the model's own greedy next tokens for half the corpus
+    greedy = np.asarray(decode_mod.greedy_generate(
+        params, cfg, jnp.asarray(prompts), 1)[:, -1])
+    targets = greedy.copy()
+    targets[::2] = (targets[::2] + 1) % cfg.vocab_size   # force misses
+    dispatch = make_decode_dispatch(cfg, prompts, targets)
+    got = dispatch(params, np.arange(n, dtype=np.int64))
+    assert got.dtype == bool and got.shape == (n,)
+    expect = greedy == targets
+    np.testing.assert_array_equal(got, expect)

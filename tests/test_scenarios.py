@@ -41,7 +41,7 @@ def test_every_spec_resolves_to_fl_config():
 
 
 def test_ci_smoke_grid_is_registered():
-    assert len(scenarios.CI_SMOKE_GRID) == 8
+    assert len(scenarios.CI_SMOKE_GRID) == 9
     for name in scenarios.CI_SMOKE_GRID:
         assert name in scenarios.REGISTRY
     # the grid carries one adversarial scenario (ISSUE 3 satellite)
@@ -57,6 +57,8 @@ def test_ci_smoke_grid_is_registered():
     # ... and one upload-codec scenario (ISSUE 7 satellite)
     assert any(scenarios.get(n).codec != "none"
                for n in scenarios.CI_SMOKE_GRID)
+    # ... and one serving scenario (ISSUE 9 satellite)
+    assert any(scenarios.get(n).serve for n in scenarios.CI_SMOKE_GRID)
 
 
 def test_spec_validation():
@@ -120,23 +122,26 @@ def test_run_scenario_result_schema():
     assert res["strategy"] == {
         "plugin": "async",
         "registry_version": STRATEGY_REGISTRY_VERSION}
+    # v2.4: serving off -> explicit null block
+    assert res["serving"] is None
     json.dumps(res)                        # must be JSON-serializable
 
 
 def test_result_schema_backward_compat_read():
     """Schema bump contract (DESIGN.md §6): v1 documents (no attack
     block), v2 documents (no strategy block), v2.1 documents (no
-    communication block), and v2.2 documents (no telemetry block)
-    normalize through `load_result` to the current version, so every
-    consumer reads one shape."""
+    communication block), v2.2 documents (no telemetry block), and v2.3
+    documents (no serving block) normalize through `load_result` to the
+    current version, so every consumer reads one shape."""
     v1 = {"schema_version": 1, "scenario": "legacy",
           "metrics": {"test_accuracy": 0.9}, "async": None}
     doc = scenarios.load_result(v1)
-    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.3
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.4
     assert doc["attack"] is None
     assert doc["strategy"] == {"plugin": None, "registry_version": None}
     assert doc["communication"] is None
     assert doc["telemetry"] is None
+    assert doc["serving"] is None
     assert doc["metrics"]["test_accuracy"] == 0.9
     v2 = {"schema_version": 2, "scenario": "legacy2",
           "spec": {"strategy": "afl"}, "attack": None}
@@ -146,6 +151,7 @@ def test_result_schema_backward_compat_read():
     assert doc["strategy"]["plugin"] == "afl"
     assert doc["strategy"]["registry_version"] is None
     assert doc["communication"] is None
+    assert doc["serving"] is None
     v21 = {"schema_version": 2.1, "scenario": "legacy21", "attack": None,
            "strategy": {"plugin": "hfl", "registry_version": 1}}
     doc = scenarios.load_result(v21)
@@ -153,6 +159,7 @@ def test_result_schema_backward_compat_read():
     assert doc["strategy"]["plugin"] == "hfl"     # v2.1 block preserved
     assert doc["communication"] is None
     assert doc["telemetry"] is None
+    assert doc["serving"] is None
     v22 = {"schema_version": 2.2, "scenario": "legacy22", "attack": None,
            "strategy": {"plugin": "afl", "registry_version": 1},
            "communication": {"codec": "qsgd"}}
@@ -160,6 +167,14 @@ def test_result_schema_backward_compat_read():
     assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
     assert doc["communication"] == {"codec": "qsgd"}  # v2.2 preserved
     assert doc["telemetry"] is None
+    assert doc["serving"] is None
+    v23 = {"schema_version": 2.3, "scenario": "legacy23", "attack": None,
+           "strategy": {"plugin": "afl", "registry_version": 1},
+           "communication": None, "telemetry": {"enabled": False}}
+    doc = scenarios.load_result(v23)
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
+    assert doc["telemetry"] == {"enabled": False}  # v2.3 preserved
+    assert doc["serving"] is None
 
 
 def test_run_scenario_sync_has_null_async_block():

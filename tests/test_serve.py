@@ -1,0 +1,350 @@
+"""Federation-in-the-loop serving subsystem (DESIGN.md §14).
+
+Unit layer: deterministic traffic generation, the micro-batcher's
+dispatch/shed/accounting event loop, double-buffered hot-swap staleness
+semantics, nearest-rank percentiles. E2E layer: training is bitwise
+identical with serving on or off (the §4 rng-isolation contract), the
+three engines emit the same serving block for the same config, and the
+registered serve scenario satisfies the swap/accounting acceptance
+invariants.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import scenarios
+from repro.core.fl_types import FLConfig
+from repro.core.simulation import FederatedSimulation
+from repro.data.synthetic import mnist_like
+from repro.serve import MicroBatcher, ModelBuffer, ServeSession, metrics
+from repro.serve import traffic
+
+
+# ---------------------------------------------------------------------------
+# traffic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arrival", ["poisson", "burst", "diurnal"])
+def test_traffic_deterministic_and_well_formed(arrival):
+    t1, e1 = traffic.generate(arrival, 200.0, 4.0, n_test=37, seed=11)
+    t2, e2 = traffic.generate(arrival, 200.0, 4.0, n_test=37, seed=11)
+    np.testing.assert_array_equal(t1, t2)      # bit-identical re-draw
+    np.testing.assert_array_equal(e1, e2)
+    assert t1.dtype == np.float64 and e1.dtype == np.int64
+    assert len(t1) == len(e1)
+    assert np.all(np.diff(t1) >= 0)            # sorted
+    assert t1[0] >= 0.0 and t1[-1] < 4.0       # inside the horizon
+    assert e1.min() >= 0 and e1.max() < 37
+    # all shapes offer the SAME mean load (within Poisson noise, 6 sigma)
+    expect = 200.0 * 4.0
+    assert abs(len(t1) - expect) < 6.0 * math.sqrt(expect) + 16
+
+
+def test_traffic_seed_and_salt_isolation():
+    ta, _ = traffic.generate("poisson", 100.0, 2.0, n_test=10, seed=0)
+    tb, _ = traffic.generate("poisson", 100.0, 2.0, n_test=10, seed=1)
+    assert len(ta) != len(tb) or not np.array_equal(ta, tb)
+    # the trace folds its own salt: it is NOT the raw seed-0 stream that
+    # the training rng consumes (§4 — serving never perturbs training)
+    raw = np.random.default_rng(0).exponential(1.0 / 100.0, size=len(ta))
+    assert not np.allclose(np.cumsum(raw), ta)
+
+
+def test_traffic_burst_concentrates_mass():
+    t, _ = traffic.generate("burst", 400.0, 4.0, n_test=8, seed=3)
+    period = 4.0 / traffic._BURST_PERIODS
+    phase = np.mod(t, period) / period
+    on = np.mean(phase < traffic._BURST_DUTY)
+    # 25% of the time carries 75% of the load (duty 0.25 at 3x)
+    assert on > 0.6
+
+
+def test_traffic_rejects_unknown_arrival():
+    with pytest.raises(ValueError, match="arrival"):
+        traffic.generate("weibull", 10.0, 1.0, n_test=4, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# hot-swap buffer
+# ---------------------------------------------------------------------------
+
+def test_model_buffer_double_buffer_and_staleness_ledger():
+    buf = ModelBuffer()
+    buf.publish("m0", 0, 0.0)
+    assert buf.acquire() == (0, "m0") and buf.swap_count == 0
+    buf.publish("m1", 1, 1.0)
+    buf.publish("m2", 2, 2.0)
+    assert buf.acquire() == (2, "m2") and buf.swap_count == 2
+    # slots alternate: m1 survives in the inactive slot, m0 is gone
+    assert set(buf._slots) == {"m1", "m2"}
+    assert buf.latest_version_at(0.5) == 0
+    assert buf.latest_version_at(1.0) == 1     # publish at exactly t counts
+    assert buf.latest_version_at(5.0) == 2
+
+
+def test_model_buffer_rejects_non_monotone():
+    buf = ModelBuffer()
+    buf.publish("m0", 1, 1.0)
+    with pytest.raises(AssertionError):
+        buf.publish("m1", 1, 2.0)              # version must increase
+    buf2 = ModelBuffer()
+    buf2.publish("m0", 0, 1.0)
+    with pytest.raises(AssertionError):
+        buf2.publish("m1", 1, 0.5)             # time must not go back
+    with pytest.raises(AssertionError):
+        ModelBuffer().acquire()                # nothing published yet
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher event loop
+# ---------------------------------------------------------------------------
+
+def _batcher(times, **kw):
+    buf = ModelBuffer()
+    buf.publish("init", 0, 0.0)
+    args = dict(max_batch=4, max_wait=0.05, queue_depth=64,
+                service_base=0.004, service_per_item=0.001, buffer=buf)
+    args.update(kw)
+    return MicroBatcher(np.asarray(times, np.float64),
+                        np.zeros(len(times), np.int64), **args), buf
+
+
+def test_batcher_fires_full_batch_immediately():
+    b, _ = _batcher([0.0, 0.001, 0.002, 0.003])
+    b.drain()
+    assert b.batch_sizes == [4]
+    # dispatched the instant the 4th request lands, not at the deadline
+    assert b.done_dispatch == [0.003] * 4
+    assert b.done_finish == [pytest.approx(0.003 + 0.004 + 0.004)] * 4
+    assert b.accounted() and b.in_flight == 0
+
+
+def test_batcher_max_wait_bounds_lone_request():
+    b, _ = _batcher([0.0, 10.0])
+    b.drain()
+    # no fill coming: each lone request waits out max_wait, then fires
+    assert b.batch_sizes == [1, 1]
+    assert b.done_dispatch == [pytest.approx(0.05), pytest.approx(10.05)]
+
+
+def test_batcher_server_busy_serializes_dispatches():
+    b, _ = _batcher([0.0, 0.001], max_batch=1, service_base=0.1,
+                    service_per_item=0.0)
+    b.drain()
+    # single server: the second batch waits for the first to finish,
+    # so its latency includes the queueing delay
+    assert b.done_dispatch == [0.0, pytest.approx(0.1)]
+    assert b.done_finish[1] == pytest.approx(0.2)
+
+
+def test_batcher_sheds_in_arrival_order_and_accounts():
+    # 12 simultaneous arrivals, queue bound 6, slow single server
+    times = [0.001 * i for i in range(12)]
+    b, _ = _batcher(times, max_batch=2, queue_depth=6, max_wait=0.0,
+                    service_base=1.0, service_per_item=0.0)
+    b.drain()
+    assert b.accounted() and b.in_flight == 0
+    assert len(b.done_rid) + len(b.shed_rid) == 12
+    assert b.shed_rid == sorted(b.shed_rid)    # overflow in arrival order
+    assert len(b.shed_rid) > 0
+    # nothing both done and shed
+    assert not (set(b.done_rid) & set(b.shed_rid))
+
+
+def test_batcher_partial_advance_accounts_undelivered():
+    b, _ = _batcher([0.0, 1.0, 2.0, 3.0])
+    b.advance(1.5)
+    assert b.accounted()                       # 2 undelivered still counted
+    assert len(b.done_rid) == 2                # t=0, t=1 dispatched so far
+    b.drain()
+    assert len(b.done_rid) == 4 and b.accounted()
+
+
+def test_batcher_dispatch_fn_scores_requests():
+    buf = ModelBuffer()
+    buf.publish("init", 0, 0.0)
+    seen = []
+
+    def dispatch(params, ei):
+        seen.append((params, np.asarray(ei).copy()))
+        return np.asarray(ei) % 2 == 0
+
+    times = np.asarray([0.0, 0.001, 0.002], np.float64)
+    b = MicroBatcher(times, np.asarray([4, 5, 6], np.int64), max_batch=4,
+                     max_wait=0.01, queue_depth=8, service_base=0.001,
+                     service_per_item=0.0, buffer=buf,
+                     dispatch_fn=dispatch)
+    b.drain()
+    assert len(seen) == 1 and seen[0][0] == "init"
+    np.testing.assert_array_equal(seen[0][1], [4, 5, 6])
+    assert b.done_correct == [True, False, True]
+
+
+def test_hot_swap_never_touches_in_flight_batch():
+    """The acceptance invariant: a batch in service across a round
+    boundary completes on the model it snapshotted at dispatch, is never
+    dropped, and is counted one round stale at completion."""
+    buf = ModelBuffer()
+    buf.publish("w0", 0, 0.0)
+    b = MicroBatcher(np.asarray([0.99]), np.zeros(1, np.int64),
+                     max_batch=1, max_wait=0.0, queue_depth=4,
+                     service_base=0.05, service_per_item=0.0, buffer=buf)
+    b.advance(1.0)               # round boundary: dispatch fired at 0.99
+    buf.publish("w1", 1, 1.0)    # hot-swap mid-service
+    b.drain()
+    assert b.done_version == [0]             # served on the OLD model
+    assert b.done_finish == [pytest.approx(1.04)]   # completed, not dropped
+    assert b.shed_rid == [] and b.accounted()
+    st = metrics.staleness_block(b, buf)
+    assert st == {"mean": 1.0, "max": 1, "hist": {"1": 1}}
+
+
+def test_batcher_dispatch_before_boundary_uses_old_version():
+    buf = ModelBuffer()
+    buf.publish("w0", 0, 0.0)
+    b = MicroBatcher(np.asarray([0.5, 1.5]), np.zeros(2, np.int64),
+                     max_batch=1, max_wait=0.0, queue_depth=4,
+                     service_base=0.01, service_per_item=0.0, buffer=buf)
+    b.advance(1.0)
+    buf.publish("w1", 1, 1.0)
+    b.drain()
+    assert b.done_version == [0, 1]          # each window's own model
+    st = metrics.staleness_block(b, buf)
+    assert st["hist"] == {"0": 2}            # neither straddled a swap
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile_nearest_rank():
+    xs = np.asarray([1.0, 2.0, 3.0, 4.0])
+    assert metrics.percentile(xs, 50.0) == 2.0
+    assert metrics.percentile(xs, 75.0) == 3.0
+    assert metrics.percentile(xs, 99.0) == 4.0
+    assert metrics.percentile(np.asarray([]), 99.0) == 0.0
+
+
+def test_serving_block_shape_and_consistency():
+    b, buf = _batcher([0.01 * i for i in range(20)])
+    b.drain()
+    blk = metrics.serving_block(b, buf, horizon=2.0, arrival="poisson",
+                                qps_target=10.0, round_duration=1.0)
+    assert blk["requests"] == 20
+    assert blk["completed"] + blk["shed"] == blk["requests"]
+    assert blk["qps"] == pytest.approx(blk["completed"] / 2.0)
+    assert blk["batches"] == len(b.batch_sizes)
+    assert 0.0 < blk["batch_occupancy"] <= 1.0
+    lm = blk["latency_ms"]
+    assert lm["p50"] <= lm["p95"] <= lm["p99"] <= lm["max"]
+    assert blk["served_accuracy"] is None    # pure queueing simulation
+    import json
+    json.dumps(blk)                          # result-document safe
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_serve_config_validation():
+    assert FLConfig(serve=True).serve
+    with pytest.raises(ValueError, match="mesh"):
+        FLConfig(serve=True, engine="fused", mesh_devices=2)
+    with pytest.raises(AssertionError):
+        FLConfig(serve=True, serve_arrival="weibull")
+    with pytest.raises(AssertionError):
+        FLConfig(serve=True, serve_queue=2, serve_batch=8)
+    with pytest.raises(AssertionError):
+        FLConfig(serve=True, serve_qps=0.0)
+    with pytest.raises(ValueError, match="arrival"):
+        scenarios.ScenarioSpec("x", "d", serve=True,
+                               serve_arrival="weibull")
+
+
+# ---------------------------------------------------------------------------
+# E2E: engines x serving
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_ds():
+    return mnist_like(seed=0, n_train=256, n_test=128)
+
+
+def _cfg(engine, serve, **kw):
+    base = dict(num_clients=8, num_groups=2, rounds=2, local_epochs=1,
+                local_batch_size=16, lr=0.05, seed=0, participation=1.0,
+                strategy="hfl", serve=serve)
+    base.update(kw)
+    return FLConfig(engine=engine, **base)
+
+
+@pytest.mark.parametrize("engine", ["vectorized", "fused"])
+def test_training_bitwise_identical_with_serving(serve_ds, engine):
+    """§4 contract: the serving side-car draws from its own seed fold
+    and (for fused) rides extra scan outputs — the training computation
+    is EXACTLY the computation of the serve=False run."""
+    r_off = FederatedSimulation(_cfg(engine, False), serve_ds).run()
+    r_on = FederatedSimulation(_cfg(engine, True), serve_ds).run()
+    np.testing.assert_array_equal(r_on.round_train_acc,
+                                  r_off.round_train_acc)
+    np.testing.assert_array_equal(r_on.round_train_loss,
+                                  r_off.round_train_loss)
+    np.testing.assert_array_equal(r_on.round_test_acc,
+                                  r_off.round_test_acc)
+    assert r_on.test_accuracy == r_off.test_accuracy
+    np.testing.assert_array_equal(r_on.confusion, r_off.confusion)
+    assert r_off.extra.get("serving") is None
+    assert r_on.extra["serving"] is not None
+
+
+def test_serving_block_identical_across_engines(serve_ds):
+    """Virtual-clock determinism: per-round publishing (loop,
+    vectorized) and post-scan replay (fused) produce the same serving
+    block. Queueing fields must match EXACTLY; served_accuracy depends
+    on the trained models, which agree across engines to float
+    tolerance only."""
+    blocks = {}
+    for engine in ("loop", "vectorized", "fused"):
+        r = FederatedSimulation(_cfg(engine, True), serve_ds).run()
+        blocks[engine] = dict(r.extra["serving"])
+    accs = {e: b.pop("served_accuracy") for e, b in blocks.items()}
+    assert blocks["loop"] == blocks["vectorized"] == blocks["fused"]
+    assert accs["loop"] is not None
+    for e in ("vectorized", "fused"):
+        assert abs(accs[e] - accs["loop"]) < 0.05, accs
+    blk = blocks["loop"]
+    assert blk["swap_count"] >= 2 - 1          # >= R-1 hot-swaps
+    assert blk["completed"] + blk["shed"] == blk["requests"]
+    assert blk["requests"] > 0
+
+
+def test_registered_serve_scenario_runs(serve_ds):
+    """The CI-smoke serve scenario end to end through run_scenario:
+    schema v2.4 document with a serving block satisfying the acceptance
+    invariants (zero silent drops, >= R-1 swaps)."""
+    res = scenarios.run_scenario("serve-iid-fused")
+    assert res["schema_version"] == scenarios.RESULT_SCHEMA_VERSION
+    blk = res["serving"]
+    rounds = scenarios.get("serve-iid-fused").rounds
+    assert blk["swap_count"] >= rounds - 1
+    assert blk["completed"] + blk["shed"] == blk["requests"]
+    assert blk["served_accuracy"] is not None
+    assert blk["arrival"] == "poisson"
+    assert blk["latency_ms"]["p99"] >= blk["latency_ms"]["p50"] > 0.0
+
+
+def test_serve_session_replay_equals_inline_publish():
+    """The fused executor's REPLAY (all publishes after training) is the
+    same serving computation as publishing between rounds — the property
+    that makes stacking round models in-scan legitimate."""
+    fl = FLConfig(serve=True, rounds=3, num_clients=4,
+                  local_batch_size=16, seed=5)
+    inline = ServeSession(fl, n_events=3, n_test=32, init_params="w0")
+    for v in (1, 2, 3):
+        inline.publish_round(v, f"w{v}")
+    replay = ServeSession(fl, n_events=3, n_test=32, init_params="w0")
+    for v in (1, 2, 3):                        # no interleaved traffic:
+        replay.publish_round(v, f"w{v}")       # same calls, after the fact
+    assert inline.result_block() == replay.result_block()
+    assert inline.result_block()["swap_count"] == 3

@@ -142,3 +142,67 @@ def test_collective_parser():
     assert got["all-gather"] == 64 * 2
     assert got["collective-permute"] == 8 * 8 * 4
     assert got["all-to-all"] == 16 * 16 * 4 + 4 * 4
+
+
+DECODE_SHARD_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp
+    from repro.launch import mesh as mesh_mod
+    from repro.launch.serve import decode_state_shardings
+
+    leaves = {{
+        "kv_div":     jax.ShapeDtypeStruct((2, 2048, 8, 16), jnp.float32),
+        "kv_nondiv":  jax.ShapeDtypeStruct((2, 2048, 6, 16), jnp.float32),
+        "kv_short":   jax.ShapeDtypeStruct((2, 64, 6, 16), jnp.float32),
+        "conv":       jax.ShapeDtypeStruct((2, 3, 8), jnp.float32),
+        "stack_div":  jax.ShapeDtypeStruct((4, 2, 2048, 8, 16),
+                                           jnp.float32),
+        "stack_nondiv": jax.ShapeDtypeStruct((4, 2, 2048, 6, 16),
+                                             jnp.float32),
+        "index":      jax.ShapeDtypeStruct((), jnp.int32),
+    }}
+
+    def dump(mesh):
+        sh = decode_state_shardings(leaves, mesh, None)
+        out = {{}}
+        for k, ns in sh.items():
+            spec = list(ns.spec) + [None] * (leaves[k].ndim
+                                             - len(ns.spec))
+            out[k] = [None if e is None else str(e) for e in spec]
+        return out
+
+    mm = jax.make_mesh((2, 4), ("data", "model"),
+                       **mesh_mod.axis_types_kw(2))
+    md = jax.make_mesh((8,), ("data",), **mesh_mod.axis_types_kw(1))
+    print(json.dumps({{"model_mesh": dump(mm), "data_mesh": dump(md)}}))
+""")
+
+
+def test_decode_state_sharding_rules_subprocess():
+    """Pin decode_state_shardings leaf rules on a real 2x4 host mesh
+    (PR 9 bugfix satellite): divisible heads go over "model",
+    non-divisible heads fall back to cache-sequence sharding (> 1024
+    only), the layer dim of 5-dim stacked caches is NEVER sharded, and
+    meshes without a "model" axis shard batch only (no KeyError)."""
+    code = DECODE_SHARD_SNIPPET.format(src=os.path.abspath(SRC))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["model_mesh"] == {
+        "kv_div":       ["data", None, "model", None],
+        "kv_nondiv":    ["data", "model", None, None],
+        "kv_short":     ["data", None, None, None],
+        "conv":         ["data", None, "model"],
+        "stack_div":    [None, "data", None, "model", None],
+        "stack_nondiv": [None, "data", "model", None, None],
+        "index":        [],
+    }
+    # 1-D client mesh: no "model" axis anywhere, batch-only sharding
+    assert got["data_mesh"]["kv_div"] == [None, None, None, None]  # 2 % 8
+    assert got["data_mesh"]["conv"] == [None, None, None]
+    for spec in got["data_mesh"].values():
+        assert "model" not in spec
