@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test deps lint bench bench-engines scenarios bench-ci attack-demo \
         strategy-demo fused-demo mesh-demo test-mesh comm-demo trace-demo \
-        serve-demo
+        serve-demo churn-demo
 
 deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -74,6 +74,17 @@ trace-demo:
 serve-demo:
 	$(PY) -m repro.core.scenarios --run serve-iid-fused serve-hfl-burst \
 	    serve-qsgd-signflip-median
+
+# churn & fault injection end-to-end (DESIGN.md §15): gossip under 30%
+# crash/rejoin churn with the per-round moving-target ring, HFL under
+# the mid-severity mix with a 60% quorum (held rounds exercised), and
+# the headline acceptance pair — colluding sign-flip vs median where
+# the re-randomized ring (fault_mtd) beats the pinned static ring.
+# Each result document carries the schema-v2.5 "faults" block.
+churn-demo:
+	$(PY) -m repro.core.scenarios --run churn-afl-gossip-mtd \
+	    churn-hfl-quorum churn-signflip-median-mtd \
+	    churn-signflip-median-static
 
 # the mesh-sharded fused executor (DESIGN.md §11): the same fused run
 # single-device vs with the client axis sharded over 8 forced host

@@ -33,7 +33,12 @@ when the on-by-default telemetry (ISSUE 8) costs more than
 when the serving engine (ISSUE 9) drops below `SERVE_QPS_FLOOR`
 steady-state requests/s (the padded-batch dispatch must stay one
 compiled call) or its deterministic virtual-clock p99 exceeds
-`SERVE_P99_CEILING_MS`.
+`SERVE_P99_CEILING_MS`, or when the fault-injection runtime (ISSUE 10)
+regresses: the none-profile fused run losing more than
+`CHURN_PLUMBING_TOLERANCE` of the baseline's fused rounds/s
+(profile="none" must stay structurally inert), or the deterministic
+30%-churn acceptance scenario's macro-F1 falling below
+`CHURN_ACCEPT_F1_FLOOR`.
 
 Besides the gated numbers, the document's `host` block carries
 per-section peak-RSS attribution (`rss_sections`, ISSUE 8 satellite):
@@ -123,6 +128,23 @@ SERVE_QPS_FLOOR = 200.0
 # regression (e.g. a broken max_wait trigger parking requests until the
 # batch fills) overshoots it by integer factors.
 SERVE_P99_CEILING_MS = 100.0
+# ISSUE 10: fault plumbing must be free when off. profile="none"
+# compiles no schedule and every fault seam is a host-level `if`, so
+# the fused traced program is bitwise-identical to a pre-fault build —
+# the gate holds the none-profile fused rounds/s to within 5% of the
+# committed baseline's fused throughput (same measure_fused protocol
+# shape; same-host + same-scale only, like the driver-overhead gate).
+CHURN_PLUMBING_TOLERANCE = 0.05
+# ISSUE 10: the 30%-churn acceptance scenario (colluding sign-flip
+# neighborhoods on the degree-4 gossip ring, median defense, moving-
+# target re-randomization) must keep a macro-F1 floor. The scenario is
+# fully deterministic in (seed, config) — observed 0.277
+# (experiments/churn/) — so like the serve p99 ceiling this cannot
+# flap with host load; the floor sits under the observed figure with
+# headroom for cross-platform fp drift, while a broken degraded path
+# (NaN holds, wrong quorum masking, MTD silently pinned to the static
+# ring) lands far below it — the static twin measures 0.071.
+CHURN_ACCEPT_F1_FLOOR = 0.2
 
 
 def bench_sync(clients, rounds):
@@ -196,6 +218,24 @@ def bench_serve(clients):
     shared like the other helpers (DESIGN.md §14)."""
     from benchmarks.kernel_bench import measure_serve
     return measure_serve(min(clients, 16))
+
+
+def bench_churn(clients, rounds):
+    """Fault-injection section (ISSUE 10): the none-vs-churn fused
+    round-throughput instrument (`kernel_bench.measure_churn`) plus the
+    deterministic 30%-churn acceptance scenario's macro-F1 — the two
+    numbers `compare` gates (plumbing-free-when-off, acceptance floor)."""
+    from benchmarks.kernel_bench import measure_churn
+    from repro.core import scenarios
+    out = measure_churn(clients, rounds)
+    res = scenarios.run_scenario("churn-signflip-median-mtd")
+    out["accept_scenario"] = "churn-signflip-median-mtd"
+    out["accept_f1"] = res["metrics"]["f1"]
+    out["accept_test_accuracy"] = res["metrics"]["test_accuracy"]
+    out["accept_faults"] = {k: res["faults"][k] for k in
+                            ("quorum_failures", "degraded_rounds",
+                             "rejoins", "mean_alive_frac")}
+    return out
 
 
 def bench_fused(clients, rounds):
@@ -332,6 +372,17 @@ def run(scale):
           f"virtual p99 {srv['virtual_p99_ms']:.1f}ms, "
           f"shed {srv['shed_rate']:.1%}", flush=True)
     _rss_mark("serve")
+    # the churn section runs the acceptance scenario (32 clients, 10
+    # rounds) besides the throughput instrument, so quick scale only —
+    # mirroring the mesh/chunked sections
+    churn = bench_churn(C, cfg["fused_rounds"]) if scale == "quick" \
+        else None
+    if churn:
+        print(f"  churn c{C}: none {churn['none_round_s']:.2f}s/round, "
+              f"churn {churn['churn_round_s']:.2f}s/round "
+              f"(active overhead {churn['active_overhead']:+.1%}); "
+              f"accept f1={churn['accept_f1']:.3f}", flush=True)
+        _rss_mark("churn")
     grid = {}
     for name in scenarios.CI_SMOKE_GRID:
         res = scenarios.run_scenario(name)
@@ -360,6 +411,8 @@ def run(scale):
         doc["fused_chunked"] = chunked
     if mesh is not None:
         doc["mesh"] = mesh
+    if churn is not None:
+        doc["churn"] = churn
     return doc
 
 
@@ -473,6 +526,33 @@ def compare(new, baseline, tolerance=0.25, driver_tolerance=0.05):
                 f"serving virtual p99 {srv['virtual_p99_ms']:.1f}ms above "
                 f"the {SERVE_P99_CEILING_MS:.0f}ms ceiling (deterministic "
                 f"batching-policy tail latency regressed)")
+    # fault-injection gates (ISSUE 10): (a) the none-profile fused run
+    # must keep >= 95% of the baseline fused throughput — profile="none"
+    # is structurally inert, so any loss here is fault plumbing leaking
+    # into the hot path. Baseline-relative ABSOLUTE throughput, so
+    # same-host + same-scale only (driver-overhead gate pattern); a
+    # pre-ISSUE-10 baseline's own "fused" section serves as the
+    # reference, since measure_churn's none arm replays that protocol.
+    # (b) the deterministic 30%-churn acceptance macro-F1 floor gates
+    # unconditionally at quick scale when the section is present.
+    if new["scale"] == "quick" and "churn" in new:
+        if same_host:
+            want = (baseline.get("churn", {}).get("none_rounds_per_s")
+                    or baseline.get("fused", {}).get("fused_rounds_per_s"))
+            got = new["churn"]["none_rounds_per_s"]
+            if want and got < want * (1.0 - CHURN_PLUMBING_TOLERANCE):
+                failures.append(
+                    f"fault-plumbing overhead: none-profile fused "
+                    f"{got:.4f} rounds/s < baseline {want:.4f} rounds/s "
+                    f"- {CHURN_PLUMBING_TOLERANCE:.0%} (profile='none' "
+                    f"must stay structurally inert)")
+        if new["churn"]["accept_f1"] < CHURN_ACCEPT_F1_FLOOR:
+            failures.append(
+                f"churn acceptance macro-F1 "
+                f"{new['churn']['accept_f1']:.3f} below the "
+                f"{CHURN_ACCEPT_F1_FLOOR} floor "
+                f"({new['churn']['accept_scenario']} at 30% churn with "
+                f"moving-target re-randomization)")
     # peak-memory gate (ISSUE 5 donation satellite): raw RSS is not
     # portable across hardware/scale, so gate same-host only, like the
     # driver-overhead gate

@@ -373,6 +373,44 @@ def measure_obs(clients=16, rounds=4, reps=5):
     return out
 
 
+def measure_churn(clients, rounds=8, reps=3):
+    """Fault-plumbing cost under the fused executor (ISSUE 10): the same
+    light AFL protocol shape as `measure_fused`, run with
+    `fault_profile="none"` and with an active 30% churn profile,
+    interleaved best-of-`reps` like `measure_obs`.
+
+    The "none" arm is the gated number: profile="none" compiles no
+    schedule and every fault seam is a host-level `if`, so the traced
+    fused program is identical to a pre-fault build — `ci_bench.compare`
+    holds its ABSOLUTE rounds/s to within 5% of the committed baseline's
+    fused throughput (same protocol, same host). The churn arm is
+    recorded for trend only: an active profile legitimately pays for the
+    per-round alive/mix scan inputs and the quorum tree_where holds."""
+    from repro.core.fl_types import FLConfig
+    from repro.core.simulation import FederatedSimulation
+    from repro.data.synthetic import mnist_like
+
+    ds = mnist_like(n_train=clients * 8, n_test=128)
+
+    def _one(profile):
+        fl = FLConfig(strategy="afl", num_clients=clients,
+                      participation=1.0, rounds=rounds, local_epochs=1,
+                      local_batch_size=8, lr=0.05, seed=0, engine="fused",
+                      fault_profile=profile, churn_rate=0.3)
+        return FederatedSimulation(fl, ds).run().build_time_s
+
+    per = {"none": [], "churn": []}
+    for _ in range(reps):
+        for profile in ("none", "churn"):
+            per[profile].append(_one(profile))
+    none_s = min(per["none"]) / rounds
+    churn_s = min(per["churn"]) / rounds
+    return {"none_round_s": none_s, "churn_round_s": churn_s,
+            "none_rounds_per_s": 1.0 / none_s,
+            "churn_rounds_per_s": 1.0 / churn_s,
+            "active_overhead": churn_s / none_s - 1.0}
+
+
 def measure_serve(clients=16, rounds=2, reps=20):
     """Serving section (ISSUE 9): the wall-clock steady-state throughput
     of the compiled padded-batch classify dispatch — the one model call

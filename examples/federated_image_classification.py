@@ -24,6 +24,11 @@ alongside, --no-telemetry runs the untraced driver (results are bitwise
 identical either way). Serving (DESIGN.md §14): --serve attaches the
 federation-in-the-loop serving side-car (--qps/--arrival shape the
 traffic) and prints the serving block — training results never change.
+Churn & faults (DESIGN.md §15): --fault-profile compiles a
+deterministic crash/rejoin/dropout/straggler/flaky schedule from the
+run seed (--churn-rate severity, --quorum-frac degradation threshold,
+--fault-mtd re-randomizes the gossip ring every round) and prints the
+faults block; "none" is structurally inert.
 
     PYTHONPATH=src python examples/federated_image_classification.py \
         --strategy afl --clients 16 --engine vectorized \
@@ -112,6 +117,26 @@ def main():
     ap.add_argument("--arrival", choices=ARRIVALS, default="poisson",
                     help="serving: arrival process shape (same mean "
                          "load; burst/diurnal redistribute it)")
+    from repro.core.faults import FAULT_PROFILES
+    ap.add_argument("--fault-profile", choices=FAULT_PROFILES,
+                    default="none",
+                    help="churn/fault injection (DESIGN.md §15): compile "
+                         "a deterministic per-round fault schedule from "
+                         "the run seed — crash/rejoin churn, transient "
+                         "dropout, straggler slowdown, flaky links, or "
+                         "the mid-severity mix. 'none' is structurally "
+                         "inert (bitwise-identical run)")
+    ap.add_argument("--churn-rate", type=float, default=0.3,
+                    help="fault profile severity: target dead fraction "
+                         "(churn/dropout) or loss rate (flaky)")
+    ap.add_argument("--quorum-frac", type=float, default=0.5,
+                    help="min alive fraction for an aggregation event "
+                         "to commit; below it the event degrades (hold "
+                         "the model / skip the tick, DESIGN.md §15)")
+    ap.add_argument("--fault-mtd", action="store_true",
+                    help="moving-target defense: re-randomize the "
+                         "gossip ring every round so a colluding "
+                         "neighborhood cannot pin its victims")
     ap.add_argument("--curves", action="store_true",
                     help="write per-round curves CSV (paper Figs. 9/11)")
     ap.add_argument("--engine", choices=["loop", "vectorized", "fused"],
@@ -177,7 +202,11 @@ def main():
                       topk_frac=args.topk_frac, quant_bits=args.quant_bits,
                       telemetry=not args.no_telemetry,
                       engine=args.engine, serve=args.serve,
-                      serve_qps=args.qps, serve_arrival=args.arrival)
+                      serve_qps=args.qps, serve_arrival=args.arrival,
+                      fault_profile=args.fault_profile,
+                      churn_rate=args.churn_rate,
+                      quorum_frac=args.quorum_frac,
+                      fault_mtd=args.fault_mtd)
     sim = api.FederatedSimulation(fl, ds)
     if args.non_iid:
         from repro.data.partition import dirichlet_partition
@@ -225,6 +254,15 @@ def main():
               f"staleness mean {srv['staleness']['mean']:.2f} "
               f"max {srv['staleness']['max']}"
               + (f"; served acc {acc:.3f}" if acc is not None else ""))
+    flt = r.extra.get("faults")
+    if flt:
+        print(f"faults:             {flt['profile']} "
+              f"(rate {flt['churn_rate']:.2f}, "
+              f"mtd {'on' if flt['mtd'] else 'off'}): "
+              f"mean alive {flt['mean_alive_frac']:.2f}, "
+              f"{flt['rejoins']} rejoins, "
+              f"{flt['quorum_failures']} quorum failures, "
+              f"{flt['degraded_rounds']} degraded rounds")
     print("confusion matrix:")
     for row in r.confusion:
         print("   " + " ".join(f"{v:4d}" for v in row))

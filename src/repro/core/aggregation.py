@@ -150,7 +150,44 @@ def tree_where(flag, on_true: Params, on_false: Params) -> Params:
 def _stacked_weights(n: int, weights) -> jnp.ndarray:
     w = (jnp.ones((n,), jnp.float32) if weights is None
          else jnp.asarray(weights, jnp.float32))
-    return w / jnp.sum(w)
+    return _safe_normalize(w, n)
+
+
+def _safe_normalize(w: jnp.ndarray, n: int) -> jnp.ndarray:
+    """w / sum(w), guarded against a zero total (an all-masked
+    participant column under fault injection — DESIGN.md §15): the
+    degenerate case degrades to the uniform average instead of NaN-ing
+    the weight sum. Bitwise-preserving: when sum(w) > 0 the selects
+    resolve to exactly the unguarded `w / jnp.sum(w)`."""
+    s = jnp.sum(w)
+    safe = jnp.where(s > 0, w, jnp.ones_like(w))
+    return safe / jnp.where(s > 0, s, jnp.asarray(float(n), jnp.float32))
+
+
+def _row_mask(alive, leaf) -> jnp.ndarray:
+    """(C,) alive mask broadcast as a boolean against a (C, ...) leaf."""
+    m = jnp.asarray(alive, jnp.float32) > 0
+    return m.reshape(m.shape + (1,) * (leaf.ndim - 1))
+
+
+def mask_rows(stacked: Params, alive, fallback: Params) -> Params:
+    """Rows of the stacked pytree where `alive` is 0 are replaced by the
+    broadcast `fallback` pytree (no leading client axis) — the
+    upload-loss seam: a dead participant's slot carries "no update"
+    (the event's center model) into order-statistic defenses
+    (DESIGN.md §15)."""
+    return jax.tree.map(
+        lambda p, f: jnp.where(_row_mask(alive, p), p,
+                               f[None].astype(p.dtype)),
+        stacked, fallback)
+
+
+def tree_where_rows(mask, on_true: Params, on_false: Params) -> Params:
+    """Per-row `jnp.where` between two identically-stacked pytrees with
+    a (C,) boolean row mask (per-group quorum holds in HFL tier 1)."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(_row_mask(mask, a), a, b),
+        on_true, on_false)
 
 
 def fedavg_stacked(stacked: Params, weights=None, *,
@@ -165,12 +202,26 @@ def fedavg_stacked(stacked: Params, weights=None, *,
 def defended_aggregate_stacked(stacked: Params, weights=None, *,
                                defense: str = "none", f: int = 1,
                                tau: float = 10.0, center=None,
-                               interpret=None) -> Params:
+                               interpret=None, alive=None) -> Params:
     """One defended aggregation event on the stack: plain kernel FedAvg
     when `defense` is "none", else the `core.robust` operator family
     (median / trimmed-mean selection kernel, norm_clip with `center`,
     Krum). The single dispatch point every strategy's robust variant
-    funnels through."""
+    funnels through.
+
+    `alive` (fault injection, DESIGN.md §15) is a (C,) 0/1 mask: dead
+    participants' weights are zeroed (survivors renormalize through the
+    guarded normalizer — an all-dead event degrades to `center`) and,
+    when a `center` is given, their rows are substituted by it so
+    order-statistic defenses see "no update" rather than a lost upload's
+    stale parameters. alive=None is the exact pre-fault path."""
+    if alive is not None:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        w = (jnp.ones((n,), jnp.float32) if weights is None
+             else jnp.asarray(weights, jnp.float32))
+        weights = w * jnp.asarray(alive, jnp.float32)
+        if center is not None:
+            stacked = mask_rows(stacked, alive, center)
     if defense in ("none", None):
         return fedavg_stacked(stacked, weights, interpret=interpret)
     from repro.core import robust
@@ -181,7 +232,7 @@ def defended_aggregate_stacked(stacked: Params, weights=None, *,
 
 def hfl_tier1_stacked(stacked: Params, num_groups: int, weights=None, *,
                       defense: str = "none", f: int = 1, tau: float = 10.0,
-                      centers: Params = None, interpret=None):
+                      centers: Params = None, interpret=None, alive=None):
     """Group-server aggregation over the contiguous equal-size groups of
     `topology.hierarchical_groups`: (C, ...) -> ((G, ...) group models,
     (G,) group sample-weight totals) — one kernel call per group.
@@ -189,7 +240,15 @@ def hfl_tier1_stacked(stacked: Params, num_groups: int, weights=None, *,
     A defense applies here, at the first aggregation boundary Byzantine
     clients reach (DESIGN.md §8): each group server robust-aggregates its
     own slice. `centers` is the (G, ...) stacked round-start group models
-    (norm_clip's reference); `f` is the per-group Byzantine allowance."""
+    (norm_clip's reference); `f` is the per-group Byzantine allowance.
+
+    `alive` (fault injection, DESIGN.md §15) masks dead clients out of
+    their group's weights (guarded renormalize; a fully-dead group
+    degrades to its center — the group server holds its round-start
+    model) and substitutes their raveled rows by the group center so
+    order-statistic defenses see "no update". Group TOTALS stay the
+    full sample weights either way: a degraded group server still
+    reports a model at tier 2 with its full population weight."""
     from repro.core import robust
     from repro.kernels import ops as kops
     mat = kops.stacked_ravel(stacked)
@@ -205,12 +264,20 @@ def hfl_tier1_stacked(stacked: Params, num_groups: int, weights=None, *,
     for g in range(num_groups):
         wg = w[g * per:(g + 1) * per]
         gmat = mat[g * per:(g + 1) * per]
+        if alive is not None:
+            alive_g = jnp.asarray(alive, jnp.float32)[g * per:(g + 1) * per]
+            wg_eff = wg * alive_g
+            if center_rows is not None:
+                gmat = jnp.where(alive_g[:, None] > 0, gmat,
+                                 center_rows[g][None])
+        else:
+            wg_eff = wg
         if defense in ("none", None):
-            rows.append(kops.fedavg_aggregate(gmat, wg / jnp.sum(wg),
-                                              interpret=interpret))
+            rows.append(kops.fedavg_aggregate(
+                gmat, _safe_normalize(wg_eff, per), interpret=interpret))
         else:
             rows.append(robust.robust_aggregate(
-                gmat, defense, weights=wg, f=f, tau=tau,
+                gmat, defense, weights=wg_eff, f=f, tau=tau,
                 center=None if center_rows is None else center_rows[g],
                 interpret=interpret))
         totals.append(jnp.sum(wg))
@@ -232,15 +299,20 @@ def hfl_aggregate_stacked(stacked: Params, num_groups: int, weights=None, *,
 
 
 def afl_aggregate_stacked(stacked: Params, weights=None, participate=None, *,
-                          interpret=None) -> Params:
+                          interpret=None, alive=None) -> Params:
     """Masked FedAvg over sampled participants: `participate` is a (C,)
     0/1 mask folded into the kernel weights (non-participants contribute
-    zero; at least one participant required)."""
+    zero; at least one participant required). `alive` (fault injection)
+    folds in the same way — dead participants' uploads are lost on the
+    wire and carry zero weight; the guarded normalizer handles the
+    all-dead edge (DESIGN.md §15)."""
     n = jax.tree.leaves(stacked)[0].shape[0]
     w = (jnp.ones((n,), jnp.float32) if weights is None
          else jnp.asarray(weights, jnp.float32))
     if participate is not None:
         w = w * jnp.asarray(participate, jnp.float32)
+    if alive is not None:
+        w = w * jnp.asarray(alive, jnp.float32)
     return fedavg_stacked(stacked, w, interpret=interpret)
 
 
@@ -288,6 +360,36 @@ def gossip_stacked(stacked: Params, neighbors: List[List[int]], *,
     idx = np.stack([np.asarray([c] + list(nbrs))
                     for c, nbrs in enumerate(neighbors)])       # (C, K)
     gathered = jnp.sort(mat[jnp.asarray(idx)], axis=1)          # (C, K, N)
+    t = (K - 1) // 2 if defense == "median" else min(f, (K - 1) // 2)
+    mixed = jnp.mean(gathered[:, t:K - t], axis=1)
+    return kops.stacked_unravel(stacked, mixed)
+
+
+def masked_gossip_stacked(stacked: Params, *, mix=None, gather_idx=None,
+                          defense: str = "none", f: int = 1,
+                          interpret=None) -> Params:
+    """Gossip under dynamic membership (fault injection, DESIGN.md §15):
+    the per-round twin of `gossip_stacked` whose graph is an ARRAY, not
+    a static neighbor list — the fault schedule precomputes, per round,
+    either the masked row-stochastic mixing matrix `mix` (undefended:
+    dead rows identity, heartbeat-decayed supports, optionally the
+    re-randomized moving-target ring) or the `gather_idx` neighborhood
+    tensor (defended: dead/decayed neighbors substituted by self so the
+    sorted neighborhood keeps its static K). Both the per-round drivers
+    and the fused executor consume the same arrays (there as scan
+    inputs), so the mixing math is engine-bitwise by construction."""
+    from repro.kernels import ops as kops
+    mat = kops.stacked_ravel(stacked)
+    if defense in ("none", None):
+        mixed = kops.masked_gossip_aggregate(
+            mat, jnp.asarray(mix, jnp.float32), interpret=interpret)
+        return kops.stacked_unravel(stacked, mixed)
+    if defense not in ("median", "trimmed_mean"):
+        raise ValueError(f"gossip mixing supports median/trimmed_mean "
+                         f"defenses, not {defense!r} (DESIGN.md §8)")
+    idx = jnp.asarray(gather_idx, jnp.int32)
+    K = idx.shape[1]
+    gathered = jnp.sort(mat[idx], axis=1)                       # (C, K, N)
     t = (K - 1) // 2 if defense == "median" else min(f, (K - 1) // 2)
     mixed = jnp.mean(gathered[:, t:K - t], axis=1)
     return kops.stacked_unravel(stacked, mixed)
@@ -343,7 +445,15 @@ def async_batch_merge(global_params: Params, stacked_updates: Params,
     """Batched staleness-aware merge: fold k same-tick client arrivals
     (leading axis k, per-arrival rates `alphas`) into the server model in
     one kernel pass — exactly equivalent to k sequential `cfl_merge`
-    calls (tests/test_async_engine.py pins the equivalence)."""
+    calls (tests/test_async_engine.py pins the equivalence).
+
+    k = 0 (a tick in which every scheduled arrival dropped) is a defined
+    no-op returning the server model unchanged — the empty weight vector
+    would otherwise feed a zero-denominator staleness merge through the
+    kernel (regression-pinned in tests/test_async_engine.py)."""
+    k = (alphas.shape[0] if hasattr(alphas, "shape") else len(alphas))
+    if k == 0:
+        return global_params
     from repro.kernels import ops as kops
     return kops.merge_aggregate_stacked(
         global_params, stacked_updates, staleness_batch_weights(alphas),
@@ -374,9 +484,14 @@ def mesh_fedavg_stacked(stacked: Params, weights, *, axis: str = "data"
     """Eq. (5) over the SHARDED client axis: each shard reduces its
     local sub-stack, one weighted psum produces the replicated global
     aggregate — the mesh twin of `fedavg_stacked` (AFL star / FedProx /
-    server-optimizer events)."""
+    server-optimizer events). The denominator is guarded against an
+    all-masked federation (fault injection can zero every weight in a
+    round; the quorum hold discards the degenerate value, but it must
+    not be NaN — DESIGN.md §15); the guard is bitwise-inert whenever
+    any weight survives."""
     w = jnp.asarray(weights, jnp.float32)
     den = jax.lax.psum(jnp.sum(w), axis)
+    den = jnp.where(den > 0, den, jnp.float32(1.0))
     return jax.tree.map(
         lambda p: (jax.lax.psum(
             jnp.sum(p.astype(jnp.float32) * _bcast(w, p), axis=0), axis)
@@ -384,12 +499,20 @@ def mesh_fedavg_stacked(stacked: Params, weights, *, axis: str = "data"
         stacked)
 
 
-def hfl_tier1_local(stacked: Params, weights, num_groups_local: int):
+def hfl_tier1_local(stacked: Params, weights, num_groups_local: int, *,
+                    alive=None):
     """HFL tier-1 over groups that nest INSIDE one shard: (C_loc, ...)
     -> ((G_loc, ...) group models, (G_loc,) group weight totals), pure
     per-shard math — NO collective. This is the fused mesh executor's
     tier-1 event (groups are required to align to shards, so the group
-    boundary never crosses a shard boundary; DESIGN.md §11)."""
+    boundary never crosses a shard boundary; DESIGN.md §11).
+
+    `alive` (fault injection, DESIGN.md §15) is the shard-local (C_loc,)
+    0/1 mask: dead clients are zero-weighted in their group's reduction
+    (guarded denominator — a fully-dead group's degenerate value is
+    discarded by the caller's per-group quorum hold, but it must not be
+    NaN). Group TOTALS stay the full sample weights, matching the
+    single-device `hfl_tier1_stacked` semantics."""
     w = jnp.asarray(weights, jnp.float32)
     C_loc = w.shape[0]
     if C_loc % num_groups_local:
@@ -399,13 +522,18 @@ def hfl_tier1_local(stacked: Params, weights, num_groups_local: int):
     per = C_loc // num_groups_local
     wg = w.reshape(num_groups_local, per)
     gw = jnp.sum(wg, axis=1)
+    if alive is not None:
+        wg = wg * jnp.asarray(alive, jnp.float32).reshape(
+            num_groups_local, per)
+    gw_eff = jnp.sum(wg, axis=1)
+    den = jnp.where(gw_eff > 0, gw_eff, jnp.float32(1.0))
 
     def tier1(p):
         q = p.astype(jnp.float32).reshape(
             (num_groups_local, per) + p.shape[1:])
         num = jnp.sum(q * wg.reshape((num_groups_local, per)
                                      + (1,) * (p.ndim - 1)), axis=1)
-        return (num / _bcast(gw, num)).astype(p.dtype)
+        return (num / _bcast(den, num)).astype(p.dtype)
 
     return jax.tree.map(tier1, stacked), gw
 

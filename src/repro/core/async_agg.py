@@ -211,7 +211,32 @@ class AsyncStrategy(strat_mod.Strategy):
 
     def aggregate_event(self, sim, state, plan, uploads):
         fl = self.fl
+        tel = sim.telemetry
+        k = len(plan.participants)
+        taus = plan.meta["taus"]
+        fe = sim.fault_view(plan)
+        state["makespan"] = plan.meta["time"]
+        if k == 0 or (fe is not None and not fe.qok):
+            # a tick batch whose every scheduled arrival dropped (or a
+            # below-quorum batch under fault injection) is a DEFINED
+            # no-op: no merge, no server_step advance, no base_version
+            # bump — the zero-denominator staleness merge that used to
+            # NaN here is unreachable (DESIGN.md §15)
+            tel.counter("async.batches", 1)
+            tel.append_series("batch_size",
+                              0 if fe is None else int(fe.n_alive))
+            tel.append_series("mean_staleness", 0.0)
+            return state
         model = state["model"]
+        alphas = np.asarray(plan.alphas, np.float32)
+        if fe is not None:
+            # a dead arrival's update is lost on the wire: alpha=0 folds
+            # to an exact no-op in the batched-merge weight algebra, so
+            # the surviving merges stay bitwise unchanged
+            alphas = alphas * fe.alive
+            merged = fe.alive_b
+        else:
+            merged = np.ones(k, bool)
         if fl.defense == "norm_clip":
             # every arriving delta is clipped against the batch-start
             # model BEFORE the staleness merge — the batched-merge weight
@@ -219,23 +244,24 @@ class AsyncStrategy(strat_mod.Strategy):
             from repro.core import robust
             uploads = robust.clip_deltas_stacked(model, uploads,
                                                  fl.clip_tau)
-        model = agg.async_batch_merge(
-            model, uploads, np.asarray(plan.alphas, np.float32))
+        model = agg.async_batch_merge(model, uploads, alphas)
         state["model"] = model
-        state["server_step"] += len(plan.participants)
-        # the batch is atomic: every member pulls the post-batch model
-        state["base_version"][plan.participants] = state["server_step"]
-        state["staleness"].extend(plan.meta["taus"])
-        state["makespan"] = plan.meta["time"]
+        n_merged = int(merged.sum())
+        state["server_step"] += n_merged
+        # the batch is atomic: every MERGED member pulls the post-batch
+        # model (a dead client was down — it resyncs when it rejoins)
+        merged_ids = np.asarray(plan.participants, int)[merged]
+        state["base_version"][merged_ids] = state["server_step"]
+        merged_taus = [t for t, m in zip(taus, merged) if m]
+        state["staleness"].extend(merged_taus)
         # tick-batch counters/series (muted during the driver-suppressed
         # warmup dry-runs — DESIGN.md §13)
-        tel = sim.telemetry
-        taus = plan.meta["taus"]
-        tel.counter("async.merges", len(plan.participants))
+        tel.counter("async.merges", n_merged)
         tel.counter("async.batches", 1)
-        tel.append_series("batch_size", len(plan.participants))
+        tel.append_series("batch_size", n_merged)
         tel.append_series("mean_staleness",
-                          float(np.mean(taus)) if taus else 0.0)
+                          float(np.mean(merged_taus)) if merged_taus
+                          else 0.0)
         return state
 
     def round_model(self, state):

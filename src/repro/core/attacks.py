@@ -52,23 +52,39 @@ _ATTACK_SALT = 0x5EED_A77C        # decouples attack keys from model init
 NUM_CLASSES = 10
 
 
-def attacker_ids(num_clients: int, fraction: float, seed: int
-                 ) -> np.ndarray:
+def attacker_ids(num_clients: int, fraction: float, seed: int,
+                 placement: str = "random") -> np.ndarray:
     """The Byzantine subset: `fraction` of the federation, rng-chosen from
     a generator derived from (seed, salt) so the schedule rng (participant
     sampling, visit orders, speeds) is untouched. At least one attacker
-    when fraction > 0; at least one honest client always."""
+    when fraction > 0; at least one honest client always.
+
+    `placement="colluding"` packs the attackers on even client ids
+    instead (0, 2, 4, ...): under a degree-2 static ring every odd
+    victim's neighborhood {c-1, c, c+1} then holds two attackers — the
+    coordinated-neighborhood adversary that captures a per-neighborhood
+    median, and the baseline the moving-target topology re-randomization
+    is measured against (DESIGN.md §15)."""
     if fraction <= 0 or num_clients <= 1:
         return np.empty((0,), int)
     k = min(num_clients - 1, max(1, int(round(fraction * num_clients))))
+    if placement == "colluding":
+        # deterministic: evens first, then odds if the fraction exceeds
+        # half the federation (keeps the count identical to "random")
+        order = list(range(0, num_clients, 2)) + \
+            list(range(1, num_clients, 2))
+        return np.sort(np.asarray(order[:k], int))
+    if placement != "random":
+        raise ValueError(f"unknown attack placement {placement!r} "
+                         f"(expected 'random' or 'colluding')")
     rng = np.random.default_rng([seed, _ATTACK_SALT])
     return np.sort(rng.choice(num_clients, size=k, replace=False))
 
 
-def attacker_mask(num_clients: int, fraction: float, seed: int
-                  ) -> np.ndarray:
+def attacker_mask(num_clients: int, fraction: float, seed: int,
+                  placement: str = "random") -> np.ndarray:
     mask = np.zeros((num_clients,), bool)
-    mask[attacker_ids(num_clients, fraction, seed)] = True
+    mask[attacker_ids(num_clients, fraction, seed, placement)] = True
     return mask
 
 

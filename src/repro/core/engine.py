@@ -246,7 +246,7 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
                    loss_fn, apply_fn, lr, momentum, attack="none",
                    attack_scale=1.0, attack_flags=None, attack_keys=None,
                    defense="none", clip_tau=10.0, codec=None,
-                   codec_keys=None):
+                   codec_keys=None, fault_alive=None, fault_qok=None):
     """One CFL round — the sequential client-to-client continual pass — as
     a single `lax.scan` over clients in visit order.
 
@@ -270,6 +270,14 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
     id) with the codec salt). Only stateless codecs reach here (the
     driver validates); with `codec=None` the traced program is exactly
     the pre-codec one.
+
+    Fault injection (DESIGN.md §15): `fault_alive` is a per-visit (C,)
+    0/1 scan input — a dead visitor trains (rng parity) but its merge is
+    discarded (`tree_where` holds the carried model, matching the loop
+    engine's skipped host merge bitwise); `fault_qok` is the round's
+    quorum flag — False holds the whole round at its start model (the
+    declared degraded action for the redundancy-1 sequential merge).
+    Both None is the exact pre-fault traced program.
 
     Returns (final model, losses (C, T), post-train local accs (C,))."""
     from repro.core import aggregation, attacks, codecs  # deferred
@@ -297,10 +305,16 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
             f"codec_keys (derive them via codecs.upload_keys)")
 
     def visit(model, inputs):
+        inputs = list(inputs)
+        cdata, ex, ey, flag, key = inputs[:5]
+        off = 5
+        ckey = av = None
         if codec is not None:
-            cdata, ex, ey, flag, key, ckey = inputs
-        else:
-            cdata, ex, ey, flag, key = inputs
+            ckey = inputs[off]
+            off += 1
+        if fault_alive is not None:
+            av = inputs[off]
+            off += 1
         local, losses, _ = _local_sgd_scan(model, cdata, opt, loss_fn)
         preds = jnp.argmax(apply_fn(local, ex), axis=-1)
         acc = jnp.mean((preds == ey).astype(jnp.float32))
@@ -311,17 +325,30 @@ def cfl_round_scan(model, data, eval_images, eval_labels, alpha, *,
             local = codecs.roundtrip_tree(codec, local, ckey[None],
                                           base_tree=model)
         if defense == "norm_clip":
-            model = aggregation.defended_cfl_merge(model, local, alpha,
-                                                   clip_tau)
+            merged = aggregation.defended_cfl_merge(model, local, alpha,
+                                                    clip_tau)
         else:
-            model = aggregation.cfl_merge_stacked(model, local, alpha)
-        return model, (losses, acc)
+            merged = aggregation.cfl_merge_stacked(model, local, alpha)
+        if fault_alive is not None:
+            # a dead visitor's merge is discarded (upload lost on the
+            # wire); the carried model passes through bitwise, matching
+            # the loop engine's skipped host merge
+            merged = aggregation.tree_where(av > 0, merged, model)
+        return merged, (losses, acc)
 
+    model0 = model
     xs = (data, eval_images, eval_labels,
           jnp.asarray(attack_flags, bool), attack_keys)
     if codec is not None:
         xs = xs + (jnp.asarray(codec_keys),)
+    if fault_alive is not None:
+        xs = xs + (jnp.asarray(fault_alive, jnp.float32),)
     model, (losses, accs) = jax.lax.scan(visit, model, xs)
+    if fault_qok is not None:
+        # below-quorum round: the declared degraded action holds the
+        # whole round at its start model
+        model = aggregation.tree_where(jnp.asarray(fault_qok, bool),
+                                       model, model0)
     return model, losses, accs
 
 
@@ -471,7 +498,7 @@ class VectorizedClientEngine:
     def cfl_round(self, model, order, data, alpha, *, attack="none",
                   attack_scale=1.0, attack_flags=None, attack_keys=None,
                   defense="none", clip_tau=10.0, codec=None,
-                  codec_keys=None):
+                  codec_keys=None, fault_alive=None, fault_qok=None):
         telemetry.count("engine.cfl_round_dispatch")
         idx = jnp.asarray(np.asarray(order))
         return cfl_round_scan(model, data, self.eval_x[idx], self.eval_y[idx],
@@ -482,4 +509,5 @@ class VectorizedClientEngine:
                               attack_flags=attack_flags,
                               attack_keys=attack_keys, defense=defense,
                               clip_tau=clip_tau, codec=codec,
-                              codec_keys=codec_keys)
+                              codec_keys=codec_keys,
+                              fault_alive=fault_alive, fault_qok=fault_qok)

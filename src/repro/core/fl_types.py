@@ -138,6 +138,30 @@ class FLConfig:
     # the rounds/s overhead is gated at <=5% (benchmarks/ci_bench.py
     # "obs" section). False runs the exact untraced driver.
     telemetry: bool = True
+    # fault injection + dynamic membership (DESIGN.md §15). Names a
+    # profile in `core.faults.FAULT_PROFILES`; "none" builds no schedule
+    # at all (every fault seam is a host-level `if`, so the traced
+    # programs and results stay bitwise identical to a fault-free
+    # build). An active profile compiles, from the run seed through a
+    # private salt, per-round alive masks + heartbeat/rejoin schedules
+    # consumed identically by all engines; aggregation events degrade
+    # gracefully under partial membership (masked-weight renormalize /
+    # hold / skip) gated by `quorum_frac`.
+    fault_profile: str = "none"    # none | churn | dropout | straggler
+                                   # | flaky | mid
+    churn_rate: float = 0.3        # profile severity (dead fraction /
+                                   # loss rate / slow-set fraction)
+    quorum_frac: float = 0.5       # min alive fraction for an event to
+                                   # aggregate (below: degraded action)
+    heartbeat_timeout: int = 1     # missed rounds before neighbors
+                                   # declare a peer failed (decay)
+    fault_mtd: bool = False        # moving-target defense: re-randomize
+                                   # the gossip ring every round
+    # attacker placement: "random" (rng-salted choice — the pre-fault
+    # default, bitwise) or "colluding" (attackers packed on even ring
+    # positions so static-ring neighborhoods are sandwiched — the
+    # adversary the moving-target topology is measured against)
+    attack_placement: str = "random"
     # simulation engine
     engine: str = "loop"           # loop       — per-client Python loop
                                    #              (paper-faithful timing: one
@@ -200,6 +224,18 @@ class FLConfig:
             assert self.serve_service_base >= 0, self.serve_service_base
             assert self.serve_service_per_item >= 0, \
                 self.serve_service_per_item
+        assert isinstance(self.fault_profile, str) and self.fault_profile, \
+            self.fault_profile
+        assert 0.0 <= self.churn_rate <= 1.0, self.churn_rate
+        assert 0.0 <= self.quorum_frac <= 1.0, self.quorum_frac
+        assert self.heartbeat_timeout >= 1, self.heartbeat_timeout
+        assert self.attack_placement in ("random", "colluding"), \
+            self.attack_placement
+        if self.fault_mtd and self.fault_profile == "none":
+            raise ValueError(
+                "fault_mtd re-randomizes the gossip ring from the FAULT "
+                "schedule rng — it needs an active fault_profile "
+                "(DESIGN.md §15); set fault_profile or drop fault_mtd")
         if self.mesh_devices > 1 and self.engine != "fused":
             raise ValueError(
                 "mesh_devices only applies to the fused executor "

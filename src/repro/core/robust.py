@@ -52,9 +52,14 @@ __all__ = ["DEFENSES", "pairwise_sq_dists", "krum_scores", "krum_select",
 
 
 def _norm_weights(C: int, weights):
+    # guarded against a zero total (an all-masked participant column
+    # under fault injection — DESIGN.md §15): degrades to the uniform
+    # average instead of NaN-ing; bitwise-inert when the sum is positive
     w = (jnp.ones((C,), jnp.float32) if weights is None
          else jnp.asarray(weights, jnp.float32))
-    return w / jnp.sum(w)
+    s = jnp.sum(w)
+    safe = jnp.where(s > 0, w, jnp.ones_like(w))
+    return safe / jnp.where(s > 0, s, jnp.float32(C))
 
 
 # ---------------------------------------------------------------------------

@@ -32,11 +32,15 @@ import os
 from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.codecs import CODEC_REGISTRY_VERSION, codec_names, get_codec
+from repro.core.faults import FAULT_PROFILES
 from repro.core.fl_types import ARRIVALS, ATTACKS, DEFENSES
 from repro.core.strategies import (STRATEGY_REGISTRY_VERSION, get_strategy,
                                    strategy_names)
 
-# v2.4: adds the "serving" block (federation-in-the-loop serving —
+# v2.5: adds the "faults" block (churn-tolerant runtime — DESIGN.md §15:
+# fault profile + schedule statistics, churn/rejoin counts, quorum
+# failures, degraded rounds; null when fault_profile="none"). v2.4
+# added the "serving" block (federation-in-the-loop serving —
 # DESIGN.md §14: virtual-clock qps, latency percentiles, shed rate,
 # batch occupancy, hot-swap count, served-staleness histogram; null
 # when serving is off). v2.3 added the "telemetry" block (per-phase
@@ -48,7 +52,7 @@ from repro.core.strategies import (STRATEGY_REGISTRY_VERSION, get_strategy,
 # registry version; null for dense runs); v2.1 added the "strategy"
 # block (plugin name + registry version); v2 added the "attack" block.
 # Older documents are still readable through `load_result`.
-RESULT_SCHEMA_VERSION = 2.4
+RESULT_SCHEMA_VERSION = 2.5
 
 # One output-dir convention for every result/curve writer: the example
 # CLI's curves, `--json` grid dumps, and experiment artifacts all land
@@ -127,9 +131,18 @@ class ScenarioSpec:
     attack: str = "none"             # core/attacks.py
     attack_fraction: float = 0.25
     attack_scale: float = 1.0
+    attack_placement: str = "random"  # random | colluding (DESIGN.md §15)
     defense: str = "none"            # core/robust.py
     defense_f: int = 0               # 0 = derive from attack_fraction
     clip_tau: float = 10.0
+    # fault injection / dynamic membership (DESIGN.md §15): named
+    # profiles compiled from the seed into per-round schedules;
+    # "none" is structurally inert (bitwise the pre-fault run)
+    fault_profile: str = "none"      # core/faults.py FAULT_PROFILES
+    churn_rate: float = 0.3
+    quorum_frac: float = 0.5
+    heartbeat_timeout: int = 1
+    fault_mtd: bool = False          # per-round gossip-ring re-random.
     # upload codec (DESIGN.md §12)
     codec: str = "none"              # core/codecs.py registry
     topk_frac: float = 0.1           # topk: fraction of coords shipped
@@ -198,6 +211,19 @@ class ScenarioSpec:
             raise ValueError(
                 f"{self.name}: unknown arrival process "
                 f"{self.serve_arrival!r} (expected one of {ARRIVALS})")
+        if self.fault_profile not in FAULT_PROFILES:
+            raise ValueError(
+                f"{self.name}: unknown fault profile "
+                f"{self.fault_profile!r} (expected one of "
+                f"{FAULT_PROFILES})")
+        if self.fault_mtd and self.topology != "ring":
+            raise ValueError(
+                f"{self.name}: fault_mtd re-randomizes the GOSSIP ring "
+                f"per round — it needs topology='ring' (DESIGN.md §15)")
+        if self.attack_placement not in ("random", "colluding"):
+            raise ValueError(
+                f"{self.name}: unknown attack placement "
+                f"{self.attack_placement!r} (expected random|colluding)")
 
     def to_fl_config(self):
         """The underlying FLConfig: `strategy` resolves 1:1 through the
@@ -220,8 +246,14 @@ class ScenarioSpec:
             server_lr=self.server_lr,
             server_momentum=self.server_momentum,
             attack=self.attack, attack_fraction=self.attack_fraction,
-            attack_scale=self.attack_scale, defense=self.defense,
+            attack_scale=self.attack_scale,
+            attack_placement=self.attack_placement,
+            defense=self.defense,
             defense_f=self.defense_f, clip_tau=self.clip_tau,
+            fault_profile=self.fault_profile,
+            churn_rate=self.churn_rate, quorum_frac=self.quorum_frac,
+            heartbeat_timeout=self.heartbeat_timeout,
+            fault_mtd=self.fault_mtd,
             codec=self.codec, topk_frac=self.topk_frac,
             quant_bits=self.quant_bits, telemetry=self.telemetry,
             serve=self.serve, serve_qps=self.serve_qps,
@@ -490,6 +522,54 @@ register(ScenarioSpec(
     attack="sign_flip", attack_scale=4.0, defense="median", serve=True,
     serve_arrival="diurnal"))
 
+# churn-tolerant runtime (DESIGN.md §15): dynamic-membership scenarios.
+# The acceptance PAIR is `churn-signflip-median-mtd` vs its `-static`
+# twin — identical data/schedule/seed/churn, only the per-round
+# moving-target ring re-randomization toggles, so the macro-F1 delta
+# isolates what MTD buys against a COLLUDING sign-flip neighborhood
+# (attackers placed to sandwich every other ring position; median over
+# a degree-2 neighborhood breaks when 2 of 3 members collude, and the
+# re-randomized ring makes that sandwich a transient instead of a
+# permanent fixture). ISSUE 10 acceptance: 30% churn, no NaN, MTD
+# recovers a positive macro-F1 margin over the static ring.
+register(ScenarioSpec(
+    "churn-afl-gossip-mtd", "clean gossip ring under 30% crash/rejoin "
+    "churn with per-round moving-target re-randomization, fused "
+    "executor (fault schedule as precomputed scan inputs)",
+    strategy="afl", topology="ring", engine="fused", participation=1.0,
+    fault_profile="churn", churn_rate=0.3, fault_mtd=True))
+register(ScenarioSpec(
+    "churn-hfl-quorum", "centralized HFL under mid-severity faults with "
+    "a strict quorum: below-quorum groups hold their round-start model, "
+    "below-quorum rounds hold the hierarchy",
+    strategy="hfl", topology="hierarchical", local_epochs=2,
+    fault_profile="mid", quorum_frac=0.6))
+# acceptance-pair base (DESIGN.md §15): degree-4 ring + scale 1.5 is
+# the tuned operating point. At degree 4 with colluding even-id
+# placement every attacker row carries self + two attacker neighbors =
+# 3 corrupt of 5 gather slots — exactly saturating the median window
+# deterministically on the static ring — while per-round re-
+# randomization (fault_mtd) drops attacker neighborhoods below the
+# threshold most rounds. Scale 1.5 sits past the static ring's
+# destruction cliff but inside the MTD ring's recovery region
+# (observed: mtd f1 0.277 vs static 0.071; at degree 2 the two arms
+# are nearly indistinguishable because dead-neighbor self-substitution
+# keeps ~as many attacker rows corrupt either way).
+_CHURN32 = dict(_ACC32, topology="ring", attack="sign_flip",
+                attack_scale=1.5, attack_placement="colluding",
+                defense="median", gossip_neighbors=4,
+                fault_profile="churn", churn_rate=0.3)
+register(ScenarioSpec(
+    "churn-signflip-median-mtd", "32-client acceptance run: colluding "
+    "sign-flip neighborhoods on the gossip ring under 30% churn, median "
+    "defense, WITH per-round moving-target re-randomization",
+    fault_mtd=True, **_CHURN32))
+register(ScenarioSpec(
+    "churn-signflip-median-static", "static-ring twin of "
+    "churn-signflip-median-mtd (the colluding sandwich persists every "
+    "round — the baseline MTD is measured against)",
+    fault_mtd=False, **_CHURN32))
+
 # the CI bench-smoke grid: one sync-centralized, one sync-decentralized,
 # one async-heterogeneous, one adversarial scenario, one scenario per
 # PR 4 strategy plugin family, one fused-executor scenario, one
@@ -582,6 +662,7 @@ def run_scenario(scenario: Union[str, ScenarioSpec],
         "communication": comm_block,
         "telemetry": r.extra.get("telemetry"),
         "serving": r.extra.get("serving"),
+        "faults": r.extra.get("faults"),
     }
 
 
@@ -596,30 +677,37 @@ def load_result(doc: Dict) -> Dict:
     dense (uncompressed) runs; v2.2 documents (pre-observability) carry
     no "telemetry" block — they read as untraced runs; v2.3 documents
     (pre-serving) carry no "serving" block — they read as train-only
-    runs."""
+    runs; v2.4 documents (pre-faults) carry no "faults" block — they
+    read as fault-free runs."""
     v = doc.get("schema_version")
     if v == RESULT_SCHEMA_VERSION:
         return doc
+    if v == 2.4:
+        return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
+                "faults": None}
     if v == 2.3:
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
-                "serving": None}
+                "serving": None, "faults": None}
     if v == 2.2:
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
-                "telemetry": None, "serving": None}
+                "telemetry": None, "serving": None, "faults": None}
     if v == 2.1:
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
-                "communication": None, "telemetry": None, "serving": None}
+                "communication": None, "telemetry": None, "serving": None,
+                "faults": None}
     if v == 2:
         plugin = (doc.get("spec") or {}).get("strategy")
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
                 "strategy": {"plugin": plugin, "registry_version": None},
-                "communication": None, "telemetry": None, "serving": None}
+                "communication": None, "telemetry": None, "serving": None,
+                "faults": None}
     if v == 1:
         plugin = (doc.get("spec") or {}).get("strategy")
         return {**doc, "schema_version": RESULT_SCHEMA_VERSION,
                 "attack": None,
                 "strategy": {"plugin": plugin, "registry_version": None},
-                "communication": None, "telemetry": None, "serving": None}
+                "communication": None, "telemetry": None, "serving": None,
+                "faults": None}
     raise ValueError(f"unknown result schema_version {v!r}")
 
 
@@ -638,7 +726,21 @@ def main(argv: Optional[List[str]] = None):
     ap.add_argument("--trace-out", metavar="PATH",
                     help="write the run's Chrome-trace JSON (single "
                          "--run scenario only; open in Perfetto)")
+    ap.add_argument("--fault-profile", choices=FAULT_PROFILES,
+                    help="override every selected scenario's fault "
+                         "profile (DESIGN.md §15; the chaos CI job runs "
+                         "the smoke grid with 'mid')")
+    ap.add_argument("--churn-rate", type=float,
+                    help="override the fault schedule's churn/severity "
+                         "rate (fraction in [0,1])")
+    ap.add_argument("--quorum-frac", type=float,
+                    help="override the quorum threshold fraction an "
+                         "aggregation event needs to proceed")
     args = ap.parse_args(argv)
+    overrides = {k: v for k, v in (("fault_profile", args.fault_profile),
+                                   ("churn_rate", args.churn_rate),
+                                   ("quorum_frac", args.quorum_frac))
+                 if v is not None}
     if args.trace_out and not (args.run and len(args.run) == 1
                                and not args.grid):
         ap.error("--trace-out needs exactly one --run scenario")
@@ -656,7 +758,12 @@ def main(argv: Optional[List[str]] = None):
     todo = list(args.run or []) + (list(CI_SMOKE_GRID) if args.grid else [])
     results = []
     for name in todo:
-        res = run_scenario(name, trace_out=args.trace_out)
+        spec = get(name)
+        if overrides:
+            # dataclasses.replace re-runs __post_init__, so an invalid
+            # override combination fails loudly before any training
+            spec = dataclasses.replace(spec, **overrides)
+        res = run_scenario(spec, trace_out=args.trace_out)
         results.append(res)
         m, t = res["metrics"], res["timing"]
         print(f"{name}: test_acc={m['test_accuracy']:.3f} "

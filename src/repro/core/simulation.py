@@ -58,6 +58,7 @@ import numpy as np
 from repro.core import attacks
 from repro.core import codecs as codecs_mod
 from repro.core import engine as engine_mod
+from repro.core import faults as faults_mod
 from repro.core import strategies as strat_mod
 from repro.core import aggregation
 from repro.kernels import ops
@@ -332,12 +333,25 @@ class FederatedSimulation:
                                                      self.model_dim)
             # one jitted round-trip shared by all per-round events
             self._codec_apply = jax.jit(self.codec.scan_encode_decode)
+        # fault-injection schedule (DESIGN.md §15). fault_profile="none"
+        # leaves `self.faults` as None and every fault seam is a
+        # host-level `if` — the exact pre-fault code path, bitwise
+        # (mirrors the codec gate above). The schedule derives from its
+        # own salted generator, so the run rng never shifts.
+        if fl.fault_profile not in faults_mod.FAULT_PROFILES:
+            raise ValueError(
+                f"unknown fault profile {fl.fault_profile!r} "
+                f"(expected one of {faults_mod.FAULT_PROFILES})")
+        self.faults = faults_mod.compile_schedule(
+            fl, n_events=self.strategy.num_events(self),
+            event_size=self.strategy.event_size())
+        self._fault_log: Dict[int, Any] = {}
         # Byzantine subset: drawn from a dedicated generator (never the
         # schedule rng) so the attack axis leaves the DESIGN.md §4 parity
         # contract intact
         self.attack_mask = (
             attacks.attacker_mask(fl.num_clients, fl.attack_fraction,
-                                  fl.seed)
+                                  fl.seed, placement=fl.attack_placement)
             if fl.attack != "none" else np.zeros(fl.num_clients, bool))
         self.attackers = np.flatnonzero(self.attack_mask)
         self.opt = optimizers.sgd(fl.lr, momentum=fl.momentum)
@@ -580,6 +594,19 @@ class FederatedSimulation:
             self.tel_sync(out)
         return out
 
+    def fault_view(self, plan):
+        """The plan's event-level fault view (DESIGN.md §15), or None
+        when fault injection is off. Pure precomputed-numpy indexing, so
+        strategies may call it from aggregation events and warmup
+        dry-runs alike; every call logs the view into `_fault_log`
+        (idempotently — the schedule is immutable), which feeds the
+        result document's `faults` block and the serving quorum gate."""
+        if self.faults is None:
+            return None
+        fe = self.faults.event_view(plan.event, plan.participants)
+        self._fault_log[plan.event] = fe
+        return fe
+
     def _reset_codec(self):
         """Re-zero codec state + wire log (warmups dry-run the transport
         to compile it, which must not leak residuals/bytes into the
@@ -604,6 +631,14 @@ class FederatedSimulation:
     def _sequential_round(self, model, order, event, alpha, spec, rng):
         fl = self.fl
         codec = self.codec
+        # faults in the sequential pass (DESIGN.md §15): a dead visitor
+        # still trains (rng parity) but its merge is discarded — the
+        # carried model passes through unchanged; a below-quorum round
+        # reverts to its start model
+        fe = (self.faults.event_view(event, order)
+              if self.faults is not None else None)
+        if fe is not None:
+            self._fault_log[event] = fe
         ckeys = (codecs_mod.upload_keys(fl.seed, event,
                                         np.asarray(order, np.int32))
                  if codec is not None else None)
@@ -624,32 +659,40 @@ class FederatedSimulation:
                 attack_scale=fl.attack_scale,
                 attack_flags=self.attack_mask[np.asarray(order, int)],
                 attack_keys=keys, defense=fl.defense,
-                clip_tau=fl.clip_tau, codec=codec, codec_keys=ckeys)
+                clip_tau=fl.clip_tau, codec=codec, codec_keys=ckeys,
+                fault_alive=None if fe is None else fe.alive,
+                fault_qok=None if fe is None else np.bool_(fe.qok))
             return (model, np.asarray(losses[:, -eng.nb:]).mean(axis=1),
                     np.asarray(accs))
         attacking = fl.attack not in ("none", "label_flip")
         key = attacks.event_key(fl.seed, event)
         losses, accs = [], []
+        model0 = model
         for i, c in enumerate(order):
             local, loss, acc = self._local_train(model, c, spec=spec)
-            if attacking and self.attack_mask[c]:
-                # base = the model this visit pulled (the carried state),
-                # exactly the in-scan base of the vectorized pass
-                local = attacks.corrupt_tree(
-                    local, model, True, jax.random.fold_in(key, int(c)),
-                    kind=fl.attack, scale=fl.attack_scale)
-            if codec is not None:
-                # wire seam per visit: the merged update is the decoded
-                # encoding of the (corrupted) local model, keyed like the
-                # vectorized pass (absolute client id)
-                local = codecs_mod.roundtrip_tree(
-                    codec, local, ckeys[i][None], base_tree=model)
-            if fl.defense == "norm_clip":
-                from repro.core import robust
-                local = robust.clip_update(model, local, fl.clip_tau)
-            model = aggregation.cfl_merge(model, local, alpha)
+            if fe is None or fe.alive_b[i]:
+                if attacking and self.attack_mask[c]:
+                    # base = the model this visit pulled (the carried
+                    # state), exactly the in-scan base of the vectorized
+                    # pass
+                    local = attacks.corrupt_tree(
+                        local, model, True,
+                        jax.random.fold_in(key, int(c)),
+                        kind=fl.attack, scale=fl.attack_scale)
+                if codec is not None:
+                    # wire seam per visit: the merged update is the
+                    # decoded encoding of the (corrupted) local model,
+                    # keyed like the vectorized pass (absolute client id)
+                    local = codecs_mod.roundtrip_tree(
+                        codec, local, ckeys[i][None], base_tree=model)
+                if fl.defense == "norm_clip":
+                    from repro.core import robust
+                    local = robust.clip_update(model, local, fl.clip_tau)
+                model = aggregation.cfl_merge(model, local, alpha)
             losses.append(loss)
             accs.append(acc)
+        if fe is not None and not fe.qok:
+            model = model0
         return model, losses, accs
 
     # -- warmup (DESIGN.md §3: compilation stays out of the timers) ---------
@@ -750,9 +793,16 @@ class FederatedSimulation:
                                 strat.round_model(state))
                 if serve_sess is not None:
                     # round boundary: serve the window's traffic on the
-                    # old model, then hot-swap the fresh aggregate in
-                    serve_sess.publish_round(ev + 1,
-                                             strat.round_model(state))
+                    # old model, then hot-swap the fresh aggregate in —
+                    # unless the round failed quorum, in which case
+                    # NOTHING publishes and the staleness histogram
+                    # reflects the held version (DESIGN.md §15)
+                    fe = self._fault_log.get(ev)
+                    if fe is not None and not fe.qok:
+                        serve_sess.hold_round(ev + 1)
+                    else:
+                        serve_sess.publish_round(ev + 1,
+                                                 strat.round_model(state))
         if strat.mean_train_acc_over_events:
             train_acc = float(np.mean(all_accs)) if all_accs else 0.0
         return self._classify_and_result(state, curves, train_acc,
@@ -821,6 +871,18 @@ class FederatedSimulation:
                   "event": jnp.arange(R, dtype=jnp.int32)}
             for key, val in strat.scan_extra_xs(self, R).items():
                 xs[key] = jnp.asarray(val)
+            if self.faults is not None:
+                # fault schedule as precomputed scan inputs (DESIGN.md
+                # §15): alive masks, quorum flags and — per strategy —
+                # group quorums / gossip mixing arrays, the SAME numpy
+                # views the per-round drivers index, so loop == vec ==
+                # fused stays bitwise under an active profile
+                for key, val in self.faults.scan_xs(
+                        pids_l, **strat.fault_scan_kwargs()).items():
+                    xs[key] = jnp.asarray(val)
+                for ev in range(R):
+                    self._fault_log[ev] = self.faults.event_view(
+                        ev, pids_l[ev])
             codec_state = None
             if self.codec is not None:
                 # codec rng hoisted like the attack keys: one (k, 2) key
@@ -964,6 +1026,12 @@ class FederatedSimulation:
             # virtual times — the serving block is engine-independent
             with tel.span("serve_replay", cat="serve", rounds=R):
                 for ev in range(R):
+                    fe = self._fault_log.get(ev)
+                    if fe is not None and not fe.qok:
+                        # quorum-failed round: nothing published live
+                        # either — replay the hold (DESIGN.md §15)
+                        serve_sess.hold_round(ev + 1)
+                        continue
                     serve_sess.publish_round(
                         ev + 1,
                         jax.tree.map(lambda l, _e=ev: l[_e],
@@ -1039,7 +1107,8 @@ class FederatedSimulation:
         # tensors shard dim 1; strategy extra xs are per-round scalars
         # (replicated) by the supports_mesh contract
         xs_specs = {k: (P(None, "data")
-                        if k in ("pids", "idx", "flags", "keys") else P())
+                        if k in ("pids", "idx", "flags", "keys",
+                                 "fault_alive") else P())
                     for k in xs}
         consts_specs = {k: (P() if k in ("x_test", "y_test")
                             else P("data")) for k in consts}
@@ -1101,6 +1170,10 @@ class FederatedSimulation:
         extra = dict(strat.extra_result(self, state))
         if self.codec is not None:
             extra["communication"] = self._communication_block()
+        if self.faults is not None:
+            # schema-v2.5 faults block (DESIGN.md §15) — absent when
+            # fault_profile="none", like the communication block above
+            extra["faults"] = self._faults_block()
         serve_sess = getattr(self, "_serve_session", None)
         if serve_sess is not None:
             # drains the tail traffic + summarizes (DESIGN.md §14);
@@ -1166,6 +1239,25 @@ class FederatedSimulation:
             init_params=self.init_params, dispatch_fn=dispatch,
             telemetry=self.telemetry)
         return self._serve_session
+
+    def _faults_block(self) -> Dict[str, Any]:
+        """The schema-v2.5 `faults` result block (DESIGN.md §15):
+        schedule-level statistics (deterministic in (seed, profile)) plus
+        the run's observed event log — quorum failures, degraded rounds
+        and the mean alive fraction over the events actually driven."""
+        block = self.faults.schedule_stats()
+        log = self._fault_log
+        fails = sorted(ev for ev, fe in log.items() if not fe.qok)
+        degraded = sorted(ev for ev, fe in log.items()
+                          if fe.n_alive < len(fe.alive))
+        block["events_logged"] = len(log)
+        block["quorum_failures"] = len(fails)
+        block["quorum_failed_events"] = fails
+        block["degraded_rounds"] = len(degraded)
+        block["mean_event_alive_frac"] = (
+            float(np.mean([fe.n_alive / max(1, len(fe.alive))
+                           for fe in log.values()])) if log else 1.0)
+        return block
 
     def _communication_block(self) -> Dict[str, Any]:
         """The byte-count cost model (DESIGN.md §12), assembled from the

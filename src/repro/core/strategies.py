@@ -226,13 +226,32 @@ class Strategy:
                 plan = self.select_participants(sim, state, event, rng)
                 spec = self.local_spec(sim, state, plan)
             tel.append_series("participants", len(plan.participants))
+            fargs = self._fault_telemetry(sim, plan)
             uploads, losses, accs = sim.local_train(plan, spec, rng)
             uploads = sim.corrupt(uploads, plan)
             uploads = sim.transport(uploads, plan)
-            with tel.span("aggregate", event=event):
+            with tel.span("aggregate", event=event, **fargs):
                 state = self.aggregate_event(sim, state, plan, uploads)
                 sim.tel_sync(state)
         return state, accs, losses
+
+    def _fault_telemetry(self, sim, plan) -> Dict[str, Any]:
+        """Record the event's fault view in telemetry (DESIGN.md §15):
+        churn/quorum counters plus the span annotations returned for the
+        aggregate span. No-op ({}) when fault injection is off."""
+        fe = sim.fault_view(plan)
+        if fe is None:
+            return {}
+        tel = sim.telemetry
+        tel.append_series("alive_clients", fe.n_alive)
+        dead = len(plan.participants) - fe.n_alive
+        if dead:
+            tel.counter("faults.lost_uploads", dead)
+        if fe.rejoined:
+            tel.counter("faults.rejoins", fe.rejoined)
+        if not fe.qok:
+            tel.counter("faults.quorum_failures", 1)
+        return {"alive": fe.n_alive, "qok": fe.qok}
 
     def warmup(self, sim):
         """Compile every program the timed driver loop will dispatch
@@ -331,6 +350,14 @@ class Strategy:
     def scan_extra_xs(self, sim, n_events: int) -> Dict[str, Any]:
         """Additional per-round scan inputs, each with leading dim
         n_events (e.g. HFL's dissemination flag)."""
+        return {}
+
+    def fault_scan_kwargs(self) -> Dict[str, Any]:
+        """`FaultSchedule.scan_xs` kwargs for the fused precompute
+        (DESIGN.md §15): which per-round fault arrays this strategy's
+        `scan_aggregate` consumes beyond the universal alive-mask and
+        quorum flag (HFL adds the per-group quorum flags, gossip AFL the
+        per-round mixing matrices / gather indices)."""
         return {}
 
     def scan_bases(self, fx, carry, xs) -> Params:
@@ -480,18 +507,48 @@ class HFLStrategy(Strategy):
 
     def aggregate_event(self, sim, state, plan, uploads):
         fl = self.fl
+        fe = sim.fault_view(plan)
+        if fe is not None and not fe.qok:
+            # below-quorum round (DESIGN.md §15): the declared degraded
+            # action holds the whole hierarchy — groups, global AND the
+            # serving state — at its round-start values, bitwise what the
+            # fused scan's tree_where(qok, ...) keeps
+            return {"groups": state["groups"], "global": state["global"],
+                    "last": self._held_last(sim, state)}
         w = np.asarray(sim.weights, np.float32)
         defkw = sim.defense_kwargs(self.event_size())
+        alive = None if fe is None else fe.alive
         groups, gw = agg.hfl_tier1_stacked(
             uploads, fl.num_groups, w, centers=plan.meta["start_groups"],
-            **defkw)
+            alive=alive, **defkw)
+        if fe is not None:
+            # per-group quorum: a below-quorum group server holds its
+            # round-start model (it still enters tier 2 at full weight —
+            # group totals are population sizes, not survivor counts)
+            gqok = sim.faults.group_qok(plan.event, plan.participants,
+                                        fl.num_groups)
+            groups = agg.tree_where_rows(gqok, groups,
+                                         plan.meta["start_groups"])
         global_model = state["global"]
         if ((plan.event + 1) % fl.hfl_global_every == 0
                 or plan.event == fl.rounds - 1):
             global_model = agg.fedavg_stacked(groups, gw)
             groups = engine_mod.replicate_tree(global_model, fl.num_groups)
-        return {"groups": groups, "global": global_model,
-                "last": (uploads, plan.meta["start_groups"])}
+        last = ((uploads, plan.meta["start_groups"]) if fe is None
+                else (uploads, plan.meta["start_groups"], fe.alive))
+        return {"groups": groups, "global": global_model, "last": last}
+
+    def _held_last(self, sim, state):
+        """The serving tuple a quorum-failed round holds: the previous
+        event's, or — when round 0 itself fails quorum — the same init
+        values the fused carry starts from (uniform init uploads re-
+        aggregate to the init model, so serving stays well-defined)."""
+        if state["last"] is not None:
+            return state["last"]
+        fl = self.fl
+        return (engine_mod.replicate_tree(sim.init_params, fl.num_clients),
+                engine_mod.replicate_tree(sim.init_params, fl.num_groups),
+                np.ones((fl.num_clients,), np.float32))
 
     def round_model(self, state):
         return state["global"]
@@ -501,9 +558,28 @@ class HFLStrategy(Strategy):
         fl = self.fl
         w = np.asarray(sim.weights, np.float32)
         defkw = sim.defense_kwargs(self.event_size())
-        uploads, starts = state["last"]
-        return lambda: agg.hfl_aggregate_stacked(
-            uploads, fl.num_groups, w, centers=starts, **defkw)
+        last = state["last"]
+        if len(last) == 2:
+            uploads, starts = last
+            return lambda: agg.hfl_aggregate_stacked(
+                uploads, fl.num_groups, w, centers=starts, **defkw)
+        # fault injection active: re-run the degraded tiers exactly as
+        # the round did — alive-masked tier 1, per-group quorum holds,
+        # full-weight tier 2 (DESIGN.md §15)
+        from repro.core import faults as faults_mod
+        uploads, starts, alive = last
+        per = fl.num_clients // fl.num_groups
+        thr = faults_mod.quorum_threshold(per, fl.quorum_frac)
+        gqok = (np.asarray(alive, np.float32).reshape(fl.num_groups, per)
+                .sum(axis=1) >= thr)
+
+        def serve():
+            groups, gw = agg.hfl_tier1_stacked(
+                uploads, fl.num_groups, w, centers=starts, alive=alive,
+                **defkw)
+            groups = agg.tree_where_rows(jnp.asarray(gqok), groups, starts)
+            return agg.fedavg_stacked(groups, gw)
+        return serve
 
     # -- fused executor -----------------------------------------------------
     supports_fused = True
@@ -513,8 +589,11 @@ class HFLStrategy(Strategy):
     supports_mesh = True
 
     def scan_carry_sharding(self, sim):
-        return {"groups": "client", "global": "replicated",
-                "up": "client", "start": "client"}
+        sharding = {"groups": "client", "global": "replicated",
+                    "up": "client", "start": "client"}
+        if sim.faults is not None:
+            sharding["alive"] = "client"
+        return sharding
 
     def validate_mesh(self, sim, ndev):
         fl = self.fl
@@ -526,14 +605,22 @@ class HFLStrategy(Strategy):
                 f"boundary (DESIGN.md §11)")
 
     def scan_carry(self, sim, state):
-        return {"groups": state["groups"], "global": state["global"],
-                "up": engine_mod.replicate_tree(sim.init_params,
-                                                self.fl.num_clients),
-                "start": state["groups"]}
+        carry = {"groups": state["groups"], "global": state["global"],
+                 "up": engine_mod.replicate_tree(sim.init_params,
+                                                 self.fl.num_clients),
+                 "start": state["groups"]}
+        if sim.faults is not None:
+            # last event's alive-mask rides the carry so the serving
+            # tuple re-aggregates with the same degraded masking
+            carry["alive"] = jnp.ones((self.fl.num_clients,), jnp.float32)
+        return carry
 
     def scan_uncarry(self, sim, carry):
+        last = (carry["up"], carry["start"])
+        if "alive" in carry:
+            last = last + (np.asarray(carry["alive"]),)
         return {"groups": carry["groups"], "global": carry["global"],
-                "last": (carry["up"], carry["start"])}
+                "last": last}
 
     def scan_extra_xs(self, sim, n_events):
         fl = self.fl
@@ -543,6 +630,9 @@ class HFLStrategy(Strategy):
             [((ev + 1) % fl.hfl_global_every == 0 or ev == fl.rounds - 1)
              for ev in range(n_events)], bool)}
 
+    def fault_scan_kwargs(self):
+        return {"num_groups": self.fl.num_groups}
+
     def scan_bases(self, fx, carry, xs):
         # participants are always 0..C-1 in id order (select_participants)
         return engine_mod.repeat_groups(carry["groups"],
@@ -551,6 +641,7 @@ class HFLStrategy(Strategy):
     def scan_aggregate(self, fx, carry, xs, uploads):
         fl = self.fl
         start_groups = carry["groups"]
+        alive = xs.get("fault_alive")
         if fx.mesh_axis is not None:
             # tier 1 nests in the shard (driver-validated alignment):
             # pure local math, no collective; tier 2 is ONE weighted
@@ -558,15 +649,25 @@ class HFLStrategy(Strategy):
             # mesh path — also driver-validated)
             per = fl.clients_per_group
             c_loc = fx.weights.shape[0]
-            groups, gw = agg.hfl_tier1_local(uploads, fx.weights,
-                                             c_loc // per)
+            g_loc = c_loc // per
+            groups, gw = agg.hfl_tier1_local(uploads, fx.weights, g_loc,
+                                             alive=alive)
+            if alive is not None:
+                # the shard's slice of the per-group quorum flags
+                i = jax.lax.axis_index(fx.mesh_axis)
+                gqok = jax.lax.dynamic_slice_in_dim(
+                    jnp.asarray(xs["fault_gqok"]), i * g_loc, g_loc)
+                groups = agg.tree_where_rows(gqok, groups, start_groups)
             new_global = agg.mesh_fedavg_stacked(groups, gw,
                                                  axis=fx.mesh_axis)
         else:
             defkw = fx.defense_kwargs(self.event_size())
             groups, gw = agg.hfl_tier1_stacked(
                 uploads, fl.num_groups, fx.weights, centers=start_groups,
-                **defkw)
+                alive=alive, **defkw)
+            if alive is not None:
+                groups = agg.tree_where_rows(xs["fault_gqok"], groups,
+                                             start_groups)
             # global aggregation + dissemination on the schedule flag;
             # the tier-2 reduction is over G tiny group models, so
             # computing it every round costs less than a scan-level
@@ -579,8 +680,22 @@ class HFLStrategy(Strategy):
         groups = agg.tree_where(
             disseminate,
             engine_mod.replicate_tree(new_global, n_groups_here), groups)
-        return {"groups": groups, "global": global_model,
-                "up": uploads, "start": start_groups}
+        out = {"groups": groups, "global": global_model,
+               "up": uploads, "start": start_groups}
+        if alive is not None:
+            # below-quorum round: hold every carried value — bitwise
+            # what the per-round driver's host `if` keeps unchanged
+            qok = xs["fault_qok"]
+            out = {"groups": agg.tree_where(qok, groups, carry["groups"]),
+                   "global": agg.tree_where(qok, global_model,
+                                            carry["global"]),
+                   "up": agg.tree_where(qok, uploads, carry["up"]),
+                   "start": agg.tree_where(qok, start_groups,
+                                           carry["start"]),
+                   "alive": jnp.where(qok,
+                                      jnp.asarray(alive, jnp.float32),
+                                      carry["alive"])}
+        return out
 
     def scan_telemetry(self, fx, carry, new_carry, xs):
         # the hierarchy's dissemination lag, as a per-round series: L2
@@ -632,33 +747,68 @@ class AFLStrategy(Strategy):
     def aggregate_event(self, sim, state, plan, uploads):
         fl = self.fl
         k = len(plan.participants)
+        fe = sim.fault_view(plan)
+        if fe is not None and not fe.qok:
+            # below-quorum round: hold the global model and serving
+            # tuple (DESIGN.md §15)
+            return {"global": state["global"],
+                    "last": self._held_last(sim, state)}
         defkw = sim.defense_kwargs(k)
         pw = np.asarray(sim.weights, np.float64)[plan.participants]
         start = plan.bases[0]
+        alive = None if fe is None else fe.alive
         if fl.afl_mode == "gossip":
-            # defended mixing bounds Byzantine neighbors; the final
-            # consensus average over mixed models stays plain
-            nbrs = topology.ring_neighbors(k, fl.gossip_neighbors)
-            uploads = agg.gossip_stacked(uploads, nbrs,
-                                         defense=fl.defense, f=defkw["f"])
-            global_model = agg.afl_aggregate_stacked(uploads, pw)
+            if fe is None:
+                # defended mixing bounds Byzantine neighbors; the final
+                # consensus average over mixed models stays plain
+                nbrs = topology.ring_neighbors(k, fl.gossip_neighbors)
+                uploads = agg.gossip_stacked(uploads, nbrs,
+                                             defense=fl.defense,
+                                             f=defkw["f"])
+            elif fl.defense == "none":
+                # dynamic membership: the schedule's per-round masked
+                # (and, under MTD, re-randomized) mixing matrix
+                uploads = agg.masked_gossip_stacked(
+                    uploads, mix=sim.faults.gossip_mix(
+                        plan.event, plan.participants))
+            else:
+                uploads = agg.masked_gossip_stacked(
+                    uploads, gather_idx=sim.faults.gossip_gather(
+                        plan.event, plan.participants,
+                        fl.gossip_neighbors + 1),
+                    defense=fl.defense, f=defkw["f"])
+            global_model = agg.afl_aggregate_stacked(uploads, pw,
+                                                     alive=alive)
         else:
             global_model = agg.defended_aggregate_stacked(
-                uploads, pw, center=start, **defkw)
-        return {"global": global_model,
-                "last": (uploads, pw, start, k)}
+                uploads, pw, center=start, alive=alive, **defkw)
+        last = ((uploads, pw, start, k) if fe is None
+                else (uploads, pw, start, k, fe.alive))
+        return {"global": global_model, "last": last}
+
+    def _held_last(self, sim, state):
+        """Serving tuple held by a quorum-failed round (round-0 failure
+        falls back to the fused carry's init values)."""
+        if state["last"] is not None:
+            return state["last"]
+        k = self.event_size()
+        return (engine_mod.replicate_tree(sim.init_params, k),
+                np.ones((k,), np.float32), sim.init_params, k,
+                np.ones((k,), np.float32))
 
     def round_model(self, state):
         return state["global"]
 
     def served_fn(self, sim, state):
         fl = self.fl
-        uploads, pw, start, k = state["last"]
+        uploads, pw, start, k, *rest = state["last"]
+        alive = rest[0] if rest else None
         defkw = sim.defense_kwargs(k)
         if fl.afl_mode == "gossip":
-            return lambda: agg.afl_aggregate_stacked(uploads, pw)
+            return lambda: agg.afl_aggregate_stacked(uploads, pw,
+                                                     alive=alive)
         return lambda: agg.defended_aggregate_stacked(
-            uploads, pw, center=start, **defkw)
+            uploads, pw, center=start, alive=alive, **defkw)
 
     # -- fused executor -----------------------------------------------------
     supports_fused = True
@@ -667,20 +817,37 @@ class AFLStrategy(Strategy):
     supports_mesh = True
 
     def scan_carry_sharding(self, sim):
-        return {"global": "replicated", "up": "client", "pw": "client",
-                "start": "replicated"}
+        sharding = {"global": "replicated", "up": "client",
+                    "pw": "client", "start": "replicated"}
+        if sim.faults is not None:
+            sharding["alive"] = "client"
+        return sharding
 
     def scan_carry(self, sim, state):
         k = self.event_size()
-        return {"global": state["global"],
-                "up": engine_mod.replicate_tree(sim.init_params, k),
-                "pw": jnp.ones((k,), jnp.float32),
-                "start": state["global"]}
+        carry = {"global": state["global"],
+                 "up": engine_mod.replicate_tree(sim.init_params, k),
+                 "pw": jnp.ones((k,), jnp.float32),
+                 "start": state["global"]}
+        if sim.faults is not None:
+            carry["alive"] = jnp.ones((k,), jnp.float32)
+        return carry
 
     def scan_uncarry(self, sim, carry):
-        return {"global": carry["global"],
-                "last": (carry["up"], carry["pw"], carry["start"],
-                         self.event_size())}
+        last = (carry["up"], carry["pw"], carry["start"],
+                self.event_size())
+        if "alive" in carry:
+            last = last + (np.asarray(carry["alive"]),)
+        return {"global": carry["global"], "last": last}
+
+    def fault_scan_kwargs(self):
+        fl = self.fl
+        if fl.afl_mode != "gossip":
+            return {}
+        if fl.defense == "none":
+            return {"gossip": True}
+        return {"gossip": True, "gossip_defended": True,
+                "gather_k": fl.gossip_neighbors + 1}
 
     def scan_bases(self, fx, carry, xs):
         return engine_mod.replicate_tree(carry["global"],
@@ -691,31 +858,59 @@ class AFLStrategy(Strategy):
         k = xs["pids"].shape[0]
         pw = fx.weights[fx.local_pids(xs["pids"])]
         start = carry["global"]
+        alive = xs.get("fault_alive")
         if fx.mesh_axis is not None:
             # defense="none" on the mesh path (driver-validated); the
             # ring spans the GLOBAL client ids, so the mix matrix is
             # built at federation size and applied as one collective
+            # (under faults the precomputed per-round masked mix —
+            # positions == ids under the mesh's full participation)
             if fl.afl_mode == "gossip":
-                nbrs = topology.ring_neighbors(fl.num_clients,
-                                               fl.gossip_neighbors)
-                uploads = agg.mesh_gossip_stacked(
-                    uploads, agg.gossip_mix_matrix(nbrs),
-                    axis=fx.mesh_axis)
-            global_model = agg.mesh_fedavg_stacked(uploads, pw,
+                mix = (xs["fault_mix"] if alive is not None
+                       else agg.gossip_mix_matrix(topology.ring_neighbors(
+                           fl.num_clients, fl.gossip_neighbors)))
+                uploads = agg.mesh_gossip_stacked(uploads, mix,
+                                                  axis=fx.mesh_axis)
+            pw_eff = pw if alive is None else pw * alive
+            global_model = agg.mesh_fedavg_stacked(uploads, pw_eff,
                                                    axis=fx.mesh_axis)
-            return {"global": global_model, "up": uploads, "pw": pw,
-                    "start": start}
+            out = {"global": global_model, "up": uploads, "pw": pw,
+                   "start": start}
+            return self._fault_hold(carry, xs, out, alive)
         defkw = fx.defense_kwargs(k)
         if fl.afl_mode == "gossip":
-            nbrs = topology.ring_neighbors(k, fl.gossip_neighbors)
-            uploads = agg.gossip_stacked(uploads, nbrs,
-                                         defense=fl.defense, f=defkw["f"])
-            global_model = agg.afl_aggregate_stacked(uploads, pw)
+            if alive is None:
+                nbrs = topology.ring_neighbors(k, fl.gossip_neighbors)
+                uploads = agg.gossip_stacked(uploads, nbrs,
+                                             defense=fl.defense,
+                                             f=defkw["f"])
+            elif fl.defense == "none":
+                uploads = agg.masked_gossip_stacked(uploads,
+                                                    mix=xs["fault_mix"])
+            else:
+                uploads = agg.masked_gossip_stacked(
+                    uploads, gather_idx=xs["fault_gidx"],
+                    defense=fl.defense, f=defkw["f"])
+            global_model = agg.afl_aggregate_stacked(uploads, pw,
+                                                     alive=alive)
         else:
             global_model = agg.defended_aggregate_stacked(
-                uploads, pw, center=start, **defkw)
-        return {"global": global_model, "up": uploads, "pw": pw,
-                "start": start}
+                uploads, pw, center=start, alive=alive, **defkw)
+        out = {"global": global_model, "up": uploads, "pw": pw,
+               "start": start}
+        return self._fault_hold(carry, xs, out, alive)
+
+    def _fault_hold(self, carry, xs, out, alive):
+        """Quorum gate for the scan step: a below-quorum round keeps the
+        carried values (bitwise the per-round driver's host `if`)."""
+        if alive is None:
+            return out
+        qok = xs["fault_qok"]
+        held = {key: agg.tree_where(qok, out[key], carry[key])
+                for key in out}
+        held["alive"] = jnp.where(qok, jnp.asarray(alive, jnp.float32),
+                                  carry["alive"])
+        return held
 
 
 @register_strategy
@@ -747,6 +942,10 @@ class CFLStrategy(Strategy):
             with tel.span("select", event=event):
                 plan = self.select_participants(sim, state, event, rng)
             tel.append_series("participants", len(plan.participants))
+            # logs the fault view for this event (serve gating + result
+            # block); sequential_round re-derives the same view for the
+            # per-visit merge masking
+            self._fault_telemetry(sim, plan)
             # training + merge fuse in sequential_round, which records
             # its own phase span
             model, losses, accs = sim.sequential_round(
@@ -786,7 +985,9 @@ class CFLStrategy(Strategy):
             attack_scale=fl.attack_scale, attack_flags=xs["flags"],
             attack_keys=xs["keys"], defense=fl.defense,
             clip_tau=fl.clip_tau, codec=fx.sim.codec,
-            codec_keys=xs.get("ckeys"))
+            codec_keys=xs.get("ckeys"),
+            fault_alive=xs.get("fault_alive"),
+            fault_qok=xs.get("fault_qok"))
         carry = {"model": model}
         return carry, (jnp.mean(accs), jnp.mean(losses[:, -fx.nb:]),
                        fx.test_acc(model))
@@ -869,18 +1070,28 @@ class ServerOptStrategy(AFLStrategy):
     def aggregate_event(self, sim, state, plan, uploads):
         fl = self.fl
         k = len(plan.participants)
+        fe = sim.fault_view(plan)
+        if fe is not None and not fe.qok:
+            # below-quorum round: no pseudo-gradient step — the server
+            # optimizer state holds along with the model (DESIGN.md §15)
+            return {"global": state["global"], "opt": state["opt"],
+                    "opt_state": state["opt_state"],
+                    "last": self._held_last(sim, state)}
         defkw = sim.defense_kwargs(k)
         pw = np.asarray(sim.weights, np.float64)[plan.participants]
         g = state["global"]
+        alive = None if fe is None else fe.alive
         aggregate = agg.defended_aggregate_stacked(uploads, pw, center=g,
-                                                   **defkw)
+                                                   alive=alive, **defkw)
         pseudo_grad = jax.tree.map(
             lambda a, b: (a - b).astype(jnp.float32), g, aggregate)
         updates, opt_state = state["opt"].update(pseudo_grad,
                                                  state["opt_state"], g)
+        last = ((uploads, pw, g, k) if fe is None
+                else (uploads, pw, g, k, fe.alive))
         return {"global": optimizers.apply_updates(g, updates),
                 "opt": state["opt"], "opt_state": opt_state,
-                "last": (uploads, pw, g, k)}
+                "last": last}
 
     def served_fn(self, sim, state):
         # the server optimizer's state lives server-side: serve its model
@@ -915,20 +1126,23 @@ class ServerOptStrategy(AFLStrategy):
         k = xs["pids"].shape[0]
         pw = fx.weights[fx.local_pids(xs["pids"])]
         g = carry["global"]
+        alive = xs.get("fault_alive")
         if fx.mesh_axis is not None:
-            aggregate = agg.mesh_fedavg_stacked(uploads, pw,
+            pw_eff = pw if alive is None else pw * alive
+            aggregate = agg.mesh_fedavg_stacked(uploads, pw_eff,
                                                 axis=fx.mesh_axis)
         else:
             defkw = fx.defense_kwargs(k)
             aggregate = agg.defended_aggregate_stacked(
-                uploads, pw, center=g, **defkw)
+                uploads, pw, center=g, alive=alive, **defkw)
         pseudo_grad = jax.tree.map(
             lambda a, b: (a - b).astype(jnp.float32), g, aggregate)
         opt = self.make_opt()
         updates, opt_state = opt.update(pseudo_grad, carry["opt_state"], g)
-        return {"global": optimizers.apply_updates(g, updates),
-                "opt_state": opt_state, "up": uploads, "pw": pw,
-                "start": g}
+        out = {"global": optimizers.apply_updates(g, updates),
+               "opt_state": opt_state, "up": uploads, "pw": pw,
+               "start": g}
+        return self._fault_hold(carry, xs, out, alive)
 
 
 @register_strategy

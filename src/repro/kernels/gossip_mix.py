@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: masked gossip mixing (DESIGN.md §15).
+
+mixed[c, n] = sum_j mix[c, j] * theta[j, n]
+
+One synchronous gossip exchange under dynamic membership is a dense
+(C, C) row-stochastic matmul against the client-stacked parameter
+matrix — the mixing matrix changes EVERY ROUND under churn (masked rows
+for dead clients, heartbeat-decayed supports, moving-target ring
+re-randomization), so unlike the static-ring path it cannot be folded
+into a constant. Fusing the mix into one kernel makes a single HBM pass
+over the stacked parameters per round: each grid step loads a
+(C, BLOCK) tile into VMEM, applies the (C, C) mix on the MXU, and
+writes the (C, BLOCK) mixed tile.
+
+`gossip_mix_jnp` is the pure-jnp reference (also the CPU production
+path and the form the fused executor traces into its round scan);
+parity between the two is pinned in tests/test_kernels.py-style checks
+inside tests/test_faults.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = 8192
+
+
+def gossip_mix_jnp(stacked, mix):
+    """Reference: (C, N) client stack x (C, C) row-stochastic mix."""
+    return (jnp.asarray(mix, jnp.float32)
+            @ stacked.astype(jnp.float32)).astype(stacked.dtype)
+
+
+def _gossip_kernel(m_ref, x_ref, o_ref):
+    # m_ref: (C, C) mixing matrix; x_ref: (C, BLOCK) VMEM tile
+    x = x_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(
+        m, x, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gossip_mix_agg(stacked, mix, *, block=DEFAULT_BLOCK, interpret=False):
+    """stacked: (C, N) flat client parameters; mix: (C, C) row-stochastic
+    mixing matrix (possibly per-round / masked). Returns the (C, N)
+    mixed stack. N is padded to a block multiple internally; the pad is
+    sliced off before returning."""
+    C, N = stacked.shape
+    block = min(block, max(128, N))
+    pad = (-N) % block
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    Np = N + pad
+
+    out = pl.pallas_call(
+        _gossip_kernel,
+        grid=(Np // block,),
+        in_specs=[
+            pl.BlockSpec((C, C), lambda i: (0, 0)),       # mixing matrix
+            pl.BlockSpec((C, block), lambda i: (0, i)),   # param tile
+        ],
+        out_specs=pl.BlockSpec((C, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((C, Np), stacked.dtype),
+        interpret=interpret,
+    )(mix, stacked)
+    return out[:, :N]

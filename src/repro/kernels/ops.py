@@ -15,6 +15,7 @@ import numpy as np
 from repro.kernels import comm_agg as _ca
 from repro.kernels import fedavg_agg as _fa
 from repro.kernels import flash_attention as _fl
+from repro.kernels import gossip_mix as _gm
 from repro.kernels import robust_agg as _ra
 from repro.kernels import ssm_scan as _ss
 from repro.kernels import ref
@@ -47,6 +48,22 @@ def dequant_aggregate(values, scales, weights, *, interpret=None):
         return _ca.dequant_agg_jnp(values, scales, weights)
     return _ca.dequant_agg(values, scales, weights,
                            interpret=bool(interpret))
+
+
+# -- masked gossip mixing (fault injection / moving-target topologies,
+# DESIGN.md §15) --------------------------------------------------------------
+# The per-round (C, C) mixing matmul for gossip under dynamic membership:
+# the mix matrix is a fresh array every round (masked rows, heartbeat
+# decay, MTD ring re-randomization), so the static-graph constant-fold of
+# `gossip_stacked` doesn't apply. CPU default is the pure-jnp matmul
+# (also what the fused executor traces in-scan); tests opt into the
+# Pallas kernel with interpret=True.
+
+def masked_gossip_aggregate(stacked, mix, *, interpret=None):
+    telemetry.count("kernel.gossip_mix")
+    if interpret is None and on_cpu():
+        return _gm.gossip_mix_jnp(stacked, mix)
+    return _gm.gossip_mix_agg(stacked, mix, interpret=bool(interpret))
 
 
 # -- robust aggregation (trimmed mean / median) -------------------------------

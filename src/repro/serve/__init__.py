@@ -84,6 +84,20 @@ class ServeSession:
         with self._span("hot_swap", version=version, flow="serve.swap"):
             self.buffer.publish(params, version, t)
 
+    def hold_round(self, version: int) -> None:
+        """A quorum-failed aggregation round publishes NOTHING
+        (DESIGN.md §15): the virtual clock still advances through the
+        round window — the window's traffic is served on the held model,
+        so the staleness histogram reflects the held version — but no
+        hot-swap occurs."""
+        assert not self._finished
+        t = float(version) * self.fl.serve_round_duration
+        with self._span("serve_window", version=version, held=True,
+                        flow="serve.swap"):
+            self.batcher.advance(t)
+        if self.tel is not None:
+            self.tel.counter("serve.held_rounds")
+
     def result_block(self):
         """Drain remaining traffic and summarize; idempotent."""
         if not self._finished:

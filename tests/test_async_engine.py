@@ -90,6 +90,40 @@ def test_async_batch_merge_equals_sequential(k):
                                    atol=1e-6)
 
 
+def test_async_batch_merge_empty_batch_is_identity():
+    """k = 0 (a tick in which every scheduled arrival dropped) is a
+    defined no-op: the server model comes back UNCHANGED instead of the
+    empty weight vector feeding a zero-denominator staleness merge
+    through the kernel (the ISSUE 10 regression)."""
+    base = _forest(1, seed=11)[0]
+    empty = jax.tree.map(lambda l: jnp.zeros((0,) + l.shape), base)
+    for alphas in ([], np.zeros((0,), np.float32)):
+        out = strategies.async_batch_merge(base, empty, alphas)
+        for bl, ol in zip(jax.tree.leaves(base), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(bl), np.asarray(ol))
+            assert np.isfinite(np.asarray(ol)).all()
+
+
+def test_async_all_dropped_tick_is_noop(small_ds):
+    """Integration form of the empty-batch regression: under churn with a
+    full quorum requirement, every tick with any dead arrival SKIPS the
+    merge entirely — no NaN, no server_step advance for skipped ticks,
+    and loop/vectorized agree on the merge accounting."""
+    from repro.core.fl_types import FLConfig as FL
+    res = {}
+    for eng in ("loop", "vectorized"):
+        fl = FL(strategy="async", num_clients=4, num_groups=2, rounds=2,
+                local_epochs=1, local_batch_size=32, lr=0.05, seed=0,
+                participation=1.0, engine=eng, fault_profile="churn",
+                churn_rate=0.6, quorum_frac=1.0)
+        res[eng] = FederatedSimulation(fl, small_ds).run()
+    l, v = res["loop"], res["vectorized"]
+    assert l.extra["merges"] == v.extra["merges"] < l.extra["batches"] * 4
+    assert l.extra["mean_staleness"] == v.extra["mean_staleness"]
+    assert np.isfinite(l.test_accuracy) and np.isfinite(v.test_accuracy)
+    assert abs(l.test_accuracy - v.test_accuracy) <= 1e-2
+
+
 def test_staleness_batch_weights_sum_to_one():
     for alphas in ([0.6], [0.5, 0.5], [0.9, 0.1, 0.4, 0.8]):
         w = strategies.staleness_batch_weights(alphas)

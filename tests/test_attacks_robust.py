@@ -271,6 +271,53 @@ def test_hfl_tier1_defense_per_group():
                                np.ones((2, 2)), atol=1e-5)
 
 
+def test_defended_stacked_all_masked_column_is_defined():
+    """C_alive = 0 (every participant's upload lost, DESIGN.md §15): the
+    alive-masked weight vector sums to zero — the guarded normalizer must
+    degrade to the declared action (uniform mean without a center, the
+    center itself with one) instead of feeding 0/0 into the fedavg
+    kernel (the ISSUE 10 regression)."""
+    mat = _mat(4, 64, seed=6)
+    dead = jnp.zeros((4,), jnp.float32)
+    out = strategies.defended_aggregate_stacked({"w": mat}, alive=dead,
+                                                interpret=True)
+    assert np.isfinite(np.asarray(out["w"])).all()
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(mat).mean(axis=0), atol=1e-6)
+    center = {"w": jnp.asarray(_mat(1, 64, seed=7)[0])}
+    held = strategies.defended_aggregate_stacked(
+        {"w": mat}, alive=dead, defense="median", center=center,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(held["w"]),
+                               np.asarray(center["w"]), atol=1e-6)
+
+
+def test_defended_stacked_single_survivor_matches_oracle():
+    """C_alive = 1: the lone survivor's weight renormalizes to 1 — plain
+    FedAvg returns exactly its row, and an order-statistic defense sees
+    the center-substituted matrix (pinned against the host oracle)."""
+    mat = _mat(5, 64, seed=8)
+    alive = jnp.asarray([0.0, 0.0, 1.0, 0.0, 0.0])
+    out = strategies.defended_aggregate_stacked({"w": mat}, alive=alive,
+                                                interpret=True)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(mat)[2],
+                               atol=1e-6)
+    center = {"w": jnp.asarray(_mat(1, 64, seed=9)[0])}
+    med = strategies.defended_aggregate_stacked(
+        {"w": mat}, alive=alive, defense="median", center=center,
+        interpret=True)
+    sub = np.asarray(mat).copy()
+    sub[[0, 1, 3, 4]] = np.asarray(center["w"])
+    np.testing.assert_allclose(np.asarray(med["w"]),
+                               np.median(sub, axis=0), atol=1e-6)
+    trm = strategies.defended_aggregate_stacked(
+        {"w": mat}, alive=alive, defense="trimmed_mean", f=1,
+        center=center, interpret=True)
+    np.testing.assert_allclose(np.asarray(trm["w"]),
+                               np.asarray(ref.trimmed_mean_ref(
+                                   jnp.asarray(sub), 1)), atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # engine parity under attack (loop == vectorized, DESIGN.md §4)
 # ---------------------------------------------------------------------------

@@ -358,7 +358,7 @@ def test_run_scenario_trace_out_and_v23_schema(tmp_path):
     from repro.core import scenarios
     path = str(tmp_path / "t.json")
     doc = scenarios.run_scenario("iid-hfl-fused", trace_out=path)
-    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.4
+    assert doc["schema_version"] == scenarios.RESULT_SCHEMA_VERSION == 2.5
     assert doc["telemetry"]["enabled"] is True
     assert "fused_scan" in doc["telemetry"]["run"]
     assert doc["timing"]["warmup_time_s"] > 0.0
